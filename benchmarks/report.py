@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/.  (The narrative sections of EXPERIMENTS.md are
+hand-written; this keeps the big tables regenerable.)
+
+  PYTHONPATH=src python -m benchmarks.report [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DRY = ROOT / "experiments" / "dryrun"
+ROOF = ROOT / "experiments" / "roofline"
+
+ARCH_ORDER = ["qwen3-0.6b", "deepseek-v3-671b", "olmoe-1b-7b",
+              "recurrentgemma-2b", "gemma2-9b", "granite-3-2b",
+              "granite-3-8b", "qwen2-vl-7b", "musicgen-medium", "xlstm-350m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt(x, nd=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{nd}e}"
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | per-dev FLOPs* | per-dev bytes* | coll bytes | "
+        "args/dev | temp/dev | compile |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                p = DRY / f"{arch}__{shape}__{mesh}.json"
+                if not p.exists():
+                    continue
+                d = json.loads(p.read_text())
+                m = d["memory"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {_fmt(d['flops'])} | "
+                    f"{_fmt(d['bytes_accessed'])} | "
+                    f"{_fmt(d['collective_bytes'].get('total', 0))} | "
+                    f"{_fmt(m.get('argument_size'))} | "
+                    f"{_fmt(m.get('temp_size'))} | "
+                    f"{d.get('compile_s', 0):.1f}s |")
+    lines.append("")
+    lines.append("\\* scan bodies counted once by XLA — see §Roofline/Method "
+                 "for depth-corrected totals.")
+    return "\n".join(lines)
+
+
+def blend_table() -> str:
+    lines = [
+        "| arch | shared fraction | blend coll bytes | blend FLOPs |",
+        "|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        p = DRY / f"{arch}__blend__2x16x16.json"
+        if not p.exists():
+            continue
+        d = json.loads(p.read_text())
+        lines.append(f"| {arch} | {d['shared_fraction']:.3f} | "
+                     f"{_fmt(d['collective_bytes'].get('total', 0))} | "
+                     f"{_fmt(d['flops'])} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL_FLOPS | useful ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = ROOF / f"{arch}__{shape}.json"
+            if not p.exists():
+                continue
+            d = json.loads(p.read_text())
+            rows.append(d)
+            lines.append(
+                f"| {arch} | {shape} | {_fmt(d['compute_s'], 3)} | "
+                f"{_fmt(d['memory_s'], 3)} | {_fmt(d['collective_s'], 3)} | "
+                f"**{d['dominant']}** | {_fmt(d['model_flops'])} | "
+                f"{d['useful_ratio']:.3f} |")
+    # summary of dominant terms
+    from collections import Counter
+    c = Counter(r["dominant"] for r in rows)
+    lines.append("")
+    lines.append(f"Dominant-term census over {len(rows)} pairs: "
+                 + ", ".join(f"{k}: {v}" for k, v in c.most_common()))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=["dryrun", "roofline", "blend",
+                                          "all"], default="all")
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        print("### Dry-run table (per-device, compiled HLO)\n")
+        print(dryrun_table())
+        print("\n### HFL blend step (multi-pod)\n")
+        print(blend_table())
+    if args.section in ("roofline", "all"):
+        print("\n### Roofline table (single-pod 16x16, depth-corrected)\n")
+        print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

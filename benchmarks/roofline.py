@@ -1,0 +1,213 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ must precede any jax import: roofline lowers on the 256-chip single-pod
+# production mesh (run as its own process; benchmarks.run subprocesses this).
+"""Roofline analysis (deliverable g).
+
+Method.  XLA's cost_analysis counts a lax.scan body ONCE, not per trip
+(verified empirically — see EXPERIMENTS.md §Roofline/Method), so the raw
+dry-run numbers undercount deep models.  We therefore lower DEPTH VARIANTS of
+every config: a base with every segment at repeats=1, plus one variant per
+segment at repeats=2.  The per-pattern-unit cost is the difference; totals
+extrapolate exactly (optimizer update, per-layer collectives and remat all
+live inside the subtracted unit):
+
+    total(X) = X(base) + sum_seg (repeats_seg - 1) * [X(seg@2) - X(base)]
+
+Terms (TPU v5e): compute = FLOPs / (chips * 197e12); memory = bytes /
+(chips * 819e9); collective = collective_bytes / (chips * 50e9).
+cost_analysis is per-device (SPMD module), so `chips` divides only
+MODEL_FLOPS, not the per-device numbers.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.configs.base import ModelConfig, Segment
+from repro.launch import steps
+from repro.launch.dryrun import collective_bytes, named, _first_cost
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import spec as S
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "experiments" / "roofline"
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_MEM_FIELDS = ("argument_size_in_bytes", "output_size_in_bytes",
+               "temp_size_in_bytes")
+
+
+def _depth_variants(cfg: ModelConfig):
+    base = dataclasses.replace(
+        cfg, segments=tuple(dataclasses.replace(s, repeats=1)
+                            for s in cfg.segments))
+    variants = []
+    for i in range(len(cfg.segments)):
+        segs = [dataclasses.replace(s, repeats=2 if j == i else 1)
+                for j, s in enumerate(cfg.segments)]
+        variants.append(dataclasses.replace(cfg, segments=tuple(segs)))
+    return base, variants
+
+
+def _measure(cfg: ModelConfig, shape_name: str, mesh, moe_a2a: bool = False):
+    """Lower one config x shape on `mesh`; return dict of raw costs."""
+    shape = INPUT_SHAPES[shape_name]
+    opt = steps.default_optimizer()
+    # pass the mesh into the model when a mesh-aware path is active:
+    # all-to-all MoE dispatch (--moe-a2a) or padded-head sharding constraints
+    needs_mesh = ((moe_a2a and cfg.moe is not None) or
+                  (cfg.attn is not None and cfg.attn.n_heads_padded))
+    moe_mesh = mesh if needs_mesh else None
+    with mesh:
+        if shape.kind == "train":
+            fn = steps.make_train_step(cfg, opt, unroll=True,
+                                       moe_mesh=moe_mesh)
+            state = steps.abstract_state(cfg, opt)
+            st_specs = named(steps.state_pspecs(cfg, opt, mesh), mesh)
+            batch = steps.batch_spec(cfg, shape)
+            b_specs = named(steps.batch_pspecs(cfg, shape, mesh), mesh)
+            lowered = jax.jit(fn, in_shardings=(st_specs, b_specs),
+                              out_shardings=(st_specs, None)).lower(state, batch)
+        elif shape.kind == "prefill":
+            fn = steps.make_prefill_step(cfg, unroll=True, moe_mesh=moe_mesh)
+            p_specs, schema = steps.param_pspecs(cfg, mesh)
+            lowered = jax.jit(
+                fn, in_shardings=(named(p_specs, mesh),
+                                  named(steps.batch_pspecs(cfg, shape, mesh),
+                                        mesh)),
+                out_shardings=None).lower(S.abstract(schema),
+                                          steps.batch_spec(cfg, shape))
+        else:
+            fn = steps.make_serve_step(cfg, shape.seq_len, unroll=True)
+            p_specs, schema = steps.param_pspecs(cfg, mesh)
+            kvq = bool(int(os.environ.get("REPRO_KV_QUANT", "0")))
+            cache, tokens, pos = steps.decode_inputs_spec(cfg, shape,
+                                                          kv_quant=kvq)
+            c_specs = named(steps.cache_pspecs(cfg, shape, mesh,
+                                               kv_quant=kvq), mesh)
+            scalar = jax.NamedSharding(mesh, P())
+            lowered = jax.jit(
+                fn, in_shardings=(named(p_specs, mesh), c_specs, scalar,
+                                  scalar),
+                out_shardings=(None, c_specs)).lower(
+                    S.abstract(schema), cache, tokens, pos)
+        compiled = lowered.compile()
+    cost = _first_cost(compiled)
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll.get("total", 0)),
+        "mem": {f: int(getattr(mem, f, 0) or 0) for f in _MEM_FIELDS},
+    }
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """MODEL_FLOPS = 6 N D (training) with N = active params (MoE: routed
+    top-k active only); decode: 2 N_active per token x batch."""
+    from repro.models.model import model_schema
+    flat, _ = jax.tree_util.tree_flatten_with_path(model_schema(cfg),
+                                                   is_leaf=S.is_spec)
+    total = active = 0
+    for path, sp in flat:
+        n = sp.size
+        total += n
+        # routed experts: only top_k of n_experts active per token
+        if sp.logical and "experts" in sp.logical:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        active += n
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return 6.0 * active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.seq_len * shape.global_batch
+    return 2.0 * active * shape.global_batch           # one token
+
+
+def roofline_pair(arch: str, shape_name: str, mesh,
+                  moe_a2a: bool = False) -> dict:
+    cfg = steps.effective_config(get_config(arch), INPUT_SHAPES[shape_name])
+    base_cfg, variants = _depth_variants(cfg)
+    t0 = time.time()
+    base = _measure(base_cfg, shape_name, mesh, moe_a2a)
+    totals = dict(flops=base["flops"], bytes=base["bytes"], coll=base["coll"])
+    units = []
+    for seg, vcfg in zip(cfg.segments, variants):
+        v = _measure(vcfg, shape_name, mesh, moe_a2a)
+        unit = {k: max(0.0, v[k] - base[k]) for k in ("flops", "bytes", "coll")}
+        units.append(unit)
+        for k in totals:
+            totals[k] += (seg.repeats - 1) * unit[k]
+    n_chips = mesh.devices.size
+    compute_s = totals["flops"] / PEAK_FLOPS          # per-device program
+    memory_s = totals["bytes"] / HBM_BW
+    coll_s = totals["coll"] / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape_name)
+    hlo_global = totals["flops"] * n_chips
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": "16x16", "chips": n_chips,
+        "moe_a2a": moe_a2a,
+        "per_device": totals,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "memory_analysis_base": base["mem"],
+        "elapsed_s": round(time.time() - t0, 1),
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--moe-a2a", action="store_true",
+                    help="use the explicit all-to-all MoE dispatch "
+                         "(optimized variant; writes *__a2a.json)")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    suffix = "__a2a" if args.moe_a2a else ""
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,useful_ratio", flush=True)
+    fails = []
+    for arch in archs:
+        for shape in shapes:
+            out = OUT_DIR / f"{arch}__{shape}{suffix}.json"
+            if args.skip_existing and out.exists():
+                r = json.loads(out.read_text())
+            else:
+                try:
+                    r = roofline_pair(arch, shape, mesh, args.moe_a2a)
+                    out.write_text(json.dumps(r, indent=1))
+                except Exception as e:  # noqa: BLE001
+                    print(f"FAIL,{arch},{shape},{e}", flush=True)
+                    import traceback
+                    traceback.print_exc()
+                    fails.append((arch, shape))
+                    continue
+            print(f"{arch},{shape},{r['compute_s']:.3e},{r['memory_s']:.3e},"
+                  f"{r['collective_s']:.3e},{r['dominant']},"
+                  f"{r['model_flops']:.3e},{r['useful_ratio']:.3f}", flush=True)
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

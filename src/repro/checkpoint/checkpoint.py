@@ -1,0 +1,105 @@
+"""Msgpack pytree checkpointing with save-best support (paper §5.2).
+
+Layout: <dir>/<name>.msgpack holds {tree: nested lists/dicts of tensor
+descriptors, arrays: concatenated raw buffers}.  Works for any pytree of jax
+or numpy arrays + scalars; device arrays are gathered to host first.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+_SENTINEL = "__tensor__"
+
+
+def _encode(tree):
+    buffers = []
+
+    def enc(node):
+        if isinstance(node, (jax.Array, np.ndarray, np.generic)):
+            arr = np.asarray(node)
+            buffers.append(arr.tobytes())
+            return {_SENTINEL: len(buffers) - 1, "dtype": str(arr.dtype),
+                    "shape": list(arr.shape)}
+        if isinstance(node, dict):
+            return {"d": {k: enc(v) for k, v in node.items()}}
+        if isinstance(node, (list, tuple)):
+            return {"l" if isinstance(node, list) else "t":
+                    [enc(v) for v in node]}
+        if node is None or isinstance(node, (bool, int, float, str)):
+            return {"v": node}
+        raise TypeError(f"cannot checkpoint {type(node)}")
+
+    return enc(tree), buffers
+
+
+def _decode(node, buffers):
+    if _SENTINEL in node:
+        arr = np.frombuffer(buffers[node[_SENTINEL]],
+                            dtype=np.dtype(node["dtype"]))
+        return arr.reshape(node["shape"]).copy()
+    if "d" in node:
+        return {k: _decode(v, buffers) for k, v in node["d"].items()}
+    if "l" in node:
+        return [_decode(v, buffers) for v in node["l"]]
+    if "t" in node:
+        return tuple(_decode(v, buffers) for v in node["t"])
+    return node["v"]
+
+
+def save(path, tree) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tree = jax.tree_util.tree_map(lambda x: x, tree)  # shallow copy
+    enc, buffers = _encode(jax.device_get(tree))
+    payload = msgpack.packb({"tree": enc, "buffers": buffers},
+                            use_bin_type=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_bytes(payload)
+    os.replace(tmp, path)
+
+
+def load(path) -> Any:
+    payload = msgpack.unpackb(Path(path).read_bytes(), raw=False)
+    return _decode(payload["tree"], payload["buffers"])
+
+
+class CheckpointManager:
+    """Step checkpoints + the paper's save-best-on-validation policy."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.best_metric = float("inf")
+
+    def save_step(self, step: int, tree) -> Path:
+        p = self.dir / f"step_{step:08d}.msgpack"
+        save(p, tree)
+        ckpts = sorted(self.dir.glob("step_*.msgpack"))
+        for old in ckpts[:-self.keep]:
+            old.unlink()
+        return p
+
+    def save_best(self, metric: float, tree) -> bool:
+        if metric < self.best_metric:
+            self.best_metric = metric
+            save(self.dir / "best.msgpack", tree)
+            (self.dir / "best.json").write_text(
+                json.dumps({"metric": metric}))
+            return True
+        return False
+
+    def latest(self) -> Optional[Any]:
+        ckpts = sorted(self.dir.glob("step_*.msgpack"))
+        return load(ckpts[-1]) if ckpts else None
+
+    def best(self) -> Optional[Any]:
+        p = self.dir / "best.msgpack"
+        return load(p) if p.exists() else None

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    AttnConfig, InputShape, INPUT_SHAPES, LayerSpec, MLAConfig, ModelConfig,
+    MoEConfig, RGLRUConfig, Segment, XLSTMConfig, get_config, list_archs,
+    smoke_config,
+)

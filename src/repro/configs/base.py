@@ -1,0 +1,204 @@
+"""Architecture config system.
+
+A :class:`ModelConfig` fully determines the decoder model: embedding,
+a sequence of *segments* (a repeating pattern of layers, scanned), final norm
+and output head(s).  Every assigned architecture gets one file in this package
+with the exact published hyper-parameters (citation in the docstring) plus a
+``smoke()`` reduced variant used by CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer descriptors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention [arXiv:2412.19437]."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False              # qwen3
+    logit_softcap: float = 0.0         # gemma2 (50.0)
+    window: Optional[int] = None       # sliding-window size; None = global
+    mla: Optional[MLAConfig] = None    # deepseek
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    # Head-count padding for tensor parallelism (EXPERIMENTS §Perf iter D1):
+    # head counts that don't divide the model axis leave attention fully
+    # replicated.  Zero-padded heads are exactly inert (zero contribution
+    # AND zero gradient — the wo rows are zero), so padding to a multiple of
+    # the mesh restores 16-way sharding at the cost of the pad fraction of
+    # extra (sharded) attention FLOPs.  Valid for MHA (pad q+kv together)
+    # and MQA (kv=1; grouping is trivially preserved); unsupported for
+    # grouped GQA where padding would change the q->kv mapping.
+    n_heads_padded: Optional[int] = None
+    n_kv_heads_padded: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    aux_loss_weight: float = 0.001
+    capacity_factor: float = 1.25
+    min_capacity: int = 4
+    router_score: str = "softmax"      # softmax | sigmoid (deepseek-v3)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU block [arXiv:2402.19427]."""
+    width: int            # d_rnn (= d_model in recurrentgemma)
+    n_heads: int          # block-diagonal gate heads
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM sLSTM/mLSTM blocks [arXiv:2405.04517]."""
+    n_heads: int
+    proj_factor_m: float = 2.0   # mLSTM up-projection factor
+    proj_factor_s: float = 1.333  # sLSTM ffn factor
+    conv_width: int = 4
+
+
+# Mixer kinds: "attn" (global), "attn_local" (windowed), "rglru", "mlstm", "slstm"
+# FFN kinds:   "mlp", "moe", "none"
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str
+    ffn: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """`repeats` copies of `pattern`, executed as one lax.scan."""
+    pattern: Tuple[LayerSpec, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    vocab_size: int
+    d_model: int
+    d_ff: int
+    segments: Tuple[Segment, ...]
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    act: str = "silu"               # silu (SwiGLU) | gelu (GeGLU) | gelu_plain
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    final_softcap: float = 0.0      # gemma2 final-logit softcap (30.0)
+    n_codebooks: int = 1            # musicgen: 4
+    vlm: bool = False               # consumes precomputed patch embeddings
+    local_window: int = 4096        # window used by "attn_local" layers
+    long_ctx_window: Optional[int] = 8192  # sliding-window override for long_500k
+    mtp_depth: int = 0              # deepseek multi-token-prediction heads
+    fsdp: bool = False              # use PARAM_RULES_FSDP
+    scale_embed: bool = False       # gemma-style sqrt(d_model) embed scaling
+    citation: str = ""
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.n_layers for s in self.segments)
+
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        out = []
+        for s in self.segments:
+            out.extend(s.pattern * s.repeats)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {}
+
+
+def register(fullcfg_fn=None, *, smoke_fn=None, name=None):
+    def deco(fn):
+        _REGISTRY[name or fn.__module__.rsplit(".", 1)[-1].replace("_", "-")] = fn
+        return fn
+    if fullcfg_fn is not None:
+        return deco(fullcfg_fn)
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (  # noqa: F401
+        qwen3_0_6b, deepseek_v3_671b, olmoe_1b_7b, recurrentgemma_2b,
+        gemma2_9b, granite_3_2b, granite_3_8b, qwen2_vl_7b,
+        musicgen_medium, xlstm_350m,
+    )
+    _LOADED = True
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family variant: <=2 layers, d_model<=512, <=4 experts."""
+    _ensure_loaded()
+    mod_name = "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+    import importlib
+    mod = importlib.import_module(mod_name)
+    return mod.smoke()

@@ -1,0 +1,41 @@
+"""deepseek-v3-671b [moe] — 61L d_model=7168 128H d_ff=2048(expert) vocab=129280.
+
+MLA (q_lora 1536 / kv_lora 512 / rope 64), 1 shared + 256 routed experts
+top-8 with sigmoid scoring, first 3 layers dense (d_ff 18432), MTP depth 1.
+[arXiv:2412.19437]
+"""
+from repro.configs.base import (AttnConfig, LayerSpec, MLAConfig, MoEConfig,
+                                ModelConfig, Segment, register)
+
+_DENSE = LayerSpec(mixer="attn", ffn="mlp")
+_MOE = LayerSpec(mixer="attn", ffn="moe")
+
+
+@register(name="deepseek-v3-671b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", family="moe",
+        vocab_size=129_280, d_model=7168, d_ff=18_432,
+        segments=(Segment((_DENSE,), 3), Segment((_MOE,), 58)),
+        attn=AttnConfig(n_heads=128, n_kv_heads=128, head_dim=128,
+                        rope_theta=10_000.0, mla=MLAConfig()),
+        moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048,
+                      n_shared_experts=1, router_score="sigmoid"),
+        act="silu", tie_embeddings=False, mtp_depth=1, fsdp=True,
+        citation="arXiv:2412.19437",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-smoke", family="moe",
+        vocab_size=512, d_model=128, d_ff=256,
+        segments=(Segment((_DENSE,), 1), Segment((_MOE,), 1)),
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=32,
+                        mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                      qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                      v_head_dim=32)),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                      n_shared_experts=1, router_score="sigmoid"),
+        act="silu", tie_embeddings=False, mtp_depth=1,
+    )

@@ -1,0 +1,35 @@
+"""gemma2-9b [dense] — 42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.
+
+Alternating local(4096)/global attention, attn logit softcap 50, final logit
+softcap 30, GeGLU, sqrt(d) embedding scale.  [arXiv:2408.00118]
+"""
+from repro.configs.base import AttnConfig, LayerSpec, ModelConfig, Segment, register
+
+_LOCAL = LayerSpec(mixer="attn_local", ffn="mlp")
+_GLOBAL = LayerSpec(mixer="attn", ffn="mlp")
+
+
+@register(name="gemma2-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b", family="dense",
+        vocab_size=256_000, d_model=3584, d_ff=14_336,
+        segments=(Segment((_LOCAL, _GLOBAL), 21),),
+        attn=AttnConfig(n_heads=16, n_kv_heads=8, head_dim=256,
+                        rope_theta=10_000.0, logit_softcap=50.0),
+        act="gelu", tie_embeddings=True, final_softcap=30.0,
+        local_window=4096, scale_embed=True,
+        citation="arXiv:2408.00118",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-smoke", family="dense",
+        vocab_size=512, d_model=128, d_ff=256,
+        segments=(Segment((_LOCAL, _GLOBAL), 1),),
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=32,
+                        logit_softcap=50.0),
+        act="gelu", tie_embeddings=True, final_softcap=30.0,
+        local_window=64, scale_embed=True,
+    )

@@ -1,0 +1,30 @@
+"""granite-3-8b [dense] — 40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+
+[hf:ibm-granite/granite-3.0-2b-base]
+"""
+from repro.configs.base import AttnConfig, LayerSpec, ModelConfig, Segment, register
+
+_LAYER = LayerSpec(mixer="attn", ffn="mlp")
+
+
+@register(name="granite-3-8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-8b", family="dense",
+        vocab_size=49_155, d_model=4096, d_ff=12_800,
+        segments=(Segment((_LAYER,), 40),),
+        attn=AttnConfig(n_heads=32, n_kv_heads=8, head_dim=128,
+                        rope_theta=10_000.0),
+        act="silu", tie_embeddings=True,
+        citation="hf:ibm-granite/granite-3.0-2b-base",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite8b-smoke", family="dense",
+        vocab_size=512, d_model=128, d_ff=256,
+        segments=(Segment((_LAYER,), 2),),
+        attn=AttnConfig(n_heads=8, n_kv_heads=2, head_dim=16),
+        act="silu", tie_embeddings=True,
+    )

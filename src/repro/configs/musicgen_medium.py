@@ -1,0 +1,37 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048.
+
+Decoder-only over EnCodec tokens, 4 codebooks (summed input embeddings, one
+output head per codebook, delay-pattern handled by the data pipeline).  The
+EnCodec conv frontend is a STUB.  RoPE replaces the original sinusoidal
+embedding (TPU-idiomatic; noted in DESIGN.md).  [arXiv:2306.05284]
+"""
+from repro.configs.base import AttnConfig, LayerSpec, ModelConfig, Segment, register
+
+_LAYER = LayerSpec(mixer="attn", ffn="mlp")
+
+
+@register(name="musicgen-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium", family="audio",
+        vocab_size=2048, d_model=1536, d_ff=6144,
+        segments=(Segment((_LAYER,), 48),),
+        attn=AttnConfig(n_heads=24, n_kv_heads=24, head_dim=64,
+                        rope_theta=10_000.0,
+                        # 24 heads don't divide the 16-wide model axis; pad
+                        # with inert zero heads to restore attention TP
+                        # (EXPERIMENTS §Perf iter D1)
+                        n_heads_padded=32, n_kv_heads_padded=32),
+        act="gelu_plain", tie_embeddings=False, n_codebooks=4,
+        citation="arXiv:2306.05284",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke", family="audio",
+        vocab_size=128, d_model=128, d_ff=256,
+        segments=(Segment((_LAYER,), 2),),
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=32),
+        act="gelu_plain", tie_embeddings=False, n_codebooks=4,
+    )

@@ -1,0 +1,34 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (kv=16) d_ff=1024(expert) vocab=50304.
+
+64 experts, top-8, softmax router, no shared experts, qk-norm.
+[arXiv:2409.02060]
+"""
+from repro.configs.base import (AttnConfig, LayerSpec, MoEConfig, ModelConfig,
+                                Segment, register)
+
+_MOE = LayerSpec(mixer="attn", ffn="moe")
+
+
+@register(name="olmoe-1b-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        vocab_size=50_304, d_model=2048, d_ff=1024,
+        segments=(Segment((_MOE,), 16),),
+        attn=AttnConfig(n_heads=16, n_kv_heads=16, head_dim=128,
+                        rope_theta=10_000.0, qk_norm=True),
+        moe=MoEConfig(n_experts=64, top_k=8, d_ff_expert=1024),
+        act="silu", tie_embeddings=False,
+        citation="arXiv:2409.02060",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke", family="moe",
+        vocab_size=512, d_model=128, d_ff=128,
+        segments=(Segment((_MOE,), 2),),
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=32, qk_norm=True),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128),
+        act="silu", tie_embeddings=False,
+    )

@@ -1,0 +1,33 @@
+"""qwen2-vl-7b [vlm] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+
+M-RoPE (temporal/height/width sections 16/24/24), dynamic-resolution vision
+frontend is a STUB (``input_specs`` supplies precomputed patch embeddings).
+[arXiv:2409.12191]
+"""
+from repro.configs.base import AttnConfig, LayerSpec, ModelConfig, Segment, register
+
+_LAYER = LayerSpec(mixer="attn", ffn="mlp")
+
+
+@register(name="qwen2-vl-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b", family="vlm",
+        vocab_size=152_064, d_model=3584, d_ff=18_944,
+        segments=(Segment((_LAYER,), 28),),
+        attn=AttnConfig(n_heads=28, n_kv_heads=4, head_dim=128,
+                        rope_theta=1_000_000.0, mrope_sections=(16, 24, 24)),
+        act="silu", tie_embeddings=False, vlm=True,
+        citation="arXiv:2409.12191",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2vl-smoke", family="vlm",
+        vocab_size=512, d_model=128, d_ff=256,
+        segments=(Segment((_LAYER,), 2),),
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=32,
+                        mrope_sections=(4, 6, 6)),
+        act="silu", tie_embeddings=False, vlm=True,
+    )

@@ -1,0 +1,32 @@
+"""qwen3-0.6b [dense] — 28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+
+qk_norm + GQA, head_dim=128 (decoupled from d_model/n_heads as in the Qwen3
+family).  [hf:Qwen/Qwen3-8B]
+"""
+from repro.configs.base import AttnConfig, LayerSpec, ModelConfig, Segment, register
+
+_LAYER = LayerSpec(mixer="attn", ffn="mlp")
+
+
+@register(name="qwen3-0.6b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-0.6b", family="dense",
+        vocab_size=151_936, d_model=1024, d_ff=3072,
+        segments=(Segment((_LAYER,), 28),),
+        attn=AttnConfig(n_heads=16, n_kv_heads=8, head_dim=128,
+                        rope_theta=1_000_000.0, qk_norm=True),
+        act="silu", tie_embeddings=True,
+        citation="hf:Qwen/Qwen3-8B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-smoke", family="dense",
+        vocab_size=512, d_model=128, d_ff=256,
+        segments=(Segment((_LAYER,), 2),),
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=32,
+                        rope_theta=1_000_000.0, qk_norm=True),
+        act="silu", tie_embeddings=True,
+    )

@@ -1,0 +1,39 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000.
+
+Griffin pattern: (RG-LRU, RG-LRU, local-attn) x 8 + (RG-LRU, RG-LRU), local
+window 2048, GeGLU, sqrt(d) embedding scale.  [arXiv:2402.19427]
+"""
+from repro.configs.base import (AttnConfig, LayerSpec, ModelConfig,
+                                RGLRUConfig, Segment, register)
+
+_RG = LayerSpec(mixer="rglru", ffn="mlp")
+_LA = LayerSpec(mixer="attn_local", ffn="mlp")
+
+
+@register(name="recurrentgemma-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b", family="hybrid",
+        vocab_size=256_000, d_model=2560, d_ff=7680,
+        segments=(Segment((_RG, _RG, _LA), 8), Segment((_RG, _RG), 1)),
+        attn=AttnConfig(n_heads=10, n_kv_heads=1, head_dim=256,
+                        rope_theta=10_000.0,
+                        # MQA: pad q heads to the mesh width with inert zero
+                        # heads (grouping trivially preserved, kv stays 1)
+                        n_heads_padded=16),
+        rglru=RGLRUConfig(width=2560, n_heads=10, conv_width=4),
+        act="gelu", tie_embeddings=True, local_window=2048,
+        scale_embed=True,
+        citation="arXiv:2402.19427",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-smoke", family="hybrid",
+        vocab_size=512, d_model=128, d_ff=256,
+        segments=(Segment((_RG, _LA), 1),),
+        attn=AttnConfig(n_heads=4, n_kv_heads=1, head_dim=32),
+        rglru=RGLRUConfig(width=128, n_heads=4, conv_width=4),
+        act="gelu", tie_embeddings=True, local_window=64, scale_embed=True,
+    )

@@ -1,0 +1,34 @@
+"""xlstm-350m [ssm] — 24L d_model=1024 4H vocab=50304 d_ff=0.
+
+xLSTM[7:1]: 7 mLSTM blocks per 1 sLSTM block; blocks carry their own up/down
+projections so there is no separate FFN (d_ff=0).  [arXiv:2405.04517]
+"""
+from repro.configs.base import (LayerSpec, ModelConfig, Segment, XLSTMConfig,
+                                register)
+
+_M = LayerSpec(mixer="mlstm", ffn="none")
+_S = LayerSpec(mixer="slstm", ffn="none")
+
+
+@register(name="xlstm-350m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m", family="ssm",
+        vocab_size=50_304, d_model=1024, d_ff=0,
+        segments=(Segment((_M, _M, _M, _M, _M, _M, _M, _S), 3),),
+        attn=None,
+        xlstm=XLSTMConfig(n_heads=4),
+        act="gelu", tie_embeddings=True,
+        citation="arXiv:2405.04517",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-smoke", family="ssm",
+        vocab_size=512, d_model=128, d_ff=0,
+        segments=(Segment((_M, _S), 1),),
+        attn=None,
+        xlstm=XLSTMConfig(n_heads=4),
+        act="gelu", tie_embeddings=True,
+    )

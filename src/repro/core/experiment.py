@@ -1,0 +1,198 @@
+"""Experiment driver for the paper's evaluation protocol (§5).
+
+Reproduces, on the simulated MIMIC-III (see repro.data.synthetic):
+  * Table 5 — prediction evaluation, target = metavision (the smaller domain),
+  * Table 6 — robustness, target = carevue,
+  * Table 7 — ablation (no / random / always / hfl),
+for each of the five label tasks per hospital (predict channel k from the
+other four).
+
+Systems: DNN, BIBE, BIBEP (benchmarks, trained on the target domain only) and
+HFL (federated across both hospitals).  Protocol per §5.2: Adam lr 0.01,
+50 epochs, batch = R periods, save-best on validation, MSE loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import networks as N
+from repro.core.feature_tensors import pack_feature_tensors
+from repro.core.hfl import FederatedClient, HFLConfig, run_federated_training
+from repro.data import synthetic as syn
+from repro.optim import adam, apply_updates
+from repro.sharding import spec as S
+
+
+# ---------------------------------------------------------------------------
+# Data preparation
+# ---------------------------------------------------------------------------
+
+def _normalize_streams(data: syn.HospitalData):
+    """Per-channel z-score using TRAIN-split statistics.  ALL channels
+    (label included) are normalized for optimization; reported MSEs are
+    rescaled back to raw units by sigma_label^2 (paper reports raw units)."""
+    nf = data.streams[0].nf
+    n_chan = nf + 1
+    vals = {c: [] for c in range(n_chan)}
+    for i in data.splits["train"]:
+        s = data.streams[i]
+        for c in range(n_chan):
+            v = s.values[s.channels == c]
+            if len(v):
+                vals[c].append(v)
+    mu = np.zeros(n_chan, np.float32)
+    sd = np.ones(n_chan, np.float32)
+    for c in range(n_chan):
+        if vals[c]:
+            allv = np.concatenate(vals[c])
+            mu[c], sd[c] = allv.mean(), max(1e-6, allv.std())
+    out = []
+    for s in data.streams:
+        v = s.values.copy()
+        for c in range(n_chan):
+            m = s.channels == c
+            v[m] = (v[m] - mu[c]) / sd[c]
+        out.append(dataclasses.replace(s, values=v))
+    return out, float(mu[nf]), float(sd[nf])
+
+
+def _scaled_patients(hospital: str, n_patients: Optional[int]):
+    """Preserve the paper's domain-size asymmetry (Table 3: metavision is
+    the smaller source) when a reduced budget is requested: `n_patients`
+    sets the carevue count; metavision scales by the natural 58/120 ratio."""
+    if n_patients is None:
+        return None
+    if hospital == "metavision":
+        return max(6, int(round(n_patients * 58 / 120)))
+    return n_patients
+
+
+def task_data(hospital: str, label_idx: int, w: int, seed: int = 0,
+              n_patients: Optional[int] = None, n_events: int = 400):
+    """Packed (train, valid, test) tensors for predicting channel
+    `label_idx` of `hospital` from its other channels."""
+    data = syn.make_hospital(hospital, seed=seed,
+                             n_patients=_scaled_patients(hospital, n_patients),
+                             n_events=n_events)
+    # relabel so channel `label_idx` plays the label role
+    relabeled = syn.HospitalData(
+        data.name, data.feature_names,
+        [syn.relabel(s, label_idx) for s in data.streams], data.splits)
+    relabeled.streams, mu_y, sd_y = _normalize_streams(relabeled)
+    packed = {}
+    for split in ("train", "valid", "test"):
+        packed[split] = syn.packed_split(relabeled, split, w)
+    packed["label_var"] = sd_y * sd_y    # raw-unit rescale for reported MSEs
+    return packed
+
+
+# ---------------------------------------------------------------------------
+# Benchmark-system training (non-federated)
+# ---------------------------------------------------------------------------
+
+_SYSTEMS = {
+    "dnn": (N.dnn_schema, N.dnn_loss, N.dnn_apply),
+    "bibe": (N.bibe_schema, N.bibe_loss, N.bibe_apply),
+    "bibep": (N.bibe_schema, N.bibe_loss, N.bibe_apply),
+}
+
+
+def train_benchmark(system: str, packed, nf: int, cfg: HFLConfig,
+                    rng_seed: int = 0) -> Dict[str, float]:
+    schema_fn, loss_fn, apply_fn = _SYSTEMS[system]
+    schema = schema_fn(nf, cfg.w)
+    params = S.materialize(schema, jax.random.PRNGKey(rng_seed))
+    opt = adam(cfg.lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xs, xd, y):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, xs, xd, y)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state
+
+    @jax.jit
+    def mse(params, xs, xd, y):
+        return jnp.mean((y - apply_fn(params, xs, xd)) ** 2)
+
+    if system == "bibep":           # self-supervised pretraining phase
+        @jax.jit
+        def pstep(params, opt_state, xs, xd, key):
+            loss, grads = jax.value_and_grad(N.bibe_pretrain_loss)(
+                params, xs, xd, key)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state
+
+        key = jax.random.PRNGKey(rng_seed + 1)
+        xs, xd, y = packed["train"]
+        for e in range(5):
+            for s0 in range(0, len(y) - cfg.R + 1, cfg.R):
+                key, sub = jax.random.split(key)
+                sl = slice(s0, s0 + cfg.R)
+                params, opt_state = pstep(params, opt_state, xs[sl], xd[sl], sub)
+        opt_state = opt.init(params)   # fresh optimizer for finetuning
+
+    best_val, best_params = np.inf, params
+    xs, xd, y = packed["train"]
+    for epoch in range(cfg.epochs):
+        for s0 in range(0, len(y) - cfg.R + 1, cfg.R):
+            sl = slice(s0, s0 + cfg.R)
+            params, opt_state = step(params, opt_state, xs[sl], xd[sl], y[sl])
+        v = float(mse(params, *packed["valid"]))
+        if v < best_val:
+            best_val, best_params = v, params
+    scale = packed["label_var"]
+    return {"valid": best_val * scale,
+            "test": float(mse(best_params, *packed["test"])) * scale}
+
+
+# ---------------------------------------------------------------------------
+# HFL training (federated over both hospitals)
+# ---------------------------------------------------------------------------
+
+def train_hfl(target: str, label_idx: int, cfg: HFLConfig, seed: int = 0,
+              n_patients=None, n_events: int = 400,
+              verbose: bool = False) -> Dict[str, float]:
+    source = "carevue" if target == "metavision" else "metavision"
+    t_pack = task_data(target, label_idx, cfg.w, seed, n_patients, n_events)
+    s_pack = task_data(source, label_idx, cfg.w, seed, n_patients, n_events)
+    nf = t_pack["train"][0].shape[1]
+    clients = [
+        FederatedClient(target, nf, cfg, t_pack["train"], t_pack["valid"],
+                        t_pack["test"], jax.random.PRNGKey(seed)),
+        FederatedClient(source, nf, cfg, s_pack["train"], s_pack["valid"],
+                        s_pack["test"], jax.random.PRNGKey(seed + 17)),
+    ]
+    hist = run_federated_training(clients, cfg, verbose=verbose)
+    t_scale, s_scale = t_pack["label_var"], s_pack["label_var"]
+    return {"valid": hist[target]["best_val"] * t_scale,
+            "test": hist[target]["test"] * t_scale,
+            "rounds": hist[target]["rounds"],
+            "source_test": hist[source]["test"] * s_scale}
+
+
+def run_task(target: str, label_idx: int, systems: Sequence[str],
+             cfg: HFLConfig, seed: int = 0, n_patients=None,
+             n_events: int = 400) -> Dict[str, Dict[str, float]]:
+    """One row of Table 5/6: every system on one (hospital, label) task."""
+    packed = task_data(target, label_idx, cfg.w, seed, n_patients, n_events)
+    nf = packed["train"][0].shape[1]
+    out = {}
+    for sys_name in systems:
+        if sys_name == "hfl":
+            out[sys_name] = train_hfl(target, label_idx, cfg, seed,
+                                      n_patients, n_events)
+        elif sys_name.startswith("hfl-"):
+            mode = sys_name.split("-", 1)[1]
+            out[sys_name] = train_hfl(target, label_idx,
+                                      dataclasses.replace(cfg, mode=mode),
+                                      seed, n_patients, n_events)
+        else:
+            out[sys_name] = train_benchmark(sys_name, packed, nf, cfg, seed)
+    return out

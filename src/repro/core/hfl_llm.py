@@ -1,0 +1,119 @@
+"""HFL applied to the architecture zoo: partial-network sharing, error-driven
+selection (Eq. 7) and alpha-blending (Eq. 8) at transformer-module
+granularity, across federated clients mapped onto the `pod` mesh axis.
+
+What is shared (DESIGN.md §4): attention stacks + embedding/head/final-norm
+(the "global head layers" analogue).  What stays local: MoE routed experts,
+RG-LRU recurrence, sLSTM gates, VLM projector (the "local embedding layers"
+analogue).  For the attention-free xLSTM the mLSTM in/out projections are
+shared instead — HFL needs no attention, only a shareable subtree.
+
+Selection scores every candidate's shared subtree by the client's OWN
+language-model loss on its recent batch — the exact Eq. 7 protocol with
+"preliminary prediction error" generalized to task loss.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.sharding import spec as S
+
+
+def default_shared_predicate(comps: Tuple[str, ...]) -> bool:
+    """comps: tuple of dict keys from the params-tree path to one leaf."""
+    if "moe" in comps or "rglru" in comps or "slstm" in comps:
+        return False
+    if "vis_proj" in comps:
+        return False
+    if "attn" in comps:
+        return True
+    if comps and comps[0] in ("embed", "lm_head", "final_norm"):
+        return True
+    if "mlstm" in comps and comps[-1] in ("wu", "wd"):
+        return True           # attention-free SSM: share the projections
+    return False
+
+
+def _path_comps(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return tuple(out)
+
+
+def shared_mask(cfg: ModelConfig,
+                predicate: Optional[Callable] = None):
+    """Pytree of bools (aligned with model_schema) marking shared leaves."""
+    predicate = predicate or default_shared_predicate
+    schema = M.model_schema(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=S.is_spec)
+    leaves = [bool(predicate(_path_comps(path))) for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def shared_fraction(cfg: ModelConfig, predicate=None) -> float:
+    """Fraction of parameters shared — the paper's security argument is that
+    only PART of the network leaves the client."""
+    predicate = predicate or default_shared_predicate
+    schema = M.model_schema(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(schema, is_leaf=S.is_spec)
+    tot = sum(sp.size for _, sp in flat)
+    sh = sum(sp.size for path, sp in flat if predicate(_path_comps(path)))
+    return sh / max(1, tot)
+
+
+def make_blend_step(cfg: ModelConfig, alpha: float = 0.2,
+                    predicate: Optional[Callable] = None,
+                    dtype=jnp.bfloat16):
+    """Returns blend_step(params_stacked, eval_batch) -> (new_params, losses).
+
+    params_stacked: client-stacked params (C leading dim, sharded over `pod`);
+    eval_batch: per-client recent batch (C, B, S) — the "last R periods" probe.
+    losses: (C, C) matrix, losses[c, j] = client c's loss under candidate j's
+    shared subtree (Eq. 7); argmin over j selects, Eq. 8 blends.
+
+    Communication pattern on the mesh: reading candidate j's subtree from a
+    pod-sharded stack is an all-gather of ONLY the shared leaves over `pod` —
+    the paper's partial-network-sharing security property, expressed in
+    collective form.
+    """
+    mask = shared_mask(cfg, predicate)
+
+    def merge(own, candidate_shared):
+        return jax.tree_util.tree_map(
+            lambda m, a, b: b if m else a, mask, own, candidate_shared)
+
+    def blend_step(params_stacked, eval_batch):
+        def client_losses(params_c, batch_c):
+            def with_candidate(shared_j):
+                merged = merge(params_c, shared_j)
+                loss, _ = M.lm_loss(merged, cfg, batch_c, dtype=dtype)
+                return loss
+
+            return jax.vmap(with_candidate)(params_stacked)  # (C,)
+
+        baxes = {k: (1 if k == "positions" else 0) for k in eval_batch}
+        losses = jax.vmap(client_losses, in_axes=(0, baxes))(
+            params_stacked, eval_batch)                       # (C, C)
+        best = jnp.argmin(losses, axis=1)                     # (C,)
+
+        def blend_leaf(m, own_stack, _):
+            if not m:
+                return own_stack
+            sel = own_stack[best]                             # (C, ...)
+            return alpha * sel + (1 - alpha) * own_stack
+
+        new_params = jax.tree_util.tree_map(
+            lambda m, p: blend_leaf(m, p, None), mask, params_stacked)
+        return new_params, losses
+
+    return blend_step

@@ -1,0 +1,172 @@
+"""Paper networks (Table 4) + benchmark systems (DNN, BIBE, BIBEP).
+
+All built on the framework's ParamSpec schema machinery, so they share init /
+abstract / sharding tooling with the large-model zoo.
+
+Table 4 exact layer widths:
+  Head H:        Linear 16 - Sigmoid - Linear 256 - Sigmoid - Linear 64 -
+                 LReLU - Linear 16 - LReLU - Linear 1
+  Embedding E:   same trunk, final Linear w
+  Prediction P:  Linear 32 - Sigmoid - Linear 256 - Sigmoid - Linear 16 -
+                 LReLU - Linear 1 - LReLU - Linear 1
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.spec import ParamSpec
+
+LRELU_SLOPE = 0.01
+
+
+def _mlp_schema(dims: Sequence[int]):
+    layers = {}
+    for i in range(len(dims) - 1):
+        layers[f"w{i}"] = ParamSpec((dims[i], dims[i + 1]), (None, None))
+        layers[f"b{i}"] = ParamSpec((dims[i + 1],), (None,), init="zeros")
+    return layers
+
+
+def _mlp_apply(params, x, acts: Sequence[str]):
+    n = len(acts) + 1
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < len(acts):
+            if acts[i] == "sigmoid":
+                x = jax.nn.sigmoid(x)
+            elif acts[i] == "lrelu":
+                x = jax.nn.leaky_relu(x, LRELU_SLOPE)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# HFL component networks (Table 4)
+# ---------------------------------------------------------------------------
+
+_H_ACTS = ("sigmoid", "sigmoid", "lrelu", "lrelu")
+
+
+def head_schema(w: int):
+    """Global head H_i: dense feature vector (w,) -> scalar preliminary y'."""
+    return _mlp_schema((w, 16, 256, 64, 16, 1))
+
+
+def head_apply(params, xd):
+    """xd: (..., w) -> (...,)."""
+    return _mlp_apply(params, xd, _H_ACTS)[..., 0]
+
+
+def embed_schema(nf: int, w: int):
+    """Local embedding E: sparse tensor (nf*w,) -> temporal embedding (w,)."""
+    return _mlp_schema((nf * w, 16, 256, 64, 16, w))
+
+
+def embed_apply(params, xs_flat):
+    return _mlp_apply(params, xs_flat, _H_ACTS)
+
+
+def pred_schema(nf: int, w: int):
+    """Prediction P: [y'_1..y'_nf, e] (nf+w,) -> scalar y'."""
+    return _mlp_schema((nf + w, 32, 256, 16, 1, 1))
+
+
+def pred_apply(params, z):
+    return _mlp_apply(params, z, _H_ACTS)[..., 0]
+
+
+def hfl_schema(nf: int, w: int):
+    from repro.sharding.spec import stack
+    return {
+        "heads": stack(head_schema(w), nf),     # stacked over features
+        "embed": embed_schema(nf, w),
+        "pred": pred_schema(nf, w),
+    }
+
+
+def hfl_forward(params, xs, xd):
+    """xs, xd: (B, nf, w).  Returns (y_final (B,), y_prelim (B, nf))."""
+    y_prelim = jax.vmap(head_apply, in_axes=(0, 1), out_axes=1)(
+        params["heads"], xd)                             # (B, nf)
+    e = embed_apply(params["embed"], xs.reshape(xs.shape[0], -1))  # (B, w)
+    z = jnp.concatenate([y_prelim, e], axis=-1)
+    y = pred_apply(params["pred"], z)
+    return y, y_prelim
+
+
+def hfl_loss(params, xs, xd, y):
+    """Multi-task MSE (Eqs. 3 & 6): final + nf preliminary tasks."""
+    y_hat, y_prelim = hfl_forward(params, xs, xd)
+    final = jnp.mean((y - y_hat) ** 2)
+    prelim = jnp.mean(jnp.sum((y[:, None] - y_prelim) ** 2, axis=-1))
+    return final + prelim, (final, prelim)
+
+
+# ---------------------------------------------------------------------------
+# Benchmarks
+# ---------------------------------------------------------------------------
+
+def dnn_schema(nf: int, w: int):
+    """Traditional benchmark: 4-layer DNN (64, 1024, 64, 1) on the
+    concatenated [X^S, X^D] tensors (paper §5.2)."""
+    return _mlp_schema((2 * nf * w, 64, 1024, 64, 1))
+
+
+def dnn_apply(params, xs, xd):
+    x = jnp.concatenate([xs.reshape(xs.shape[0], -1),
+                         xd.reshape(xd.shape[0], -1)], axis=-1)
+    return _mlp_apply(params, x, ("lrelu", "lrelu", "lrelu"))[..., 0]
+
+
+def dnn_loss(params, xs, xd, y):
+    y_hat = dnn_apply(params, xs, xd)
+    mse = jnp.mean((y - y_hat) ** 2)
+    return mse, (mse, jnp.zeros(()))
+
+
+def bibe_schema(nf: int, w: int, ch: int = 48):
+    """BIBE [12]: 1D-conv feature extractor over the (nf, w) tensors + MLP
+    head.  Sized to roughly match the paper's ~132k parameter budget."""
+    return {
+        "conv1": ParamSpec((3, 2 * nf, ch), (None, None, None)),
+        "b1": ParamSpec((ch,), (None,), init="zeros"),
+        "conv2": ParamSpec((3, ch, ch), (None, None, None)),
+        "b2": ParamSpec((ch,), (None,), init="zeros"),
+        "mlp": _mlp_schema((ch, 256, 128, 1)),
+    }
+
+
+def _conv1d_same(x, w, b):
+    """x: (B, L, Cin), w: (K, Cin, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + b
+
+
+def bibe_apply(params, xs, xd):
+    x = jnp.concatenate([xs, xd], axis=1)          # (B, 2nf, w)
+    x = x.swapaxes(1, 2)                           # (B, w, 2nf)
+    h = jax.nn.leaky_relu(_conv1d_same(x, params["conv1"], params["b1"]),
+                          LRELU_SLOPE)
+    h = jax.nn.leaky_relu(_conv1d_same(h, params["conv2"], params["b2"]),
+                          LRELU_SLOPE)
+    h = jnp.mean(h, axis=1)                        # global average pool
+    return _mlp_apply(params["mlp"], h, ("lrelu", "lrelu"))[..., 0]
+
+
+def bibe_loss(params, xs, xd, y):
+    y_hat = bibe_apply(params, xs, xd)
+    mse = jnp.mean((y - y_hat) ** 2)
+    return mse, (mse, jnp.zeros(()))
+
+
+def bibe_pretrain_loss(params, xs, xd, rng):
+    """BIBEP self-supervised pretraining: masked-window reconstruction — the
+    conv trunk must predict the mean of the masked dense tensor half."""
+    mask = jax.random.bernoulli(rng, 0.5, xd.shape).astype(xd.dtype)
+    target = jnp.mean(xd * (1 - mask), axis=(1, 2))
+    y_hat = bibe_apply(params, xs * mask, xd * mask)
+    return jnp.mean((target - y_hat) ** 2)

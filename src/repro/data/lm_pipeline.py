@@ -1,0 +1,104 @@
+"""Token pipelines for the architecture zoo.
+
+Synthetic-but-structured corpora (offline container: no downloads):
+  * text LMs: a Zipf-distributed Markov token stream with local n-gram
+    structure, so cross-entropy has real signal to minimize;
+  * VLM: token stream + stub patch embeddings (the ViT frontend carve-out)
+    and M-RoPE position ids;
+  * audio (musicgen): K parallel codebook streams with the delay pattern
+    applied [arXiv:2306.05284].
+
+Deterministic per (seed, step) => resumable without state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import VISION_DIM
+
+
+@dataclasses.dataclass
+class LMPipelineConfig:
+    batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    n_patches: int = 64          # VLM image-prefix length (stub frontend)
+    markov_order: int = 2
+
+
+class TokenPipeline:
+    """Markov-Zipf synthetic corpus."""
+
+    def __init__(self, cfg: LMPipelineConfig, model_cfg: ModelConfig):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        rng = np.random.default_rng(cfg.seed)
+        V = cfg.vocab_size
+        # sparse row-stochastic transition structure: each context hashes to a
+        # small candidate set -> learnable bigram structure
+        self._cands = rng.integers(0, V, size=(4096, 8))
+        ranks = np.arange(1, V + 1)
+        self._unigram = (1.0 / ranks ** 1.1)
+        self._unigram /= self._unigram.sum()
+
+    def _stream(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        V = self.cfg.vocab_size
+        out = np.empty(n, np.int64)
+        out[0] = rng.choice(V, p=self._unigram)
+        for t in range(1, n):
+            ctx = int(out[t - 1]) % 4096
+            if rng.random() < 0.8:
+                out[t] = self._cands[ctx][rng.integers(8)]
+            else:
+                out[t] = rng.choice(V, p=self._unigram)
+        return out
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg, mc = self.cfg, self.model_cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S = cfg.batch, cfg.seq_len
+        if mc.n_codebooks > 1:
+            return self._audio_batch(rng, B, S)
+        tokens = np.stack([self._stream(rng, S) for _ in range(B)])
+        out = {"tokens": tokens.astype(np.int32)}
+        if mc.vlm:
+            P = cfg.n_patches
+            out["image_embeds"] = rng.normal(
+                size=(B, P, VISION_DIM)).astype(np.float32)
+            out["positions"] = self._mrope_positions(B, S, P)
+        return out
+
+    def _mrope_positions(self, B: int, S: int, P: int) -> np.ndarray:
+        """Qwen2-VL M-RoPE ids: image patches get a (t=const, h, w) grid;
+        text positions advance temporally after the image."""
+        side = int(np.sqrt(P))
+        pos = np.zeros((3, B, S), np.int32)
+        hh, ww = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+        pos[1, :, :P] = np.resize(hh.ravel(), P)
+        pos[2, :, :P] = np.resize(ww.ravel(), P)
+        text = np.arange(S - P) + side
+        pos[:, :, P:] = text[None, None, :]
+        return pos
+
+    def _audio_batch(self, rng, B, S):
+        K = self.model_cfg.n_codebooks
+        V = self.cfg.vocab_size
+        base = np.stack([
+            np.stack([self._stream(rng, S) for _ in range(K)])
+            for _ in range(B)])                      # (B, K, S)
+        # EnCodec delay pattern: codebook k shifted right by k
+        delayed = np.zeros_like(base)
+        for k in range(K):
+            delayed[:, k, k:] = base[:, k, : S - k]
+        return {"tokens": delayed.astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout convention for the kernel stack: q (B, H, S, D), k/v (B, KV, S, D),
+GQA group = H // KV, causal, optional sliding window and logit softcap.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, window: Optional[int] = None,
+                  logit_softcap: float = 0.0):
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    kq = jnp.repeat(k, G, axis=1)     # (B, H, S, D)
+    vq = jnp.repeat(v, G, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

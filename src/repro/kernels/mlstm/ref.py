@@ -1,0 +1,11 @@
+"""Oracle for the chunkwise mLSTM kernel: the stabilized sequential
+recurrence from repro.models.layers.xlstm (re-exported for locality)."""
+from __future__ import annotations
+
+from repro.models.layers.xlstm import mlstm_recurrence
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """q,k,v: (B, S, H, dh); gates: (B, S, H).  Returns h: (B, S, H, dh)."""
+    h, _ = mlstm_recurrence(q, k, v, i_pre, f_pre)
+    return h

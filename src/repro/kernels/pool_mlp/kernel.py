@@ -1,0 +1,73 @@
+"""Fused heterogeneous-domain-selection kernel (paper Eq. 7).
+
+The paper flags model selection as the expensive part of HFL ("requires
+additional computation (for model selection)") — it evaluates EVERY pool head
+(ns = NS x nf models) on the client's last R dense vectors: ns x R tiny MLP
+forwards.  A GPU implementation launches ns tiny GEMM chains; on TPU that is
+dominated by launch/HBM latency.  This kernel fuses the whole sweep: one grid
+cell scores a BP-sized block of pool heads, keeping all five Table-4 layers
+(16-256-64-16-1) and the (R, w) probe batch resident in VMEM, with the
+(BP*R, d) matmuls shaped for the MXU.  Outputs the (ns,) error vector that
+feeds argmin selection.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.networks import LRELU_SLOPE
+
+
+def _pool_kernel(xd_ref, y_ref, w0, b0, w1, b1, w2, b2, w3, b3, w4, b4,
+                 o_ref):
+    xd = xd_ref[...].astype(jnp.float32)          # (R, w)
+    y = y_ref[0].astype(jnp.float32)              # (R,)
+
+    def sig(x):
+        return jax.nn.sigmoid(x)
+
+    def lrelu(x):
+        return jnp.where(x >= 0, x, LRELU_SLOPE * x)
+
+    # (BP, R, .) batched forward, everything VMEM-resident
+    h = sig(jnp.einsum("rw,pwk->prk", xd, w0[...].astype(jnp.float32))
+            + b0[...][:, None, :])
+    h = sig(jnp.einsum("prk,pkj->prj", h, w1[...].astype(jnp.float32))
+            + b1[...][:, None, :])
+    h = lrelu(jnp.einsum("prk,pkj->prj", h, w2[...].astype(jnp.float32))
+              + b2[...][:, None, :])
+    h = lrelu(jnp.einsum("prk,pkj->prj", h, w3[...].astype(jnp.float32))
+              + b3[...][:, None, :])
+    out = (jnp.einsum("prk,pkj->prj", h, w4[...].astype(jnp.float32))
+           + b4[...][:, None, :])[..., 0]         # (BP, R)
+    err = jnp.mean((y[None, :] - out) ** 2, axis=1)
+    o_ref[...] = err.astype(o_ref.dtype)
+
+
+def pool_mlp_pallas(xd, y, weights, *, block_pool: int = 8,
+                    interpret: bool = True):
+    """xd: (R, w); y: (R,); weights: tuple (w0,b0,...,w4,b4) each with leading
+    pool dim ns (multiple of block_pool).  Returns (ns,) errors."""
+    ns = weights[0].shape[0]
+    BP = min(block_pool, ns)
+    assert ns % BP == 0, (ns, BP)
+    R, w = xd.shape
+
+    w_specs = []
+    for t in weights:
+        blk = (BP,) + t.shape[1:]
+        w_specs.append(pl.BlockSpec(blk, lambda p, _n=len(t.shape): (p,) + (0,) * (_n - 1)))
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(ns // BP,),
+        in_specs=[
+            pl.BlockSpec((R, w), lambda p: (0, 0)),
+            pl.BlockSpec((1, R), lambda p: (0, 0)),
+        ] + w_specs,
+        out_specs=pl.BlockSpec((BP,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((ns,), jnp.float32),
+        interpret=interpret,
+    )(xd, y[None], *weights)

@@ -1,0 +1,32 @@
+"""Jitted wrapper mapping the HeadPool's stacked param dict onto the fused
+pool-scoring kernel (pads the pool to the block size)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pool_mlp.kernel import pool_mlp_pallas
+
+_KEYS = ("w0", "b0", "w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
+
+
+@functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
+def pool_mlp_errors(pool_stacked, xd, y, *, block_pool: int = 8,
+                    interpret: bool = True):
+    """pool_stacked: dict of stacked Table-4 head params (ns leading dim);
+    xd: (R, w); y: (R,).  Returns (ns,) mean squared errors (Eq. 7)."""
+    ns = pool_stacked["w0"].shape[0]
+    BP = min(block_pool, ns)
+    pad = (-ns) % BP
+    weights = []
+    for k in _KEYS:
+        t = pool_stacked[k]
+        if pad:
+            t = jnp.concatenate(
+                [t, jnp.zeros((pad,) + t.shape[1:], t.dtype)], axis=0)
+        weights.append(t)
+    errs = pool_mlp_pallas(xd, y, tuple(weights), block_pool=BP,
+                           interpret=interpret)
+    return errs[:ns]

@@ -1,0 +1,17 @@
+"""Oracle for the fused pool-scoring kernel: vmap of the Table-4 head MLP
+over the pool (Eq. 7 errors)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.networks import head_apply
+
+
+def pool_errors_ref(pool_stacked, xd, y):
+    """pool_stacked: head params stacked to (ns, ...); xd: (R, w); y: (R,).
+    Returns (ns,) mean squared preliminary-prediction errors."""
+    def one(head):
+        return jnp.mean((y - head_apply(head, xd)) ** 2)
+
+    return jax.vmap(one)(pool_stacked)

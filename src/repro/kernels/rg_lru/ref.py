@@ -1,0 +1,19 @@
+"""Oracle for the RG-LRU chunked-scan kernel: h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, b, h0=None):
+    """a, b: (B, S, d) float32.  Returns h: (B, S, d)."""
+    if h0 is None:
+        h0 = jnp.zeros(a[:, 0].shape, a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below may import jax.
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes and record memory / cost / collective statistics.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+
+Single-pod mesh: (data=16, model=16) = 256 chips.
+Multi-pod mesh:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is the
+HFL federated-client axis: train shapes lower the 2-client
+`make_hfl_train_step` (per-client grads, NO cross-pod gradient all-reduce);
+decode shapes shard the request batch (or the KV cache for batch=1) over
+pod x data.
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed the
+roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md §Roofline).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import spec as S
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=")
+SHAPE_RE = re.compile(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-operand sizes of every collective op in the HLO module."""
+    per_kind = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # result shapes: everything between '=' and the op name; handles
+        # tuple results "= (f32[..], f32[..]) all-gather-start("
+        rhs = line.split("=", 1)[1]
+        rhs = rhs.split(kind)[0]
+        nbytes = 0
+        for dt, dims in re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", rhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        if nbytes:
+            per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    per_kind["total"] = sum(per_kind.values())
+    return per_kind
+
+
+def _first_cost(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca) if ca else {}
+
+
+def named(tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree (None leaves pass through)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+    cfg = steps.effective_config(get_config(arch), INPUT_SHAPES[shape_name])
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_clients = 2 if (multi_pod and shape.kind == "train") else 1
+    opt = steps.default_optimizer()
+    # mesh-aware model paths: padded-head sharding constraints (§Perf D2)
+    mm = mesh if (cfg.attn is not None and cfg.attn.n_heads_padded) else None
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step_fn = (steps.make_hfl_train_step(cfg, opt, moe_mesh=mm)
+                       if n_clients > 1
+                       else steps.make_train_step(cfg, opt, moe_mesh=mm))
+            state = steps.abstract_state(cfg, opt, n_clients=n_clients)
+            st_specs = named(steps.state_pspecs(cfg, opt, mesh,
+                                                n_clients=n_clients), mesh)
+            batch = steps.batch_spec(cfg, shape, n_clients=n_clients)
+            b_specs = named(steps.batch_pspecs(cfg, shape, mesh,
+                                               n_clients=n_clients), mesh)
+            lowered = jax.jit(step_fn,
+                              in_shardings=(st_specs, b_specs),
+                              out_shardings=(st_specs, None)).lower(state, batch)
+        elif shape.kind == "prefill":
+            fn = steps.make_prefill_step(cfg, moe_mesh=mm)
+            p_specs, schema = steps.param_pspecs(cfg, mesh)
+            p_specs = named(p_specs, mesh)
+            params = S.abstract(schema)
+            batch = steps.batch_spec(cfg, shape)
+            b_specs = named(steps.batch_pspecs(cfg, shape, mesh), mesh)
+            lowered = jax.jit(fn, in_shardings=(p_specs, b_specs),
+                              out_shardings=None).lower(params, batch)
+        else:  # decode
+            fn = steps.make_serve_step(cfg, shape.seq_len)
+            p_specs, schema = steps.param_pspecs(cfg, mesh)
+            p_specs = named(p_specs, mesh)
+            params = S.abstract(schema)
+            cache, tokens, pos = steps.decode_inputs_spec(cfg, shape)
+            c_specs = named(steps.cache_pspecs(cfg, shape, mesh), mesh)
+            scalar = jax.NamedSharding(mesh, P())
+            lowered = jax.jit(
+                fn, in_shardings=(p_specs, c_specs, scalar, scalar),
+                out_shardings=(None, c_specs)).lower(params, cache, tokens, pos)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = _first_cost(compiled)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "n_clients": n_clients,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes",
+                                           None),
+        },
+        "hlo_collective_ops": len(COLLECTIVE_RE.findall(hlo)),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={result['flops']:.3e} bytes={result['bytes_accessed']:.3e} "
+              f"coll={coll.get('total', 0):.3e}B", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+    return result
+
+
+def lower_blend(arch: str, verbose: bool = True):
+    """Lower the HFL blend/selection step (repro.core.hfl_llm) on the
+    multi-pod mesh: 2 federated clients on the `pod` axis exchanging ONLY the
+    shared subtree (Eq. 7 scoring + Eq. 8 blend)."""
+    from repro.core.hfl_llm import make_blend_step, shared_fraction
+    from repro.models.model import model_schema
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES["train_4k"]
+    mesh = make_production_mesh(multi_pod=True)
+    blend = make_blend_step(cfg)
+    t0 = time.time()
+    with mesh:
+        p_specs, schema = steps.param_pspecs(cfg, mesh, n_clients=2)
+        params = S.abstract(S.stack(model_schema(cfg), 2,
+                                    axis_name="clients"))
+        b_specs = named(steps.batch_pspecs(cfg, shape, mesh, n_clients=2), mesh)
+        batch = steps.batch_spec(cfg, shape, n_clients=2)
+        p_named = named(p_specs, mesh)
+        lowered = jax.jit(blend, in_shardings=(p_named, b_specs),
+                          out_shardings=(p_named, None)).lower(params, batch)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    cost = _first_cost(compiled)
+    res = {
+        "arch": arch, "shape": "train_4k", "mesh": "2x16x16",
+        "kind": "hfl_blend", "n_chips": mesh.devices.size,
+        "shared_fraction": shared_fraction(cfg),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "compile_s": round(time.time() - t0, 2),
+    }
+    if verbose:
+        print(f"[dryrun] BLEND {arch}: shared={res['shared_fraction']:.3f} "
+              f"coll={coll.get('total', 0):.3e}B flops={res['flops']:.3e}",
+              flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--blend", action="store_true",
+                    help="lower the HFL blend step instead of train/serve")
+    args = ap.parse_args()
+
+    if args.blend:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        archs = list_archs() if args.all or not args.arch else [args.arch]
+        fails = []
+        for arch in archs:
+            out = OUT_DIR / f"{arch}__blend__2x16x16.json"
+            if args.skip_existing and out.exists():
+                continue
+            try:
+                out.write_text(json.dumps(lower_blend(arch), indent=1))
+            except Exception as e:  # noqa: BLE001
+                print(f"[dryrun] BLEND FAIL {arch}: {e}", flush=True)
+                traceback.print_exc()
+                fails.append(arch)
+        sys.exit(1 if fails else 0)
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only or (args.multi_pod and not args.all):
+        meshes = [True]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                out = OUT_DIR / f"{tag}.json"
+                if args.skip_existing and out.exists():
+                    print(f"[dryrun] skip {tag} (exists)", flush=True)
+                    continue
+                try:
+                    res = lower_one(arch, shape, mp)
+                    out.write_text(json.dumps(res, indent=1))
+                except Exception as e:  # noqa: BLE001
+                    print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+                    failures.append(tag)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}", flush=True)
+        sys.exit(1)
+    print("[dryrun] all combinations lowered + compiled OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""Train / serve step factories + input specs + sharding trees.
+
+Used both by real training (examples, smoke tests) and by the multi-pod
+dry-run (everything here works on ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.optim import Optimizer, adamw, apply_updates, chain, clip_by_global_norm
+from repro.sharding import rules as R
+from repro.sharding import spec as S
+
+N_PATCHES = 256  # VLM stub: image-prefix length supplied by the frontend stub
+
+
+# ---------------------------------------------------------------------------
+# Effective config per input shape
+# ---------------------------------------------------------------------------
+
+def effective_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k: full-attention layers get the sliding-window override so
+    decode cost/cache are O(window), not O(524k).  Native sub-quadratic archs
+    (ssm / hybrid local-attn) are untouched.  See DESIGN.md §5."""
+    if shape.name == "long_500k" and cfg.attn is not None:
+        if cfg.attn.window is None and cfg.long_ctx_window is not None:
+            return dataclasses.replace(
+                cfg, attn=dataclasses.replace(cfg.attn,
+                                              window=cfg.long_ctx_window))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Input specs (abstract stand-ins; the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, shape: InputShape,
+               n_clients: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one training/prefill batch."""
+    B, Sq = shape.global_batch, shape.seq_len
+    lead = (n_clients,) if n_clients > 1 else ()
+    sds = jax.ShapeDtypeStruct
+    if n_clients > 1:
+        assert B % n_clients == 0
+        B = B // n_clients
+    out: Dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        out["tokens"] = sds(lead + (B, cfg.n_codebooks, Sq), jnp.int32)
+    else:
+        out["tokens"] = sds(lead + (B, Sq), jnp.int32)
+    if cfg.vlm:
+        out["image_embeds"] = sds(lead + (B, N_PATCHES, M.VISION_DIM),
+                                  jnp.float32)
+        out["positions"] = sds((3,) + lead + (B, Sq), jnp.int32)
+    return out
+
+
+def decode_inputs_spec(cfg: ModelConfig, shape: InputShape,
+                       kv_quant: bool = False):
+    """(cache, tokens, pos) abstract inputs for serve_step."""
+    B, L = shape.global_batch, shape.seq_len
+    cache = S.abstract(M.cache_schema(cfg, B, L, jnp.bfloat16,
+                                      kv_quant=kv_quant))
+    sds = jax.ShapeDtypeStruct
+    if cfg.n_codebooks > 1:
+        tokens = sds((B, cfg.n_codebooks, 1), jnp.int32)
+    else:
+        tokens = sds((B, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    return cache, tokens, pos
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def _mesh_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _batch_assign(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_pspecs(cfg: ModelConfig, mesh, n_clients: int = 1):
+    rules = dict(R.PARAM_RULES_FSDP if cfg.fsdp else R.PARAM_RULES)
+    schema = M.model_schema(cfg)
+    if n_clients > 1:
+        schema = S.stack(schema, n_clients, axis_name="clients")
+        rules["clients"] = "pod"
+    return S.partition_specs(schema, rules, mesh), schema
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, mesh,
+                 n_clients: int = 1):
+    """PartitionSpecs matching batch_spec structure."""
+    sizes = _mesh_sizes(mesh)
+    if n_clients > 1:
+        lead: Tuple = ("pod",)
+        per_client = shape.global_batch // n_clients
+        bassign = "data" if per_client % sizes.get("data", 1) == 0 else None
+    else:
+        lead = ()
+        axes = _batch_assign(mesh)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        if shape.global_batch % total == 0:
+            bassign = axes if len(axes) > 1 else axes[0]
+        elif shape.global_batch % sizes.get("data", 1) == 0:
+            bassign = "data"
+        else:
+            bassign = None
+    out = {}
+    if cfg.n_codebooks > 1:
+        out["tokens"] = P(*lead, bassign, None, None)
+    else:
+        out["tokens"] = P(*lead, bassign, None)
+    if cfg.vlm:
+        out["image_embeds"] = P(*lead, bassign, None, None)
+        out["positions"] = P(None, *lead, bassign, None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: InputShape, mesh,
+                 kv_quant: bool = False):
+    sizes = _mesh_sizes(mesh)
+    batch_axes = _batch_assign(mesh)
+    total = 1
+    for a in batch_axes:
+        total *= sizes.get(a, 1)
+    kv_eff = (cfg.attn.n_kv_heads_padded or cfg.attn.n_kv_heads) \
+        if cfg.attn is not None else 1
+    kv_shardable = (cfg.attn is not None and cfg.attn.mla is None and
+                    kv_eff % max(1, sizes.get("model", 1)) == 0)
+    if shape.global_batch >= total and shape.global_batch % total == 0:
+        rules = dict(R.ACT_RULES_BATCH,
+                     batch=batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        if not kv_shardable:
+            # kv_heads won't divide the model axis: shard the cache sequence
+            # over `model` instead (flash-decode style partial softmax) so the
+            # KV cache never replicates across the model group.
+            rules["cache"] = "model"
+            rules["kv_heads"] = None
+    else:
+        # batch too small to fill the batch axes: shard cache sequence over
+        # them (long-context mode); kv_heads may still take `model`.
+        rules = dict(R.ACT_RULES_SEQ,
+                     cache=batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        if not kv_shardable:
+            rules["kv_heads"] = None
+    schema = M.cache_schema(cfg, shape.global_batch, shape.seq_len,
+                            jnp.bfloat16, kv_quant=kv_quant)
+    return S.partition_specs(schema, rules, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+def default_optimizer(lr: float = 3e-4) -> Optimizer:
+    return chain(clip_by_global_norm(1.0), adamw(lr))
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    use_kernels: bool = False, dtype=jnp.bfloat16,
+                    unroll: bool = False, moe_mesh=None):
+    def train_step(state, batch):
+        def loss_fn(params):
+            return M.lm_loss(params, cfg, batch, use_kernels=use_kernels,
+                             dtype=dtype, unroll=unroll, moe_mesh=moe_mesh)
+
+        (total, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        updates, opt_state = optimizer.update(grads, state["opt"],
+                                              state["params"])
+        params = apply_updates(state["params"], updates)
+        metrics = {"total": total, **parts, "step": state["step"] + 1}
+        return {"params": params, "opt": opt_state,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_hfl_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                        use_kernels: bool = False, dtype=jnp.bfloat16,
+                        moe_mesh=None):
+    """Multi-client federated step: state carries a leading `clients` dim
+    (sharded over the `pod` mesh axis).  Each client computes grads on its own
+    batch and updates its own replica — NO gradient all-reduce across pods;
+    clients only communicate in the HFL blend step (repro.core.hfl)."""
+
+    def one_client(params, opt_state, step, batch):
+        def loss_fn(p):
+            return M.lm_loss(p, cfg, batch, use_kernels=use_kernels,
+                             dtype=dtype, moe_mesh=moe_mesh)
+
+        (total, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, total, parts["loss"]
+
+    def train_step(state, batch):
+        # positions for M-RoPE are (3, C, B, S): client dim on axis 1
+        baxes = {k: (1 if k == "positions" else 0) for k in batch}
+        n_clients = batch["tokens"].shape[0]
+        params, opt, total, loss = jax.vmap(
+            one_client, in_axes=(0, 0, 0, baxes))(
+            state["params"], state["opt"],
+            jnp.broadcast_to(state["step"], (n_clients,)), batch)
+        metrics = {"total": total, "loss": loss, "step": state["step"] + 1}
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, use_kernels: bool = False,
+                      dtype=jnp.bfloat16, unroll: bool = False,
+                      moe_mesh=None):
+    def prefill(params, batch):
+        h, _ = M.forward(params, cfg, batch, use_kernels=use_kernels,
+                         dtype=dtype, unroll=unroll, moe_mesh=moe_mesh)
+        return M.output_logits(params, cfg, h)
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, cache_len: int, *, dtype=jnp.bfloat16,
+                    unroll: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos,
+                             cache_len=cache_len, dtype=dtype, unroll=unroll)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# State init
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, optimizer: Optimizer, rng,
+               n_clients: int = 1, param_dtype=jnp.float32):
+    schema = M.model_schema(cfg)
+    if n_clients > 1:
+        params = [S.materialize(schema, jax.random.fold_in(rng, c),
+                                dtype_override=param_dtype)
+                  for c in range(n_clients)]
+        params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+        opt = jax.vmap(optimizer.init)(params)
+    else:
+        params = S.materialize(schema, rng, dtype_override=param_dtype)
+        opt = optimizer.init(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(cfg: ModelConfig, optimizer: Optimizer, n_clients: int = 1):
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    schema = M.model_schema(cfg)
+    if n_clients > 1:
+        schema = S.stack(schema, n_clients, axis_name="clients")
+    params = S.abstract(schema)
+    init = jax.vmap(optimizer.init) if n_clients > 1 else optimizer.init
+    opt = jax.eval_shape(init, params)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"params": params, "opt": opt, "step": step}
+
+
+def state_pspecs(cfg: ModelConfig, optimizer: Optimizer, mesh,
+                 n_clients: int = 1):
+    p_pspecs, schema = param_pspecs(cfg, mesh, n_clients)
+    abs_params = S.abstract(schema)
+    init = jax.vmap(optimizer.init) if n_clients > 1 else optimizer.init
+    abs_opt = jax.eval_shape(init, abs_params)
+    params_struct = jax.tree_util.tree_structure(abs_params)
+
+    def mirror(node):
+        try:
+            if jax.tree_util.tree_structure(node) == params_struct:
+                return p_pspecs
+        except Exception:
+            pass
+        if isinstance(node, dict):
+            return {k: mirror(v) for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            return type(node)(mirror(v) for v in node)
+        if node is None:
+            return None
+        return P()
+
+    return {"params": p_pspecs, "opt": mirror(abs_opt), "step": P()}

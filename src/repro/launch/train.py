@@ -1,0 +1,87 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 50 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
+      --federated --clients 2 --R 20
+
+Runs on the local devices (CPU in this container); the production-mesh
+lowering of the same step functions is exercised by launch/dryrun.py.
+`--federated` trains N HFL clients: independent updates + plateau-gated
+Eq.7/Eq.8 blend of the shared subtree (repro.core.hfl_llm).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import get_config, list_archs, smoke_config
+from repro.core.hfl_llm import make_blend_step
+from repro.data.lm_pipeline import LMPipelineConfig, TokenPipeline
+from repro.launch import steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--federated", action="store_true")
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--R", type=int, default=20)
+    ap.add_argument("--alpha", type=float, default=0.2)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt = steps.default_optimizer(args.lr)
+    C = args.clients if args.federated else 1
+    state = steps.init_state(cfg, opt, jax.random.PRNGKey(0), n_clients=C)
+    pipes = [TokenPipeline(LMPipelineConfig(batch=args.batch, seq_len=args.seq,
+                                            vocab_size=cfg.vocab_size,
+                                            seed=100 + c,
+                                            n_patches=8), cfg)
+             for c in range(C)]
+
+    if args.federated:
+        train_step = jax.jit(steps.make_hfl_train_step(cfg, opt))
+        blend = jax.jit(make_blend_step(cfg, alpha=args.alpha))
+    else:
+        train_step = jax.jit(steps.make_train_step(cfg, opt))
+    mgr = CheckpointManager(args.ckpt) if args.ckpt else None
+
+    t0 = time.time()
+    batch = None
+    for step in range(args.steps):
+        raw = [pipes[c].batch_at(step) for c in range(C)]
+        if args.federated:
+            batch = {k: jnp.stack([jnp.asarray(r[k]) for r in raw])
+                     for k in raw[0]}
+        else:
+            batch = {k: jnp.asarray(v) for k, v in raw[0].items()}
+        state, metrics = train_step(state, batch)
+        if args.federated and (step + 1) % args.R == 0:
+            state = dict(state)
+            state["params"], losses = blend(state["params"], batch)
+            print(f"  [blend @ {step + 1}] selection losses:\n{losses}")
+        if (step + 1) % args.log_every == 0:
+            loss = metrics["loss"]
+            loss = [round(float(x), 4) for x in jnp.atleast_1d(loss)]
+            print(f"step {step + 1:5d} loss={loss} "
+                  f"({(time.time() - t0) / (step + 1):.2f}s/step)", flush=True)
+        if mgr and (step + 1) % 100 == 0:
+            mgr.save_step(step + 1, state)
+    print(f"done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,410 @@
+"""Attention: GQA (qk-norm / softcap / sliding-window) and DeepSeek MLA.
+
+Two execution paths per variant:
+  * full-sequence (train / prefill) — q-chunked causal attention so the
+    (S x S) score matrix never materializes for long sequences;
+  * decode — one new token against a (possibly ring-buffered sliding-window)
+    KV cache.
+
+The Pallas flash-attention kernel (src/repro/kernels/flash_attention) is the
+TPU fast path for the full-sequence case; `use_kernel=False` (default on CPU
+and in the dry-run) uses the jnp implementation below, which is also the
+kernel's oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.models.layers.common import head_rmsnorm, softcap as _softcap
+from repro.models.layers.rope import apply_mrope, apply_rope
+from repro.sharding.spec import ParamSpec
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def attention_schema(d_model: int, cfg: AttnConfig):
+    if cfg.mla is not None:
+        return mla_schema(d_model, cfg)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sch = {
+        "wq": ParamSpec((d_model, H, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d_model, KV, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d_model, KV, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, hd, d_model), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        sch["q_norm"] = ParamSpec((hd,), (None,), init="zeros")
+        sch["k_norm"] = ParamSpec((hd,), (None,), init="zeros")
+    return sch
+
+
+def mla_schema(d_model: int, cfg: AttnConfig):
+    m = cfg.mla
+    H = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ParamSpec((d_model, m.q_lora_rank), ("embed", None)),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="zeros"),
+        "wq_b": ParamSpec((m.q_lora_rank, H, qk_dim), (None, "heads", None)),
+        "wkv_a": ParamSpec((d_model, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="zeros"),
+        "wkv_b": ParamSpec((m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                           (None, "heads", None)),
+        "wo": ParamSpec((H, m.v_head_dim, d_model), ("heads", None, "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core causal attention (q-chunked)
+# ---------------------------------------------------------------------------
+
+def causal_attention(q, k, v, *, window: Optional[int] = None,
+                     logit_softcap: float = 0.0, q_offset: int = 0,
+                     q_chunk: int = 2048):
+    """q: (B, Sq, H, D), k/v: (B, Skv, KV, D) with H % KV == 0.
+
+    Causal mask with optional sliding window.  ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (prefill: 0 with Sq == Skv).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    kt = k.swapaxes(1, 2)  # (B, KV, Skv, D)
+    vt = v.swapaxes(1, 2)
+    kv_pos = jnp.arange(k.shape[1])
+
+    def chunk_attn(q_chunk_arr, chunk_start):
+        # q_chunk_arr: (B, C, H, D)
+        C = q_chunk_arr.shape[1]
+        qh = q_chunk_arr.swapaxes(1, 2).reshape(B, KV, G * C, D)
+        scores = jnp.einsum("bkqd,bksd->bkqs", qh.astype(jnp.float32),
+                            kt.astype(jnp.float32)) * scale
+        scores = scores.reshape(B, KV, G, C, -1)
+        if logit_softcap:
+            scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+        q_pos = chunk_start + q_offset + jnp.arange(C)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", probs.astype(vt.dtype), vt)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D)
+
+    if Sq <= q_chunk:
+        return chunk_attn(q, 0)
+
+    Sq_pad = -(-Sq // q_chunk) * q_chunk
+    q_in = q if Sq_pad == Sq else jnp.pad(
+        q, ((0, 0), (0, Sq_pad - Sq), (0, 0), (0, 0)))
+    n_chunks = Sq_pad // q_chunk
+    qs = q_in.reshape(B, n_chunks, q_chunk, H, D).swapaxes(0, 1)
+
+    def body(i, qc):
+        return chunk_attn(qc, i * q_chunk)
+
+    outs = jax.lax.map(lambda args: body(*args),
+                       (jnp.arange(n_chunks), qs))
+    out = outs.swapaxes(0, 1).reshape(B, Sq_pad, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *,
+                     logit_softcap: float = 0.0, k_scale=None, v_scale=None):
+    """q: (B, 1, H, D); caches: (B, L, KV, D); valid_mask: (B, L) bool.
+
+    The cache operands stay in their storage dtype with fp32 ACCUMULATION
+    via preferred_element_type — materializing fp32 copies of the cache
+    tripled decode bytes-accessed (EXPERIMENTS.md §Perf iter B2).  With an
+    int8-quantized cache (k_scale/v_scale given, §Perf iter B4) the per-slot
+    scales fold into the score/context products, so dequantization never
+    materializes a full-width cache copy."""
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qh = q.reshape(B, KV, G, D)  # heads grouped by kv head
+    scores = jnp.einsum("bkgd,blkd->bkgl", qh,
+                        k_cache.astype(qh.dtype) if k_scale is not None
+                        else k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        scores = scores * k_scale.astype(jnp.float32).transpose(0, 2, 1)[
+            :, :, None, :]
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    scores = jnp.where(valid_mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        probs_w = probs * v_scale.astype(jnp.float32).transpose(0, 2, 1)[
+            :, :, None, :]
+        out = jnp.einsum("bkgl,blkd->bkgd", probs_w.astype(q.dtype),
+                         v_cache.astype(q.dtype))
+    else:
+        out = jnp.einsum("bkgl,blkd->bkgd", probs.astype(v_cache.dtype),
+                         v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def _pad_heads(w, h_pad: Optional[int], axis: int):
+    """Zero-pad a weight's head dimension to `h_pad` (inert heads: their wo
+    rows are zero so both contributions and gradients are exactly zero)."""
+    if h_pad is None or w.shape[axis] == h_pad:
+        return w
+    pads = [(0, 0)] * w.ndim
+    pads[axis] = (0, h_pad - w.shape[axis])
+    return jnp.pad(w, pads)
+
+
+def _project_qkv(params, cfg: AttnConfig, x, positions):
+    wq = _pad_heads(params["wq"], cfg.n_heads_padded, 1)
+    wk = _pad_heads(params["wk"], cfg.n_kv_heads_padded, 1)
+    wv = _pad_heads(params["wv"], cfg.n_kv_heads_padded, 1)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq.astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, wk.astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, wv.astype(x.dtype))
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"], q)
+        k = head_rmsnorm(params["k_norm"], k)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _constrain_heads(q, k, v, cfg: AttnConfig, mesh):
+    """Padded head dims don't shard by propagation alone (the stored weights
+    are replicated) — force the activation sharding (§Perf iter D2)."""
+    if mesh is None or cfg.n_heads_padded is None or \
+            "model" not in mesh.axis_names:
+        return q, k, v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.devices.shape[list(mesh.axis_names).index("model")]
+    def c(t):
+        if t.shape[2] % m == 0:
+            batch_ax = "data" if t.shape[0] % dict(
+                zip(mesh.axis_names, mesh.devices.shape)).get("data", 1) == 0 \
+                else None
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, P(batch_ax, None, "model", None)))
+        return t
+    return c(q), c(k), c(v)
+
+
+def attention_apply(params, cfg: AttnConfig, x, positions, *,
+                    window: Optional[int], use_kernel: bool = False,
+                    mesh=None):
+    """Full-sequence path.  x: (B, S, d); positions: (B,S) or (3,B,S)."""
+    if cfg.mla is not None:
+        return mla_apply_train(params, cfg, x, positions, window=window)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q, k, v = _constrain_heads(q, k, v, cfg, mesh)
+    if use_kernel:
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, window=window,
+                              logit_softcap=cfg.logit_softcap)
+    else:
+        out = causal_attention(q, k, v, window=window,
+                               logit_softcap=cfg.logit_softcap)
+    wo = _pad_heads(params["wo"], cfg.n_heads_padded, 0)
+    return jnp.einsum("bshk,hkd->bsd", out, wo.astype(x.dtype))
+
+
+def kv_cache_schema(cfg: AttnConfig, batch: int, cache_len: int,
+                    window: Optional[int], dtype, quant: bool = False):
+    """ParamSpec schema of one attention layer's decode cache (ring-buffered
+    to `window` for sliding-window layers).  ``quant=True`` stores int8
+    entries with a per-(slot, kv_head) fp16 absmax scale — halves the cache
+    bytes that dominate the decode memory roofline (§Perf iter B4)."""
+    L = min(cache_len, window) if window else cache_len
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": ParamSpec((batch, L, m.kv_lora_rank),
+                              ("batch", "cache", None), init="zeros",
+                              dtype=dtype),
+            "k_rope": ParamSpec((batch, L, m.qk_rope_head_dim),
+                                ("batch", "cache", None), init="zeros",
+                                dtype=dtype),
+        }
+    KV = cfg.n_kv_heads_padded or cfg.n_kv_heads
+    if quant:
+        kv = ParamSpec((batch, L, KV, cfg.head_dim),
+                       ("batch", "cache", "kv_heads", None), init="zeros",
+                       dtype=jnp.int8)
+        sc = ParamSpec((batch, L, KV),
+                       ("batch", "cache", "kv_heads"), init="zeros",
+                       dtype=jnp.float16)
+        return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc}
+    kv = ParamSpec((batch, L, KV, cfg.head_dim),
+                   ("batch", "cache", "kv_heads", None), init="zeros",
+                   dtype=dtype)
+    return {"k": kv, "v": kv}
+
+
+def _ring_slot(pos, L):
+    return jnp.mod(pos, L)
+
+
+def _cache_valid_mask(pos, L, batch):
+    """Valid slots for a ring cache of length L when the current absolute
+    position is `pos` (the new token is already inserted at its slot)."""
+    slots = jnp.arange(L)
+    n_filled = jnp.minimum(pos + 1, L)
+    # slots are valid if their "age" < n_filled; with ring writes the set of
+    # valid slots is simply the n_filled most recent, which for a ring is
+    # every slot when full, else slots <= pos.
+    valid = slots[None, :] < n_filled
+    return jnp.broadcast_to(valid, (batch, L))
+
+
+def _quantize_kv(t):
+    """t: (B, 1, KV, D) -> (int8 values, fp16 per-(slot,head) scale)."""
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def attention_decode(params, cfg: AttnConfig, x, cache, pos, *,
+                     window: Optional[int], cache_len: int):
+    """x: (B, 1, d); pos: scalar absolute position of the new token."""
+    if cfg.mla is not None:
+        return mla_apply_decode(params, cfg, x, cache, pos,
+                                window=window, cache_len=cache_len)
+    B = x.shape[0]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos, (3, B, 1))
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    L = cache["k"].shape[1]
+    slot = _ring_slot(pos, L)
+    quant = "k_scale" in cache
+    if quant:
+        k_new, ks_new = _quantize_kv(k)
+        v_new, vs_new = _quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                               (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                               (0, slot, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(cache["k_scale"], ks_new,
+                                               (0, slot, 0))
+        v_scale = jax.lax.dynamic_update_slice(cache["v_scale"], vs_new,
+                                               (0, slot, 0))
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        k_scale = v_scale = None
+        new_cache = {"k": k_cache, "v": v_cache}
+    valid = _cache_valid_mask(pos, L, B)
+    out = decode_attention(q, k_cache, v_cache, valid,
+                           logit_softcap=cfg.logit_softcap,
+                           k_scale=k_scale, v_scale=v_scale)
+    wo = _pad_heads(params["wo"], cfg.n_heads_padded, 0)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo.astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    cq = head_rmsnorm(params["q_norm"], jnp.einsum(
+        "bsd,dr->bsr", x, params["wq_a"].astype(x.dtype)))
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"].astype(x.dtype))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_compress(params, cfg, x, positions):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    c_kv = head_rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank])
+    k_rope = apply_rope(kv[..., m.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply_train(params, cfg: AttnConfig, x, positions, *, window):
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_compress(params, cfg, x, positions)
+    # expand compressed kv into per-head K_nope and V (naive/train form)
+    kv_b = params["wkv_b"].astype(x.dtype)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, kv_b[..., : m.qk_nope_head_dim])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, kv_b[..., m.qk_nope_head_dim:])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # pad V up to qk head dim so we can reuse the shared attention core
+    out = causal_attention(q, k, v_pad(v, q.shape[-1]), window=window)
+    out = out[..., : m.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def v_pad(v, d):
+    if v.shape[-1] == d:
+        return v
+    return jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, d - v.shape[-1]),))
+
+
+def mla_apply_decode(params, cfg: AttnConfig, x, cache, pos, *,
+                     window, cache_len):
+    """Absorbed MLA decode: attend in the compressed kv_lora space, so the
+    cache stays (B, L, 512+64) regardless of the 128 heads."""
+    m = cfg.mla
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)       # (B,1,H,*)
+    c_kv_new, k_rope_new = _mla_kv_compress(params, cfg, x, positions)
+    L = cache["c_kv"].shape[1]
+    slot = _ring_slot(pos, L)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    kv_b = params["wkv_b"].astype(x.dtype)
+    # absorb W_UK into q:  (B,1,H,dn) x (r,H,dn) -> (B,1,H,r)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, kv_b[..., : m.qk_nope_head_dim])
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # bf16 operands, fp32 accumulation: no fp32 copy of the compressed cache
+    scores = (jnp.einsum("bshr,blr->bshl", q_eff, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,blk->bshl", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = _cache_valid_mask(pos, L, B)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bshl,blr->bshr", probs.astype(c_kv.dtype), c_kv)
+    v_out = jnp.einsum("bshr,rhk->bshk", ctx, kv_b[..., m.qk_nope_head_dim:])
+    y = jnp.einsum("bshk,hkd->bsd", v_out, params["wo"].astype(x.dtype))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,98 @@
+"""Shared primitives: norms, dense layers, activations, causal depthwise conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_schema(d: int):
+    # zero-centered scale (gemma convention): y = x_hat * (1 + scale)
+    return {"scale": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xhat = xf * jax.lax.rsqrt(var + eps)
+    return (xhat * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm over the trailing head_dim."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xhat = xf * jax.lax.rsqrt(var + eps)
+    return (xhat * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def linear_schema(d_in: int, d_out: int, lin: str = "embed", lout: str = "ffn",
+                  init: str = "fan_in", scale: float = 1.0):
+    return ParamSpec((d_in, d_out), (lin, lout), init=init, scale=scale)
+
+
+def dense(w, x):
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu_plain": lambda x: jax.nn.gelu(x, approximate=True),
+        "tanh": jnp.tanh,
+    }[name]
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0.0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (RG-LRU / xLSTM front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv_schema(width: int, d: int, channel_logical: str = "rnn"):
+    return {"w": ParamSpec((width, d), (None, channel_logical),
+                           init="normal", scale=0.1),
+            "b": ParamSpec((d,), (channel_logical,), init="zeros")}
+
+
+def causal_conv(params, x):
+    """x: (B, S, d).  y_t = b + sum_k w[k] * x_{t-k}."""
+    w, b = params["w"], params["b"]
+    width = w.shape[0]
+    out = jnp.zeros_like(x)
+    for k in range(width):
+        xk = x if k == 0 else jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k or None][:, : x.shape[1]]
+        out = out + xk * w[k].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def causal_conv_step(params, conv_state, x_t):
+    """One decode step.  conv_state: (B, width-1, d) most-recent-last.
+    Returns (y_t, new_state)."""
+    w, b = params["w"], params["b"]
+    width = w.shape[0]
+    hist = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, width, d)
+    # hist[:, -1] is x_t (k=0), hist[:, -2] is x_{t-1} (k=1), ...
+    taps = w[::-1].astype(x_t.dtype)                             # align order
+    y = jnp.einsum("bwd,wd->bd", hist, taps) + b.astype(x_t.dtype)
+    return y, hist[:, 1:]

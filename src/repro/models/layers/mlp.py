@@ -1,0 +1,30 @@
+"""Gated MLP (SwiGLU / GeGLU) and plain-GELU MLP."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers.common import activation
+from repro.sharding.spec import ParamSpec
+
+
+def mlp_schema(d_model: int, d_ff: int, act: str):
+    if act == "gelu_plain":
+        return {
+            "wi": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+            "wd": ParamSpec((d_ff, d_model), ("ffn", "embed")),
+        }
+    return {
+        "wg": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "wu": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "wd": ParamSpec((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def mlp_apply(params, x, act: str):
+    f = activation(act)
+    if act == "gelu_plain":
+        h = f(jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype)))
+        return jnp.einsum("...f,fd->...d", h, params["wd"].astype(x.dtype))
+    g = f(jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype)))
+    u = jnp.einsum("...d,df->...f", x, params["wu"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", g * u, params["wd"].astype(x.dtype))

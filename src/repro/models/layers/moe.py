@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer with expert-parallel sort-based dispatch.
+
+TPU adaptation (see DESIGN.md §3): instead of a GShard one-hot dispatch tensor
+(T x E x C — prohibitive at DeepSeek scale) we sort token assignments by
+expert id and scatter them into per-expert capacity buckets, then run one
+batched (E_local, C, d) x (E_local, d, f) matmul per projection.  Experts are
+sharded over the `model` mesh axis (optionally `data x model` for FSDP
+configs); activations stay replicated over `model`, so the combine step's
+scatter-add produces partial sums that GSPMD turns into one all-reduce —
+the same collective pattern as Megatron tensor parallelism.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers.common import activation
+from repro.sharding.spec import ParamSpec
+
+
+def moe_schema(d_model: int, cfg: MoEConfig, act: str):
+    E, F = cfg.n_experts, cfg.d_ff_expert
+    sch = {
+        "router": ParamSpec((d_model, E), ("embed", None), init="normal",
+                            scale=0.02),
+        "wg": ParamSpec((E, d_model, F), ("experts", "embed", None)),
+        "wu": ParamSpec((E, d_model, F), ("experts", "embed", None)),
+        "wd": ParamSpec((E, F, d_model), ("experts", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        sch["shared"] = {
+            "wg": ParamSpec((d_model, Fs), ("embed", "ffn")),
+            "wu": ParamSpec((d_model, Fs), ("embed", "ffn")),
+            "wd": ParamSpec((Fs, d_model), ("ffn", "embed")),
+        }
+    return sch
+
+
+def _router(params, x_flat, cfg: MoEConfig):
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if cfg.router_score == "sigmoid":        # deepseek-v3
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(scores, cfg.top_k)          # (T, k)
+    if cfg.router_score == "sigmoid":
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-20)
+    return scores, weights, ids
+
+
+def moe_apply(params, x, cfg: MoEConfig, act: str) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    x_flat = x.reshape(T, d)
+    scores, weights, ids = _router(params, x_flat, cfg)
+
+    # --- load-balance aux loss (Switch-style) -----------------------------
+    probs_mean = jnp.mean(scores, axis=0)                         # (E,)
+    counts = jnp.sum(jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=(0, 1))
+    frac = counts / jnp.maximum(1.0, T * K)
+    aux = cfg.aux_loss_weight * E * jnp.sum(frac * probs_mean)
+
+    # --- sort-based capacity dispatch --------------------------------------
+    C = min(T * K, max(cfg.min_capacity,
+                       int(cfg.capacity_factor * T * K / E)))
+    flat_ids = ids.reshape(-1)                                    # (T*K,)
+    flat_w = weights.reshape(-1).astype(x.dtype)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_ids)                                 # stable
+    s_ids, s_tok, s_w = flat_ids[order], flat_tok[order], flat_w[order]
+    group_sizes = jnp.bincount(flat_ids, length=E)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+    pos = jnp.arange(T * K, dtype=jnp.int32) - offsets[s_ids]
+    keep = pos < C
+    pos = jnp.where(keep, pos, C)                                  # C drops OOB
+
+    tok_buf = jnp.full((E, C), T, jnp.int32).at[s_ids, pos].set(
+        s_tok, mode="drop")                                        # (E, C)
+    w_buf = jnp.zeros((E, C), x.dtype).at[s_ids, pos].set(s_w, mode="drop")
+
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x.dtype)], axis=0)
+    gathered = x_pad[tok_buf]                                      # (E, C, d)
+
+    f = activation(act)
+    g = f(jnp.einsum("ecd,edf->ecf", gathered, params["wg"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", gathered, params["wu"].astype(x.dtype))
+    expert_out = jnp.einsum("ecf,efd->ecd", g * u,
+                            params["wd"].astype(x.dtype))          # (E, C, d)
+
+    combined = jnp.zeros((T + 1, d), x.dtype).at[tok_buf].add(
+        expert_out * w_buf[..., None])
+    out = combined[:T].reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        from repro.models.layers.mlp import mlp_apply
+        out = out + mlp_apply(params["shared"], x, act)
+    return out, aux

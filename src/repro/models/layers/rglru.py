@@ -1,0 +1,114 @@
+"""RecurrentGemma / Griffin recurrent block with the RG-LRU [arXiv:2402.19427].
+
+Block:  x -> (gate branch: linear+GeLU) and (main: linear -> causal conv ->
+RG-LRU) -> elementwise product -> output linear.
+
+RG-LRU recurrence (per channel, gates block-diagonal over heads):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(lambda) * r_t)  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan (the Pallas kernel in
+src/repro/kernels/rg_lru is the TPU chunked version; this module's jnp scan is
+its oracle); decode is a single fused step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers.common import (activation, causal_conv,
+                                        causal_conv_schema, causal_conv_step)
+from repro.sharding.spec import ParamSpec
+
+_C = 8.0
+
+
+def rglru_schema(d_model: int, cfg: RGLRUConfig):
+    d, H = cfg.width, cfg.n_heads
+    dh = d // H
+    return {
+        "w_gate": ParamSpec((d_model, d), ("embed", "rnn")),
+        "w_in": ParamSpec((d_model, d), ("embed", "rnn")),
+        "conv": causal_conv_schema(cfg.conv_width, d),
+        "lam": ParamSpec((d,), ("rnn",), init="constant", scale=0.7),
+        "wa": ParamSpec((H, dh, dh), ("heads", None, None)),
+        "ba": ParamSpec((d,), ("rnn",), init="constant", scale=2.0),
+        "wx": ParamSpec((H, dh, dh), ("heads", None, None)),
+        "bx": ParamSpec((d,), ("rnn",), init="zeros"),
+        "w_out": ParamSpec((d, d_model), ("rnn", "embed")),
+    }
+
+
+def _blockdiag(w, b, x, H):
+    """x: (..., d) -> per-head block-diagonal linear."""
+    d = x.shape[-1]
+    dh = d // H
+    xh = x.reshape(x.shape[:-1] + (H, dh))
+    y = jnp.einsum("...hk,hkj->...hj", xh, w.astype(x.dtype))
+    return y.reshape(x.shape) + b.astype(x.dtype)
+
+
+def _gates(params, cfg: RGLRUConfig, u):
+    """u: (..., d_rnn) conv output -> (log_a, b) of the recurrence."""
+    r = jax.nn.sigmoid(_blockdiag(params["wa"], params["ba"], u,
+                                  cfg.n_heads).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(params["wx"], params["bx"], u,
+                                  cfg.n_heads).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    b = mult * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(params, cfg: RGLRUConfig, u, h0=None):
+    """u: (B, S, d_rnn).  Linear recurrence via associative scan."""
+    a, b = _gates(params, cfg, u)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(u.dtype)
+
+
+def rglru_block_apply(params, cfg: RGLRUConfig, x, act: str = "gelu"):
+    """Full-sequence path.  x: (B, S, d_model)."""
+    gate = activation(act)(jnp.einsum("bsd,dr->bsr", x,
+                                      params["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dr->bsr", x, params["w_in"].astype(x.dtype))
+    u = causal_conv(params["conv"], u)
+    h = rglru_scan(params, cfg, u)
+    return jnp.einsum("bsr,rd->bsd", h * gate, params["w_out"].astype(x.dtype))
+
+
+def rglru_state_schema(cfg: RGLRUConfig, batch: int, dtype):
+    return {
+        "h": ParamSpec((batch, cfg.width), ("batch", "rnn"), init="zeros",
+                       dtype=jnp.float32),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, cfg.width),
+                          ("batch", None, "rnn"), init="zeros", dtype=dtype),
+    }
+
+
+def rglru_block_decode(params, cfg: RGLRUConfig, x, state, act: str = "gelu"):
+    """One token.  x: (B, 1, d_model)."""
+    xt = x[:, 0]
+    gate = activation(act)(xt @ params["w_gate"].astype(x.dtype))
+    u = xt @ params["w_in"].astype(x.dtype)
+    u, conv_state = causal_conv_step(params["conv"], state["conv"], u)
+    a, b = _gates(params, cfg, u)
+    h = a * state["h"] + b
+    y = (h.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return y[:, None], {"h": h, "conv": conv_state}

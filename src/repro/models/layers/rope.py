@@ -1,0 +1,43 @@
+"""Rotary position embeddings, including Qwen2-VL multimodal M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _angles(positions, dim: int, theta: float):
+    """positions: (...,) -> (..., dim/2) angle table."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D), positions: (B, S) absolute positions."""
+    B, S, H, D = x.shape
+    ang = _angles(positions, D, theta)            # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL M-RoPE [arXiv:2409.12191].
+
+    x: (B, S, H, D); positions3: (3, B, S) = (temporal, height, width) ids;
+    sections: split of D/2 rotary frequencies among the three position kinds.
+    """
+    B, S, H, D = x.shape
+    assert sum(sections) == D // 2, (sections, D)
+    ang_all = _angles(positions3, D, theta)       # (3, B, S, D/2)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)         # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,285 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections) [arXiv:2405.04517].
+
+mLSTM recurrence per head (exp-gating with m-stabilizer):
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    C_t = exp(f~_t + m_{t-1} - m_t) C_{t-1} + exp(i~_t - m_t) v_t k_t^T
+    n_t = exp(f~_t + m_{t-1} - m_t) n_{t-1} + exp(i~_t - m_t) k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, 1)
+
+The jnp implementations here (sequential lax.scan) are the oracles for the
+chunkwise Pallas kernel in src/repro/kernels/mlstm.  sLSTM is inherently
+sequential (h_{t-1} feeds the gates) and stays a scan everywhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.layers.common import (causal_conv, causal_conv_schema,
+                                        causal_conv_step, head_rmsnorm,
+                                        rmsnorm, rmsnorm_schema)
+from repro.sharding.spec import ParamSpec
+
+
+# ===========================================================================
+# mLSTM block
+# ===========================================================================
+
+def _m_dims(d_model: int, cfg: XLSTMConfig):
+    d_in = int(cfg.proj_factor_m * d_model)
+    dh = d_in // cfg.n_heads
+    return d_in, dh
+
+
+def mlstm_schema(d_model: int, cfg: XLSTMConfig):
+    """Sharding design (EXPERIMENTS.md §Perf iter C1): heads (often 4) rarely
+    divide the `model` axis, so head-sharding degrades to contraction-dim
+    psums — 7+ output all-reduces per layer.  Instead the VALUE head_dim
+    (dh_v, logical "rnn") is model-sharded: the matrix memory C = k v^T is
+    column-sharded and every recurrence op stays local; q/k/gates are
+    replicated (tiny); the only per-layer collective is the down-projection
+    psum.  GroupNorm is per-head (as in the xLSTM paper), so its reduction is
+    over the sharded dh_v — a scalar-sized psum."""
+    d_in, dh = _m_dims(d_model, cfg)
+    H = cfg.n_heads
+    return {
+        # u-branch feeds contractions (conv -> q/k/gates): replicated.
+        # z-branch is purely elementwise against the dh_v-sharded h: sharded
+        # (iter C2 — halves the replicated up-projection activation).
+        "wu": ParamSpec((d_model, d_in), ("embed", None)),
+        "wz": ParamSpec((d_model, H, dh), ("embed", "heads", "rnn")),
+        "conv": causal_conv_schema(cfg.conv_width, d_in, channel_logical=None),
+        "wq": ParamSpec((d_in, H, dh), (None, "heads", None)),
+        "wk": ParamSpec((d_in, H, dh), (None, "heads", None)),
+        "wv": ParamSpec((d_in, H, dh), (None, "heads", "rnn")),
+        "wi": ParamSpec((d_in, H), (None, "heads"), init="normal", scale=0.02),
+        "bi": ParamSpec((H,), ("heads",), init="zeros"),
+        "wf": ParamSpec((d_in, H), (None, "heads"), init="normal", scale=0.02),
+        "bf": ParamSpec((H,), ("heads",), init="constant", scale=3.0),
+        "gn": {"scale": ParamSpec((H, dh), ("heads", "rnn"), init="zeros")},
+        "wd": ParamSpec((H, dh, d_model), ("heads", "rnn", "embed")),
+    }
+
+
+def mlstm_qkv_gates(params, cfg: XLSTMConfig, x):
+    """x: (B, S, d_model) -> q,k,v (B,S,H,dh), gate pre-acts (B,S,H),
+    z (B,S,H,dh)."""
+    d_in, dh = _m_dims(x.shape[-1], cfg)
+    u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(x.dtype))
+    z = jnp.einsum("bsd,dhk->bshk", x, params["wz"].astype(x.dtype))
+    uc = jax.nn.silu(causal_conv(params["conv"], u))
+    q = jnp.einsum("bsf,fhk->bshk", uc, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsf,fhk->bshk", uc, params["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bsf,fhk->bshk", u, params["wv"].astype(x.dtype))
+    i_pre = (jnp.einsum("bsf,fh->bsh", uc, params["wi"].astype(x.dtype))
+             + params["bi"].astype(x.dtype)).astype(jnp.float32)
+    f_pre = (jnp.einsum("bsf,fh->bsh", uc, params["wf"].astype(x.dtype))
+             + params["bf"].astype(x.dtype)).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre, z
+
+
+def mlstm_recurrence(q, k, v, i_pre, f_pre, state=None):
+    """Sequential stabilized scan.  q,k,v: (B,S,H,dh); gates (B,S,H).
+    state: optional (C, n, m) carry.  Returns (h, new_state)."""
+    B, S, H, dh = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        log_f = jax.nn.log_sigmoid(ft)              # f gate: sigmoid-form log
+        m_new = jnp.maximum(log_f + m, it)
+        f_eff = jnp.exp(log_f + m - m_new)          # (B,H)
+        i_eff = jnp.exp(it - m_new)
+        ktf = kt.astype(jnp.float32)
+        vtf = vt.astype(jnp.float32)
+        C = f_eff[..., None, None] * C + i_eff[..., None, None] * (
+            ktf[..., :, None] * vtf[..., None, :])
+        n = f_eff[..., None] * n + i_eff[..., None] * ktf
+        qtf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhkv,bhk->bhv", C, qtf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qtf)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.swapaxes(0, 1), (C, n, m)            # (B,S,H,dh)
+
+
+def mlstm_block_apply(params, cfg: XLSTMConfig, x, use_kernel: bool = False):
+    q, k, v, i_pre, f_pre, z = mlstm_qkv_gates(params, cfg, x)
+    if use_kernel:
+        from repro.kernels.mlstm.ops import mlstm_chunkwise
+        h = mlstm_chunkwise(q, k, v, i_pre, f_pre)
+    else:
+        h, _ = mlstm_recurrence(q, k, v, i_pre, f_pre)
+    B, S, H, dh = h.shape
+    h = h.astype(x.dtype)
+    # per-head GroupNorm (xLSTM GN groups == heads); reduction over the
+    # model-sharded dh_v is a scalar-sized psum
+    h = head_rmsnorm(params["gn"]["scale"], h)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bshk,hkd->bsd", h, params["wd"].astype(x.dtype))
+
+
+def mlstm_state_schema(d_model: int, cfg: XLSTMConfig, batch: int, dtype):
+    d_in, dh = _m_dims(d_model, cfg)
+    H = cfg.n_heads
+    return {
+        "C": ParamSpec((batch, H, dh, dh), ("batch", "heads", None, None),
+                       init="zeros", dtype=jnp.float32),
+        "n": ParamSpec((batch, H, dh), ("batch", "heads", None),
+                       init="zeros", dtype=jnp.float32),
+        "m": ParamSpec((batch, H), ("batch", "heads"),
+                       init="constant", scale=-1e30, dtype=jnp.float32),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, d_in),
+                          ("batch", None, "rnn"), init="zeros", dtype=dtype),
+    }
+
+
+def mlstm_block_decode(params, cfg: XLSTMConfig, x, state):
+    """x: (B, 1, d_model)."""
+    d_in, dh = _m_dims(x.shape[-1], cfg)
+    xt = x[:, 0]
+    u = xt @ params["wu"].astype(x.dtype)
+    z = jnp.einsum("bd,dhk->bhk", xt, params["wz"].astype(x.dtype))
+    uc, conv_state = causal_conv_step(params["conv"], state["conv"], u)
+    uc = jax.nn.silu(uc)
+    H = cfg.n_heads
+    q = jnp.einsum("bf,fhk->bhk", uc, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bf,fhk->bhk", uc, params["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bf,fhk->bhk", u, params["wv"].astype(x.dtype))
+    i_pre = (jnp.einsum("bf,fh->bh", uc, params["wi"].astype(x.dtype))
+             + params["bi"].astype(x.dtype)).astype(jnp.float32)
+    f_pre = (jnp.einsum("bf,fh->bh", uc, params["wf"].astype(x.dtype))
+             + params["bf"].astype(x.dtype)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    f_eff = jnp.exp(log_f + state["m"] - m_new)
+    i_eff = jnp.exp(i_pre - m_new)
+    kf, vf, qf = (k.astype(jnp.float32), v.astype(jnp.float32),
+                  q.astype(jnp.float32))
+    C = (f_eff[..., None, None] * state["C"]
+         + i_eff[..., None, None] * (kf[..., :, None] * vf[..., None, :]))
+    n = f_eff[..., None] * state["n"] + i_eff[..., None] * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(x.dtype)          # (B, H, dh)
+    h = head_rmsnorm(params["gn"]["scale"], h)
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bhk,hkd->bd", h, params["wd"].astype(x.dtype))
+    return y[:, None], {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ===========================================================================
+# sLSTM block
+# ===========================================================================
+
+def _s_dims(d_model: int, cfg: XLSTMConfig):
+    dh = d_model // cfg.n_heads
+    d_ff = int(round(cfg.proj_factor_s * d_model))
+    return dh, d_ff
+
+
+def slstm_schema(d_model: int, cfg: XLSTMConfig):
+    H = cfg.n_heads
+    dh, d_ff = _s_dims(d_model, cfg)
+    gate = lambda bias_scale=0.0, init="fan_in": {
+        "w": ParamSpec((d_model, d_model), ("embed", "rnn")),
+        "r": ParamSpec((H, dh, dh), ("heads", None, None), init="normal",
+                       scale=0.02),
+        "b": ParamSpec((d_model,), ("rnn",),
+                       init="constant" if bias_scale else "zeros",
+                       scale=bias_scale),
+    }
+    return {
+        "conv": causal_conv_schema(cfg.conv_width, d_model),
+        "z": gate(), "i": gate(), "f": gate(bias_scale=3.0), "o": gate(),
+        "gn": rmsnorm_schema(d_model),
+        "wup": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "wdown": ParamSpec((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def _slstm_gate(g, x_c, h_prev, H):
+    d = x_c.shape[-1]
+    dh = d // H
+    hh = h_prev.reshape(h_prev.shape[:-1] + (H, dh))
+    rec = jnp.einsum("...hk,hkj->...hj", hh, g["r"].astype(h_prev.dtype))
+    rec = rec.reshape(h_prev.shape)
+    return (x_c @ g["w"].astype(x_c.dtype) + rec
+            + g["b"].astype(x_c.dtype)).astype(jnp.float32)
+
+
+def slstm_step(params, cfg: XLSTMConfig, x_c_t, state):
+    """One recurrence step.  x_c_t: (B, d) conv-activated input."""
+    c, n, m, h = state
+    hx = h.astype(x_c_t.dtype)
+    z = jnp.tanh(_slstm_gate(params["z"], x_c_t, hx, cfg.n_heads))
+    i_pre = _slstm_gate(params["i"], x_c_t, hx, cfg.n_heads)
+    f_pre = _slstm_gate(params["f"], x_c_t, hx, cfg.n_heads)
+    o = jax.nn.sigmoid(_slstm_gate(params["o"], x_c_t, hx, cfg.n_heads))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_eff = jnp.exp(log_f + m - m_new)
+    i_eff = jnp.exp(i_pre - m_new)
+    c_new = f_eff * c + i_eff * z
+    n_new = f_eff * n + i_eff
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_block_apply(params, cfg: XLSTMConfig, x):
+    """x: (B, S, d_model)."""
+    B, S, d = x.shape
+    x_c = jax.nn.silu(causal_conv(params["conv"], x))
+    state = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+             jnp.full((B, d), -1e30, jnp.float32), jnp.zeros((B, d), jnp.float32))
+
+    def step(carry, xt):
+        new = slstm_step(params, cfg, xt, carry)
+        return new, new[3]
+
+    _, hs = jax.lax.scan(step, state, x_c.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    h = rmsnorm(params["gn"], h)
+    ff = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, params["wup"].astype(x.dtype)),
+                     approximate=True)
+    return jnp.einsum("bsf,fd->bsd", ff, params["wdown"].astype(x.dtype))
+
+
+def slstm_state_schema(d_model: int, cfg: XLSTMConfig, batch: int, dtype):
+    vec = lambda init="zeros", scale=1.0: ParamSpec(
+        (batch, d_model), ("batch", "rnn"), init=init, scale=scale,
+        dtype=jnp.float32)
+    return {
+        "c": vec(), "n": vec(), "m": vec("constant", -1e30), "h": vec(),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, d_model),
+                          ("batch", None, "rnn"), init="zeros", dtype=dtype),
+    }
+
+
+def slstm_block_decode(params, cfg: XLSTMConfig, x, state):
+    xt = x[:, 0]
+    u, conv_state = causal_conv_step(params["conv"], state["conv"], xt)
+    x_c = jax.nn.silu(u)
+    c, n, m, h = slstm_step(params, cfg, x_c,
+                            (state["c"], state["n"], state["m"], state["h"]))
+    ho = rmsnorm(params["gn"], h.astype(x.dtype))
+    ff = jax.nn.gelu(ho @ params["wup"].astype(x.dtype), approximate=True)
+    y = ff @ params["wdown"].astype(x.dtype)
+    return y[:, None], {"c": c, "n": n, "m": m, "h": h, "conv": conv_state}

@@ -1,0 +1,403 @@
+"""Composable decoder model: schema construction, full-sequence forward
+(train / prefill), KV-cache decode (`serve_step` body), and losses.
+
+A model is: embedding (+ modality projector) -> a list of scanned Segments ->
+final norm -> output head(s).  Layers inside a Segment's repeating pattern are
+dispatched on :class:`LayerSpec` (mixer x ffn kind).  All parameters are
+ParamSpec schemas (see repro.sharding.spec), so dry-run lowering never
+allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, LayerSpec, ModelConfig
+from repro.models.layers.attention import (attention_apply, attention_decode,
+                                           attention_schema, kv_cache_schema)
+from repro.models.layers.common import rmsnorm, rmsnorm_schema
+from repro.models.layers.mlp import mlp_apply, mlp_schema
+from repro.models.layers.moe import moe_apply, moe_schema
+from repro.models.layers.rglru import (rglru_block_apply, rglru_block_decode,
+                                       rglru_state_schema, rglru_schema)
+from repro.models.layers.xlstm import (mlstm_block_apply, mlstm_block_decode,
+                                       mlstm_state_schema, mlstm_schema,
+                                       slstm_block_apply, slstm_block_decode,
+                                       slstm_state_schema, slstm_schema)
+from repro.sharding.spec import ParamSpec, stack
+
+VISION_DIM = 1280  # stub ViT output width (qwen2-vl merged patch embedding)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def layer_schema(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    d = cfg.d_model
+    sch: Dict[str, Any] = {"norm_mixer": rmsnorm_schema(d)}
+    if spec.mixer in ("attn", "attn_local"):
+        sch["attn"] = attention_schema(d, cfg.attn)
+    elif spec.mixer == "rglru":
+        sch["rglru"] = rglru_schema(d, cfg.rglru)
+    elif spec.mixer == "mlstm":
+        sch["mlstm"] = mlstm_schema(d, cfg.xlstm)
+    elif spec.mixer == "slstm":
+        sch["slstm"] = slstm_schema(d, cfg.xlstm)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "mlp":
+        sch["norm_ffn"] = rmsnorm_schema(d)
+        sch["mlp"] = mlp_schema(d, cfg.d_ff, cfg.act)
+    elif spec.ffn == "moe":
+        sch["norm_ffn"] = rmsnorm_schema(d)
+        sch["moe"] = moe_schema(d, cfg.moe, cfg.act)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+    return sch
+
+
+def model_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    sch: Dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        sch["embed"] = ParamSpec((cfg.n_codebooks, V, d),
+                                 ("codebooks", "vocab", "embed"),
+                                 init="embed", scale=0.02)
+    else:
+        sch["embed"] = ParamSpec((V, d), ("vocab", "embed"),
+                                 init="embed", scale=0.02)
+    if cfg.vlm:
+        sch["vis_proj"] = ParamSpec((VISION_DIM, d), (None, "embed"))
+    for si, seg in enumerate(cfg.segments):
+        pat = {f"l{i}": layer_schema(cfg, s) for i, s in enumerate(seg.pattern)}
+        sch[f"seg{si}"] = stack(pat, seg.repeats, axis_name="layers")
+    sch["final_norm"] = rmsnorm_schema(d)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            sch["lm_head"] = ParamSpec((cfg.n_codebooks, d, V),
+                                       ("codebooks", "embed", "vocab"))
+        else:
+            sch["lm_head"] = ParamSpec((d, V), ("embed", "vocab"))
+    if cfg.mtp_depth > 0:
+        dense_spec = LayerSpec(mixer="attn", ffn="mlp")
+        sch["mtp"] = {
+            "norm_h": rmsnorm_schema(d),
+            "norm_e": rmsnorm_schema(d),
+            "proj": ParamSpec((2 * d, d), (None, "embed")),
+            "layer": layer_schema(cfg, dense_spec),
+            "final_norm": rmsnorm_schema(d),
+        }
+    return sch
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _mixer_window(cfg: ModelConfig, spec: LayerSpec) -> Optional[int]:
+    if spec.mixer == "attn_local":
+        return cfg.local_window
+    return cfg.attn.window if cfg.attn else None
+
+
+def apply_layer(cfg: ModelConfig, spec: LayerSpec, params, x, positions, aux,
+                use_kernels: bool = False, moe_mesh=None):
+    h = rmsnorm(params["norm_mixer"], x, cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        h = attention_apply(params["attn"], cfg.attn, h, positions,
+                            window=_mixer_window(cfg, spec),
+                            use_kernel=use_kernels, mesh=moe_mesh)
+    elif spec.mixer == "rglru":
+        h = rglru_block_apply(params["rglru"], cfg.rglru, h, cfg.act)
+    elif spec.mixer == "mlstm":
+        h = mlstm_block_apply(params["mlstm"], cfg.xlstm, h,
+                              use_kernel=use_kernels)
+    elif spec.mixer == "slstm":
+        h = slstm_block_apply(params["slstm"], cfg.xlstm, h)
+    x = x + h
+    if spec.ffn == "mlp":
+        h = rmsnorm(params["norm_ffn"], x, cfg.norm_eps)
+        x = x + mlp_apply(params["mlp"], h, cfg.act)
+    elif spec.ffn == "moe":
+        h = rmsnorm(params["norm_ffn"], x, cfg.norm_eps)
+        if moe_mesh is not None:
+            from repro.models.layers.moe_a2a import ep_axes_for, moe_apply_a2a
+            ep = ep_axes_for(cfg.moe, moe_mesh)
+            if ep is not None:
+                h, daux = moe_apply_a2a(params["moe"], h, cfg.moe, cfg.act,
+                                        moe_mesh, ep)
+            else:
+                h, daux = moe_apply(params["moe"], h, cfg.moe, cfg.act)
+        else:
+            h, daux = moe_apply(params["moe"], h, cfg.moe, cfg.act)
+        x = x + h
+        aux = aux + daux
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, batch, dtype):
+    tokens = batch["tokens"]
+    if cfg.n_codebooks > 1:                      # musicgen: (B, K, S)
+        x = 0.0
+        for k in range(cfg.n_codebooks):
+            x = x + params["embed"][k][tokens[:, k]]
+    else:
+        x = params["embed"][tokens]              # (B, S, d)
+    x = x.astype(dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.vlm and "image_embeds" in batch:
+        img = jnp.einsum("bpv,vd->bpd", batch["image_embeds"].astype(dtype),
+                         params["vis_proj"].astype(dtype))
+        P = img.shape[1]
+        x = jnp.concatenate([img, x[:, P:]], axis=1)
+    return x
+
+
+def output_logits(params, cfg: ModelConfig, x):
+    if cfg.n_codebooks > 1:
+        w = params["lm_head"]                    # (K, d, V)
+        return jnp.einsum("bsd,kdv->bskv", x, w.astype(x.dtype))
+    if cfg.tie_embeddings:
+        w = params["embed"].T                    # (d, V)
+    else:
+        w = params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.final_softcap:
+        logits = (cfg.final_softcap
+                  * jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap))
+    return logits
+
+
+def default_positions(cfg: ModelConfig, batch):
+    if "positions" in batch:
+        return batch["positions"]
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    S = tokens.shape[-1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.attn is not None and cfg.attn.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos, (3, B, S))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch, *, use_kernels: bool = False,
+            dtype=jnp.bfloat16, remat: bool = True, unroll: bool = False,
+            moe_mesh=None):
+    """Returns (hidden_states, aux_loss).  `unroll=True` replaces the
+    layer-scan with a python loop — used by the roofline harness, where XLA's
+    cost_analysis counts scan bodies only once.  `moe_mesh`: pass the device
+    mesh to route MoE layers through the explicit all-to-all dispatch."""
+    x = embed_tokens(params, cfg, batch, dtype)
+    positions = default_positions(cfg, batch)
+    aux = jnp.zeros((), jnp.float32)
+
+    for si, seg in enumerate(cfg.segments):
+        seg_params = params[f"seg{si}"]
+
+        def body(carry, layer_params, _seg=seg):
+            x, aux = carry
+            for i, spec in enumerate(_seg.pattern):
+                x, aux = apply_layer(cfg, spec, layer_params[f"l{i}"], x,
+                                     positions, aux, use_kernels,
+                                     moe_mesh=moe_mesh)
+            return (x, aux), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        if seg.repeats == 1:
+            first = jax.tree_util.tree_map(lambda p: p[0], seg_params)
+            (x, aux), _ = body((x, aux), first)
+        elif unroll:
+            for r in range(seg.repeats):
+                sl = jax.tree_util.tree_map(lambda p, _r=r: p[_r], seg_params)
+                (x, aux), _ = body((x, aux), sl)
+        else:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), seg_params)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return h, aux
+
+
+def _xent(logits, labels, mask):
+    """Cross entropy in fp32.  logits: (..., V); labels int; mask float.
+
+    The label logit is extracted with a masked SUM over the vocab axis, not
+    take_along_axis: with vocab sharded over `model`, a gather by label index
+    forces GSPMD to all-gather the full logits (tens of GB/step at DeepSeek
+    scale), while iota-compare + sum reduces locally per shard and
+    all-reduces only the (B, S) result.  See EXPERIMENTS.md §Perf iter A1.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(idx == labels[..., None], logits, 0.0), axis=-1)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, use_kernels: bool = False,
+            dtype=jnp.bfloat16, unroll: bool = False, moe_mesh=None):
+    """Next-token cross-entropy (+ MoE aux, + MTP aux for deepseek)."""
+    h, aux = forward(params, cfg, batch, use_kernels=use_kernels, dtype=dtype,
+                     unroll=unroll, moe_mesh=moe_mesh)
+    tokens = batch["tokens"]
+    if cfg.n_codebooks > 1:
+        logits = output_logits(params, cfg, h)          # (B, S, K, V)
+        labels = tokens[:, :, 1:].swapaxes(1, 2)        # (B, S-1, K)
+        mask = jnp.ones(labels.shape[:2], jnp.float32)[..., None]
+        loss = _xent(logits[:, :-1], labels, jnp.broadcast_to(mask, labels.shape))
+    else:
+        logits = output_logits(params, cfg, h)          # (B, S, V)
+        labels = tokens[:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+        if cfg.vlm and "image_embeds" in batch:
+            P = batch["image_embeds"].shape[1]
+            pos_ids = jnp.arange(labels.shape[1])
+            mask = mask * (pos_ids >= P)[None, :]
+        loss = _xent(logits[:, :-1], labels, mask)
+    total = loss + aux
+    if cfg.mtp_depth > 0 and cfg.n_codebooks == 1:
+        total = total + 0.3 * _mtp_loss(params, cfg, h, batch, dtype)
+    return total, {"loss": loss, "aux": aux}
+
+
+def _mtp_loss(params, cfg: ModelConfig, h, batch, dtype):
+    """DeepSeek-V3 multi-token prediction (depth 1): combine hidden state at t
+    with the embedding of token t+1 to predict token t+2."""
+    p = params["mtp"]
+    tokens = batch["tokens"]
+    emb_next = params["embed"][tokens[:, 1:]].astype(dtype)        # (B, S-1, d)
+    h_cur = h[:, :-1]
+    merged = jnp.concatenate([rmsnorm(p["norm_h"], h_cur, cfg.norm_eps),
+                              rmsnorm(p["norm_e"], emb_next, cfg.norm_eps)],
+                             axis=-1)
+    x = jnp.einsum("bsd,df->bsf", merged, p["proj"].astype(dtype))
+    positions = default_positions(cfg, batch)
+    if positions.ndim == 3:
+        positions = positions[:, :, : x.shape[1]]
+    else:
+        positions = positions[:, : x.shape[1]]
+    x, _ = apply_layer(cfg, LayerSpec("attn", "mlp"), p["layer"], x,
+                       positions, jnp.zeros((), jnp.float32))
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = output_logits(params, cfg, x)                          # (B,S-1,V)
+    labels = tokens[:, 2:]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    return _xent(logits[:, :-1], labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step body)
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+                 kv_quant: bool = False):
+    """ParamSpec schema of the full decode cache (segment-stacked).  Derive
+    real zeros via ``spec.zeros``, abstract inputs via ``spec.abstract`` and
+    shardings via ``spec.partition_specs`` — all from this one tree.
+    ``kv_quant``: int8 cache entries + fp16 scales (§Perf iter B4)."""
+    caches = {}
+    for si, seg in enumerate(cfg.segments):
+        def one_layer(spec: LayerSpec):
+            if spec.mixer in ("attn", "attn_local"):
+                return kv_cache_schema(cfg.attn, batch, cache_len,
+                                       _mixer_window(cfg, spec), dtype,
+                                       quant=kv_quant)
+            if spec.mixer == "rglru":
+                return rglru_state_schema(cfg.rglru, batch, dtype)
+            if spec.mixer == "mlstm":
+                return mlstm_state_schema(cfg.d_model, cfg.xlstm, batch, dtype)
+            if spec.mixer == "slstm":
+                return slstm_state_schema(cfg.d_model, cfg.xlstm, batch, dtype)
+            raise ValueError(spec.mixer)
+
+        pat = {f"l{i}": one_layer(s) for i, s in enumerate(seg.pattern)}
+        caches[f"seg{si}"] = stack(pat, seg.repeats, axis_name="layers")
+    return caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+               kv_quant: bool = False):
+    from repro.sharding import spec as spec_lib
+    return spec_lib.zeros(cache_schema(cfg, batch, cache_len, dtype,
+                                       kv_quant=kv_quant))
+
+
+def apply_layer_decode(cfg: ModelConfig, spec: LayerSpec, params, x, cache,
+                       pos, cache_len: int):
+    h = rmsnorm(params["norm_mixer"], x, cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        h, new_cache = attention_decode(params["attn"], cfg.attn, h, cache,
+                                        pos, window=_mixer_window(cfg, spec),
+                                        cache_len=cache_len)
+    elif spec.mixer == "rglru":
+        h, new_cache = rglru_block_decode(params["rglru"], cfg.rglru, h, cache,
+                                          cfg.act)
+    elif spec.mixer == "mlstm":
+        h, new_cache = mlstm_block_decode(params["mlstm"], cfg.xlstm, h, cache)
+    elif spec.mixer == "slstm":
+        h, new_cache = slstm_block_decode(params["slstm"], cfg.xlstm, h, cache)
+    x = x + h
+    if spec.ffn == "mlp":
+        h = rmsnorm(params["norm_ffn"], x, cfg.norm_eps)
+        x = x + mlp_apply(params["mlp"], h, cfg.act)
+    elif spec.ffn == "moe":
+        h = rmsnorm(params["norm_ffn"], x, cfg.norm_eps)
+        h, _ = moe_apply(params["moe"], h, cfg.moe, cfg.act)
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
+                cache_len: int, dtype=jnp.bfloat16, unroll: bool = False):
+    """One decode step.  tokens: (B, 1) (or (B, K, 1) for multi-codebook);
+    pos: scalar int32 absolute position.  Returns (logits, new_cache)."""
+    x = embed_tokens(params, cfg, {"tokens": tokens}, dtype)
+    new_caches = {}
+    for si, seg in enumerate(cfg.segments):
+        seg_params = params[f"seg{si}"]
+        seg_cache = cache[f"seg{si}"]
+
+        def body(x, inp, _seg=seg):
+            layer_params, layer_cache = inp
+            new_cache = {}
+            for i, spec in enumerate(_seg.pattern):
+                x, nc = apply_layer_decode(cfg, spec, layer_params[f"l{i}"], x,
+                                           layer_cache[f"l{i}"], pos, cache_len)
+                new_cache[f"l{i}"] = nc
+            return x, new_cache
+
+        if seg.repeats == 1:
+            first = jax.tree_util.tree_map(lambda p: p[0],
+                                           (seg_params, seg_cache))
+            x, nc = body(x, first)
+            new_caches[f"seg{si}"] = jax.tree_util.tree_map(
+                lambda a: a[None], nc)
+        elif unroll:
+            ncs = []
+            for r in range(seg.repeats):
+                sl = jax.tree_util.tree_map(lambda p, _r=r: p[_r],
+                                            (seg_params, seg_cache))
+                x, nc = body(x, sl)
+                ncs.append(nc)
+            new_caches[f"seg{si}"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ncs)
+        else:
+            x, nc = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_caches[f"seg{si}"] = nc
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = output_logits(params, cfg, h)
+    return logits, new_caches

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, apply_updates, clip_by_global_norm, chain, sgd,
+    cosine_schedule, constant_schedule, warmup_cosine_schedule,
+)

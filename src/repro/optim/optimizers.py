@@ -1,0 +1,160 @@
+"""Minimal optax-style optimizer library (optax is not installed offline).
+
+An :class:`Optimizer` is an (init, update) pair over pytrees.  ``update``
+returns (updates, new_state); apply with :func:`apply_updates`.  Composable
+via :func:`chain`.  Schedules are plain callables step -> lr.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def f(step):
+        t = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine_schedule(lr: float, warmup: int, total_steps: int,
+                           final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(1, total_steps - warmup), final_frac)
+    def f(step):
+        wu = lr * jnp.minimum(1.0, (step + 1) / max(1, warmup))
+        return jnp.where(step < warmup, wu, cos(step - warmup))
+    return f
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# Transforms
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mom = _tree_zeros_like(params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = sched(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mom"], grads)
+            upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mom)
+            return upd, {"step": step + 1, "mom": mom}
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step + 1, "mom": None}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": _tree_zeros_like(params, jnp.float32),
+            "v": _tree_zeros_like(params, jnp.float32),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(state["step"])
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_m(m, g):
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def upd_v(v, g):
+            g = g.astype(jnp.float32)
+            return b2 * v + (1 - b2) * g * g
+
+        m = jax.tree_util.tree_map(upd_m, state["m"], grads)
+        v = jax.tree_util.tree_map(upd_v, state["v"], grads)
+
+        def delta(m_, v_, p):
+            d = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                d = d - lr_t * weight_decay * p.astype(jnp.float32)
+            return d.astype(p.dtype)
+
+        upd = jax.tree_util.tree_map(delta, m, v,
+                                     params if params is not None else m)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params=None):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype),
+                                      grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params=None):
+        new_states = []
+        upd = grads
+        for o, s in zip(opts, state):
+            upd, ns = o.update(upd, s, params)
+            new_states.append(ns)
+        return upd, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)

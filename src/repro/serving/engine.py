@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + KV-cache decode with sampling.
+
+Production lowering of `serve_step` (sharded cache, cache donation) is in
+launch/dryrun.py; this engine is the host-side request loop used by
+examples/serve_batched.py and the serving tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class GenerationConfig:
+    max_new_tokens: int = 64
+    temperature: float = 0.8
+    top_k: Optional[int] = None
+    seed: int = 0
+
+
+class ServingEngine:
+    """Holds compiled prefill/decode functions + the ring-buffered cache."""
+
+    def __init__(self, cfg: ModelConfig, params, cache_len: int,
+                 dtype=jnp.bfloat16):
+        self.cfg, self.params, self.cache_len = cfg, params, cache_len
+        self.dtype = dtype
+        # cache donation: the update happens in place (EXPERIMENTS §Perf B3)
+        self._step = jax.jit(steps.make_serve_step(cfg, cache_len,
+                                                   dtype=dtype),
+                             donate_argnums=(1,))
+
+    def new_cache(self, batch: int):
+        return M.init_cache(self.cfg, batch, self.cache_len, self.dtype)
+
+    def prefill(self, cache, prompts):
+        """prompts: (B, P) or (B, K, P).  Returns (last_logits, cache, P)."""
+        P = prompts.shape[-1]
+        logits = None
+        for t in range(P):
+            logits, cache = self._step(self.params, cache,
+                                       prompts[..., t:t + 1], jnp.int32(t))
+        return logits, cache, P
+
+    def _sample(self, logits, key, gen: GenerationConfig):
+        x = logits.astype(jnp.float32) / max(1e-6, gen.temperature)
+        if gen.top_k:
+            thresh = jnp.sort(x, axis=-1)[..., -gen.top_k][..., None]
+            x = jnp.where(x < thresh, -jnp.inf, x)
+        return jax.random.categorical(key, x, axis=-1)
+
+    def generate(self, prompts, gen: GenerationConfig):
+        """Batched autoregressive generation.  Returns (B, max_new_tokens)
+        (or (B, K, T) for multi-codebook models)."""
+        cache = self.new_cache(prompts.shape[0])
+        logits, cache, P = self.prefill(cache, prompts)
+        key = jax.random.PRNGKey(gen.seed)
+        cur = prompts[..., -1:]
+        outs = []
+        for t in range(P, P + gen.max_new_tokens):
+            logits, cache = self._step(self.params, cache, cur, jnp.int32(t))
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, sub, gen)
+            cur = nxt.swapaxes(1, 2) if self.cfg.n_codebooks > 1 else nxt
+            outs.append(cur)
+        return jnp.concatenate(outs, axis=-1)

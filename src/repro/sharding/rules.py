@@ -1,0 +1,62 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Single source of truth for how tensors shard onto the production meshes.
+``pod`` is the federated-client axis: parameters are *replicated* across it
+(each pod is an HFL client with its own replica); only the HFL blend step
+communicates across pods.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Tuple, Union
+
+Rules = Dict[str, Union[str, Tuple[str, ...]]]
+
+# Parameter rules: tensor-parallel over "model"; experts expert-parallel.
+PARAM_RULES: Rules = {
+    "vocab": "model",
+    "heads": "model",        # attention query heads
+    "kv_heads": "model",     # dropped automatically when not divisible
+    "ffn": "model",
+    "experts": "model",
+    "rnn": "model",          # RG-LRU / xLSTM recurrent width
+    "codebooks": None,
+    "embed": None,
+    "layers": None,
+}
+
+# FSDP-style variant used by very large configs (deepseek-v3): experts spread
+# over BOTH data and model axes.  NOTE (Perf iter A2): an earlier version also
+# sharded the `embed` dim of 2D weights over "data" (ZeRO-3 style); that made
+# every embedding lookup / logits matmul column-sharded against batch-sharded
+# activations, and GSPMD fell back to full rematerialization — ~230 GB/step of
+# batch all-gathers at DeepSeek scale.  Weight-gather ZeRO is reintroduced
+# selectively via the ffn dimension only.
+PARAM_RULES_FSDP: Rules = dict(
+    PARAM_RULES,
+    experts=("data", "model"),
+    ffn=("model",),
+)
+
+# Activation rules (training / prefill): batch over data, heads over model.
+ACT_RULES: Rules = {
+    "batch": "data",
+    "seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "embed": None,
+    "experts": "model",
+    "rnn": "model",
+}
+
+# Long-context decode (batch too small to fill "data"): shard the KV cache
+# sequence dimension over the data axis instead (flash-decode style).
+ACT_RULES_SEQ: Rules = dict(ACT_RULES, batch=None, cache="data")
+ACT_RULES_BATCH: Rules = dict(ACT_RULES, cache=None)
+
+
+def act_rules_for(shape_name: str, global_batch: int, data_axis: int) -> Rules:
+    if global_batch >= data_axis:
+        return ACT_RULES_BATCH
+    return ACT_RULES_SEQ

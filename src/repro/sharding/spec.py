@@ -1,0 +1,184 @@
+"""Parameter schema machinery.
+
+Models in this framework are *schemas first*: a pytree of :class:`ParamSpec`
+leaves describing shape, logical axes, and initializer.  From one schema we
+derive
+  * materialized parameters  (``materialize``)      -- real training,
+  * abstract parameters      (``abstract``)          -- dry-run lowering,
+  * PartitionSpecs           (``partition_specs``)   -- pjit shardings,
+without ever duplicating shape logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    logical: Logical
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | constant | embed
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"shape {self.shape} and logical axes {self.logical} rank mismatch")
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.scale, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "fan_in":
+        # truncated-normal with stddev 1/sqrt(fan_in); fan_in = prod of all but last dim
+        fan_in = max(1, int(np.prod(spec.shape[:-1])) if len(spec.shape) > 1 else spec.shape[0])
+        std = spec.scale / np.sqrt(fan_in)
+        return (std * jax.random.truncated_normal(key, -2.0, 2.0, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def _tree_paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)
+    return flat, treedef
+
+
+def materialize(schema, rng: jax.Array, dtype_override=None):
+    """Instantiate a schema pytree into real arrays (deterministic per path)."""
+    flat, treedef = _tree_paths_and_leaves(schema)
+    leaves = []
+    for path, spec in flat:
+        assert is_spec(spec), f"non-spec leaf at {path}: {spec}"
+        key = jax.random.fold_in(rng, _path_hash(path))
+        arr = _init_leaf(spec, key)
+        if dtype_override is not None and jnp.issubdtype(arr.dtype, jnp.floating):
+            arr = arr.astype(dtype_override)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _path_hash(path) -> int:
+    s = jax.tree_util.keystr(path)
+    h = 2166136261
+    for ch in s:
+        h = ((h ^ ord(ch)) * 16777619) & 0x7FFFFFFF
+    return h
+
+
+def abstract(schema, dtype_override=None):
+    """Schema -> pytree of ShapeDtypeStruct (zero allocation, for .lower())."""
+
+    def leaf(spec: ParamSpec):
+        dt = spec.dtype
+        if dtype_override is not None and jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            dt = dtype_override
+        return jax.ShapeDtypeStruct(spec.shape, dt)
+
+    return jax.tree_util.tree_map(leaf, schema, is_leaf=is_spec)
+
+
+def logical_to_pspec(shape: Sequence[int], logical: Logical,
+                     rules: Mapping[str, Union[str, Tuple[str, ...]]],
+                     mesh_axis_sizes: Mapping[str, int]) -> P:
+    """Map logical axes to mesh axes, dropping any non-divisible assignment.
+
+    ``rules`` maps a logical axis name to a mesh axis name (or tuple of mesh
+    axis names for multi-axis sharding).  An assignment is kept only when the
+    dimension size divides evenly by the product of the mesh axis sizes —
+    otherwise that dimension is replicated.  Mesh axes may be used at most
+    once per tensor.
+    """
+    out = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        assign = rules.get(name) if name is not None else None
+        if assign is None:
+            out.append(None)
+            continue
+        axes = (assign,) if isinstance(assign, str) else tuple(assign)
+        if any(a in used for a in axes):
+            out.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= mesh_axis_sizes.get(a, 1)
+        if total <= 1 or dim % total != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def partition_specs(schema, rules, mesh) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf(spec: ParamSpec):
+        return logical_to_pspec(spec.shape, spec.logical, rules, sizes)
+
+    return jax.tree_util.tree_map(leaf, schema, is_leaf=is_spec)
+
+
+def stack(schema, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacking dimension (for scan-over-layers segments)."""
+
+    def leaf(spec: ParamSpec):
+        return ParamSpec((n,) + spec.shape, (axis_name,) + spec.logical,
+                         spec.init, spec.scale, spec.dtype)
+
+    return jax.tree_util.tree_map(leaf, schema, is_leaf=is_spec)
+
+
+def zeros(schema):
+    """Schema -> deterministic-init arrays (cache initialization).  Respects
+    zeros/ones/constant; any stochastic init also becomes zeros."""
+
+    def leaf(s: ParamSpec):
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "constant":
+            return jnp.full(s.shape, s.scale, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map(leaf, schema, is_leaf=is_spec)
+
+
+def count_params(schema) -> int:
+    return sum(s.size for s in jax.tree_util.tree_leaves(schema, is_leaf=is_spec)
+               if is_spec(s))
+
+
+def cast_floating(tree, dtype):
+    def leaf(x):
+        if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(leaf, tree)

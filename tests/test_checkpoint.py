@@ -1,0 +1,43 @@
+"""Checkpoint round-trip + save-best policy tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager, load, save
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                   "b": jnp.zeros(3, jnp.bfloat16)},
+        "opt": ({}, {"step": jnp.int32(7), "m": [jnp.ones(2)]}),
+        "meta": {"name": "x", "lr": 0.01, "flag": True, "none": None},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(tmp_path / "ck.msgpack", t)
+    r = load(tmp_path / "ck.msgpack")
+    assert r["meta"] == {"name": "x", "lr": 0.01, "flag": True, "none": None}
+    np.testing.assert_array_equal(r["params"]["w"],
+                                  np.asarray(t["params"]["w"]))
+    assert r["params"]["b"].dtype == np.dtype("bfloat16") or \
+        str(r["params"]["b"].dtype) == "bfloat16"
+    assert isinstance(r["opt"], tuple)
+    assert r["opt"][1]["step"] == 7
+
+
+def test_manager_keep_and_best(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in range(5):
+        mgr.save_step(s, {"v": jnp.float32(s)})
+    ckpts = sorted((tmp_path).glob("step_*.msgpack"))
+    assert len(ckpts) == 2
+    latest = mgr.latest()
+    assert float(latest["v"]) == 4.0
+
+    assert mgr.save_best(3.0, {"v": jnp.float32(1)})
+    assert not mgr.save_best(4.0, {"v": jnp.float32(2)})   # worse: rejected
+    assert mgr.save_best(2.0, {"v": jnp.float32(3)})
+    assert float(mgr.best()["v"]) == 3.0

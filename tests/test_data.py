@@ -1,0 +1,72 @@
+"""Synthetic clinical generator + LM pipeline tests."""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import synthetic as syn
+from repro.data.lm_pipeline import LMPipelineConfig, TokenPipeline
+
+
+def test_one_value_per_tick():
+    s = syn.make_patient(np.random.default_rng(0), "carevue", 200)
+    assert s.channels.shape == (200,)
+    assert s.nf == 4
+    assert (s.channels <= s.nf).all()
+    assert np.all(np.diff(s.times) > 0)        # irregular but increasing
+
+
+def test_hospitals_are_heterogeneous():
+    a = syn.HOSPITALS["carevue"]["features"]
+    b = syn.HOSPITALS["metavision"]["features"]
+    assert {f[0] for f in a} != {f[0] for f in b}   # different feature spaces
+    assert syn.HOSPITALS["metavision"]["n_patients"] < \
+        syn.HOSPITALS["carevue"]["n_patients"]      # smaller target domain
+
+
+def test_splits_disjoint():
+    d = syn.make_hospital("metavision", n_patients=20, n_events=50)
+    tr, va, te = (set(d.splits[k]) for k in ("train", "valid", "test"))
+    assert not (tr & va) and not (tr & te) and not (va & te)
+    assert len(tr | va | te) == 20
+
+
+def test_relabel_roundtrip_counts():
+    s = syn.make_patient(np.random.default_rng(1), "carevue", 300)
+    for lbl in range(s.nf + 1):
+        r = syn.relabel(s, lbl)
+        assert (r.channels == r.nf).sum() == (s.channels == lbl).sum()
+
+
+def test_lm_pipeline_deterministic():
+    cfg = smoke_config("qwen3-0.6b")
+    p = TokenPipeline(LMPipelineConfig(batch=2, seq_len=32,
+                                       vocab_size=cfg.vocab_size), cfg)
+    b1, b2 = p.batch_at(3), p.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = p.batch_at(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].max() < cfg.vocab_size
+
+
+def test_vlm_pipeline_shapes():
+    cfg = smoke_config("qwen2-vl-7b")
+    p = TokenPipeline(LMPipelineConfig(batch=2, seq_len=64,
+                                       vocab_size=cfg.vocab_size,
+                                       n_patches=16), cfg)
+    b = p.batch_at(0)
+    assert b["image_embeds"].shape[:2] == (2, 16)
+    assert b["positions"].shape == (3, 2, 64)
+    # patch grid positions: h/w vary within the image prefix, t constant
+    assert b["positions"][0, 0, :16].max() == 0
+    assert b["positions"][1, 0, :16].max() > 0
+
+
+def test_audio_delay_pattern():
+    cfg = smoke_config("musicgen-medium")
+    p = TokenPipeline(LMPipelineConfig(batch=1, seq_len=32,
+                                       vocab_size=cfg.vocab_size), cfg)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (1, cfg.n_codebooks, 32)
+    # delay pattern: codebook k is right-shifted by k (zeros in front)
+    for k in range(cfg.n_codebooks):
+        assert (b["tokens"][0, k, :k] == 0).all()

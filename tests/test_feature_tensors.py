@@ -1,0 +1,87 @@
+"""Unit + hypothesis property tests for the paper's §3 feature tensors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.feature_tensors import (EventStream, pack_feature_tensors,
+                                        pack_feature_tensors_ref)
+
+
+def make_stream(channels, values=None):
+    channels = np.asarray(channels, np.int32)
+    nf = int(channels.max())  # label = max channel id by construction here
+    if values is None:
+        values = np.arange(1.0, len(channels) + 1.0, dtype=np.float32)
+    times = np.cumsum(np.ones(len(channels), np.float32))
+    return EventStream(channels=channels, values=np.asarray(values, np.float32),
+                       times=times, nf=nf)
+
+
+def test_sparse_tensor_is_raw_window():
+    # channels: f0 f1 f0 label  (nf=2)
+    s = make_stream([0, 1, 0, 2], [10, 20, 30, 99])
+    xs, xd, y = pack_feature_tensors(s, w=3)
+    assert y.tolist() == [99.0]
+    # window looks back from the label tick: ticks 2,1,0 -> f0=30, f1=20, f0=10
+    assert xs[0, 0].tolist() == [30.0, 0.0, 10.0]
+    assert xs[0, 1].tolist() == [0.0, 20.0, 0.0]
+
+
+def test_dense_tensor_is_last_available():
+    s = make_stream([0, 0, 0, 1, 2], [1, 2, 3, 7, 99])
+    xs, xd, y = pack_feature_tensors(s, w=2)
+    # dense: most recent w available values of each feature
+    assert xd[0, 0].tolist() == [3.0, 2.0]
+    assert xd[0, 1].tolist() == [7.0, 0.0]   # only one observation yet
+
+
+def test_multiple_labels_accumulate_history():
+    s = make_stream([0, 2, 0, 2], [5, 90, 6, 91])
+    xs, xd, y = pack_feature_tensors(s, w=2)
+    assert y.tolist() == [90.0, 91.0]
+    assert xd[0, 0].tolist() == [5.0, 0.0]
+    assert xd[1, 0].tolist() == [6.0, 5.0]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nf=st.integers(1, 4),
+    w=st.integers(1, 5),
+    n=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fast_packing_matches_oracle(nf, w, n, seed):
+    rng = np.random.default_rng(seed)
+    channels = rng.integers(0, nf + 1, size=n).astype(np.int32)
+    values = rng.normal(size=n).astype(np.float32)
+    times = np.cumsum(rng.exponential(size=n)).astype(np.float32)
+    s = EventStream(channels=channels, values=values, times=times, nf=nf)
+    xs1, xd1, y1 = pack_feature_tensors(s, w)
+    xs2, xd2, y2 = pack_feature_tensors_ref(s, w)
+    np.testing.assert_allclose(xs1, xs2)
+    np.testing.assert_allclose(xd1, xd2)
+    np.testing.assert_allclose(y1, y2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(nf=st.integers(1, 3), w=st.integers(1, 4), seed=st.integers(0, 10**6))
+def test_dense_rows_are_time_ordered_suffixes(nf, w, seed):
+    """Property: each dense row at label k+1 extends/shifts the row at k."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    channels = rng.integers(0, nf + 1, size=n).astype(np.int32)
+    values = rng.normal(size=n).astype(np.float32)
+    s = EventStream(channels=channels, values=values,
+                    times=np.arange(n, dtype=np.float32), nf=nf)
+    xs, xd, y = pack_feature_tensors(s, w)
+    # between consecutive labels, a feature's dense row either stays the same
+    # (no new observation) or is shifted right by the new values
+    for k in range(1, len(y)):
+        for i in range(nf):
+            prev, cur = xd[k - 1, i], xd[k, i]
+            ok = np.array_equal(prev, cur)
+            if not ok:
+                # some shift amount 1..w must explain it
+                ok = any(np.array_equal(cur[m:], prev[: w - m])
+                         for m in range(1, w + 1))
+            assert ok, (prev, cur)

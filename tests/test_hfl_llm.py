@@ -1,0 +1,65 @@
+"""HFL-for-transformers tests: shared-subtree masking, blend step semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.hfl_llm import (default_shared_predicate, make_blend_step,
+                                shared_fraction, shared_mask)
+from repro.models import model as M
+from repro.sharding import spec as S
+
+
+def test_shared_excludes_experts_and_recurrence():
+    assert not default_shared_predicate(("seg0", "l0", "moe", "wg"))
+    assert not default_shared_predicate(("seg0", "l0", "rglru", "w_in"))
+    assert not default_shared_predicate(("vis_proj",))
+    assert default_shared_predicate(("seg0", "l0", "attn", "wq"))
+    assert default_shared_predicate(("embed",))
+    assert default_shared_predicate(("seg0", "l0", "mlstm", "wu"))
+    assert not default_shared_predicate(("seg0", "l0", "mlstm", "wi"))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "olmoe-1b-7b", "xlstm-350m"])
+def test_partial_sharing_fraction(arch):
+    """Security property: strictly part of the network is shared."""
+    f = shared_fraction(smoke_config(arch))
+    assert 0.0 < f < 1.0
+
+
+def test_blend_step_moves_only_shared_leaves():
+    cfg = smoke_config("qwen3-0.6b")
+    schema = M.model_schema(cfg)
+    p0 = S.materialize(schema, jax.random.PRNGKey(0))
+    p1 = S.materialize(schema, jax.random.PRNGKey(1))
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]), p0, p1)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 2, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    blend = make_blend_step(cfg, alpha=0.2, dtype=jnp.float32)
+    new_params, losses = jax.jit(blend)(stacked, batch)
+    assert losses.shape == (2, 2)
+    mask = shared_mask(cfg)
+    flat_mask = jax.tree_util.tree_leaves(mask)
+    for m, old, new in zip(flat_mask, jax.tree_util.tree_leaves(stacked),
+                           jax.tree_util.tree_leaves(new_params)):
+        if not m:
+            np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_blend_selects_lower_loss_candidate():
+    """If candidate j has much lower loss for client c, blending must pull
+    client c's shared params toward candidate j (Eq. 7 -> Eq. 8)."""
+    cfg = smoke_config("qwen3-0.6b")
+    schema = M.model_schema(cfg)
+    p0 = S.materialize(schema, jax.random.PRNGKey(0))
+    # candidate 1 = candidate 0 scaled: identical clients -> diagonal argmin
+    stacked = jax.tree_util.tree_map(lambda a: jnp.stack([a, a * 1.5]), p0)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 2, 16), 0,
+                                cfg.vocab_size)
+    blend = make_blend_step(cfg, alpha=0.5, dtype=jnp.float32)
+    new_params, losses = jax.jit(blend)(stacked, {"tokens": tokens})
+    assert bool(jnp.all(jnp.isfinite(losses)))

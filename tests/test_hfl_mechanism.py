@@ -1,0 +1,132 @@
+"""Unit tests for the HFL mechanism: Eq. 7 selection, Eq. 8 blend, switch,
+pool asynchrony (paper §4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import networks as N
+from repro.core.hfl import (FederatedClient, HeadPool, HFLConfig, blend,
+                            federated_round, pool_errors)
+from repro.sharding import spec as S
+
+
+def _head(seed, w=3):
+    return S.materialize(N.head_schema(w), jax.random.PRNGKey(seed))
+
+
+def _stack(heads):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *heads)
+
+
+def test_selection_picks_min_error_head():
+    w, R = 3, 50
+    heads = [_head(i) for i in range(5)]
+    xd = jax.random.normal(jax.random.PRNGKey(9), (R, w))
+    # construct y to exactly match head 3's predictions
+    y = N.head_apply(heads[3], xd)
+    errs = pool_errors(_stack(heads), xd, y)
+    assert int(jnp.argmin(errs)) == 3
+    assert float(errs[3]) < 1e-10
+
+
+def test_blend_is_convex_combination():
+    a, b = _head(0), _head(1)
+    out = blend(_stack([a]), _stack([b]), alpha=0.25)
+    for pa, pb, po in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b),
+                          jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(po[0], 0.25 * pb + 0.75 * pa, rtol=1e-6)
+
+
+def test_blend_alpha_zero_is_identity():
+    a, b = _head(0), _head(1)
+    out = blend(_stack([a]), _stack([b]), alpha=0.0)
+    for pa, po in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(po[0], pa)
+
+
+def test_pool_keeps_stale_versions():
+    pool = HeadPool()
+    h0 = _stack([_head(0), _head(1)])
+    pool.publish("alice", h0, nf=2)
+    h1 = _stack([_head(2), _head(3)])
+    pool.publish("bob", h1, nf=2)
+    stacked, keys = pool.stacked_for("carol")
+    assert len(keys) == 4
+    # bob goes silent; alice republishes - bob's stale entries must remain
+    pool.publish("alice", _stack([_head(5), _head(6)]), nf=2)
+    stacked2, keys2 = pool.stacked_for("carol")
+    assert len(keys2) == 4
+    assert ("bob", 0) in keys2 and ("bob", 1) in keys2
+
+
+def _mk_client(mode="hfl", seed=0, n=120):
+    rng = np.random.default_rng(seed)
+    cfg = HFLConfig(mode=mode, epochs=1, R=20)
+    mk = lambda m: (rng.normal(size=(m, 2, 3)).astype(np.float32),
+                    rng.normal(size=(m, 2, 3)).astype(np.float32),
+                    rng.normal(size=m).astype(np.float32))
+    return FederatedClient("c", 2, cfg, mk(n), mk(30), mk(30),
+                           jax.random.PRNGKey(seed))
+
+
+def test_switch_requires_plateau():
+    c = _mk_client("hfl")
+    c.val_history = [5.0, 4.0, 3.0]        # still improving
+    assert not c.fl_active()
+    c.val_history = [5.0, 3.0, 3.5, 3.4, 3.6]  # 3 epochs >= best-before
+    assert c.fl_active()
+    c.val_history = [5.0, 3.0, 3.5, 2.9, 3.6]  # improved 2 epochs ago
+    assert not c.fl_active()
+
+
+def test_mode_gates():
+    c = _mk_client("no")
+    c.val_history = [5, 5, 5, 5, 5]
+    assert not c.fl_active()
+    c = _mk_client("always")
+    assert c.fl_active()
+    c = _mk_client("random")
+    assert c.fl_active()
+
+
+def test_federated_round_blends_toward_selected():
+    c = _mk_client("always")
+    pool = HeadPool()
+    other = _stack([_head(7), _head(8)])
+    pool.publish("other", other, nf=2)
+    xs, xd, y = c.train
+    c._recent = (xd[:20], y[:20])
+    before = jax.tree_util.tree_map(lambda x: x.copy(), c.params["heads"])
+    chosen = federated_round(c, pool, np.random.default_rng(0))
+    assert chosen is not None and len(chosen) == 2
+    # heads must have moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(c.params["heads"])))
+    assert moved
+
+
+def test_random_mode_ignores_errors():
+    c = _mk_client("random")
+    pool = HeadPool()
+    pool.publish("other", _stack([_head(7), _head(8), _head(9)]), nf=3)
+    xs, xd, y = c.train
+    c._recent = (xd[:20], y[:20])
+    rng = np.random.default_rng(123)
+    seen = set()
+    for _ in range(10):
+        seen.update(federated_round(c, pool, rng))
+    assert len(seen) > 1  # random selection explores
+
+
+def test_pool_kernel_matches_vmap_scoring():
+    heads = _stack([_head(i) for i in range(6)])
+    xd = jax.random.normal(jax.random.PRNGKey(1), (50, 3))
+    y = jax.random.normal(jax.random.PRNGKey(2), (50,))
+    from repro.kernels.pool_mlp.ops import pool_mlp_errors
+    np.testing.assert_allclose(pool_mlp_errors(heads, xd, y, block_pool=4),
+                               pool_errors(heads, xd, y), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm.ops import mlstm_chunkwise
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.pool_mlp.ops import pool_mlp_errors
+from repro.kernels.pool_mlp.ref import pool_errors_ref
+from repro.kernels.rg_lru.ops import rglru_scan
+from repro.kernels.rg_lru.ref import linear_scan_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,KV,D", [
+    (256, 4, 4, 64),     # MHA
+    (256, 4, 2, 64),     # GQA
+    (512, 8, 1, 32),     # MQA
+    (128, 2, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(S, H, KV, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                        v.swapaxes(1, 2)).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap", [(64, 0.0), (None, 30.0),
+                                            (32, 20.0), (1, 0.0)])
+def test_flash_attention_window_softcap(window, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, KV, D = 1, 256, 2, 1, 64
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    out = flash_attention(q, k, v, window=window, logit_softcap=softcap)
+    ref = attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                        window=window, logit_softcap=softcap).swapaxes(1, 2)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, KV, D = 1, 512, 2, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+    o1 = flash_attention_bhsd(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                              v.swapaxes(1, 2), bq=128, bkv=256)
+    o2 = flash_attention_bhsd(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                              v.swapaxes(1, 2), bq=512, bkv=64)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rg_lru linear scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,d,chunk", [(256, 32, 64), (128, 128, 128),
+                                       (512, 16, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rglru_scan_shapes(S, d, chunk, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    B = 2
+    a = jax.nn.sigmoid(jax.random.normal(k1, (B, S, d), dtype))
+    b = jax.random.normal(k2, (B, S, d), dtype)
+    out = rglru_scan(a, b, chunk=chunk)
+    ref = linear_scan_ref(a, b)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_chunk_invariance():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = jax.nn.sigmoid(jax.random.normal(k1, (1, 256, 8)))
+    b = jax.random.normal(k2, (1, 256, 8))
+    o1 = rglru_scan(a, b, chunk=32)
+    o2 = rglru_scan(a, b, chunk=256)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlstm chunkwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,dh,chunk", [(256, 2, 32, 64), (128, 4, 16, 32),
+                                          (256, 1, 64, 128)])
+def test_mlstm_chunkwise_shapes(S, H, dh, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh)) / jnp.sqrt(dh)
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = 2.0 + jax.random.normal(ks[4], (B, S, H))
+    out = mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    ref = mlstm_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+def test_mlstm_extreme_gates_stable():
+    """Stabilizer property: huge input gates / tiny forget gates must not
+    produce NaN/Inf (the m-trick)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, S, H, dh = 1, 128, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = 40.0 + jax.random.normal(ks[3], (B, S, H))
+    fg = -40.0 + jax.random.normal(ks[4], (B, S, H))
+    out = mlstm_chunkwise(q, k, v, ig, fg, chunk=32)
+    ref = mlstm_ref(q, k, v, ig, fg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pool_mlp (Eq. 7 fused scoring)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ns,R,w,bp", [(10, 50, 3, 8), (4, 20, 5, 4),
+                                       (16, 50, 3, 16), (3, 7, 2, 8)])
+def test_pool_mlp_shapes(ns, R, w, bp):
+    from repro.core.networks import head_schema
+    from repro.sharding import spec as S
+
+    pool = [S.materialize(head_schema(w), jax.random.PRNGKey(i))
+            for i in range(ns)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pool)
+    xd = jax.random.normal(jax.random.PRNGKey(99), (R, w))
+    y = jax.random.normal(jax.random.PRNGKey(98), (R,))
+    out = pool_mlp_errors(stacked, xd, y, block_pool=bp)
+    ref = pool_errors_ref(stacked, xd, y)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+    assert int(jnp.argmin(out)) == int(jnp.argmin(ref))

