@@ -1,0 +1,117 @@
+"""Federated-round scaling benchmark: sequential oracle vs batched engine.
+
+  PYTHONPATH=src python -m benchmarks.fl_scale_bench [--clients 2,8,32,128]
+
+Sweeps the number of simulated hospitals and reports, per engine, the mean
+wall time of one federated sub-round (train step + selection + blend +
+publication for every client) and the round throughput in client-rounds/s.
+The sequential engine dispatches C train steps, C x nf pool scorings, and
+C x nf host-side argmin syncs per sub-round; the batched engine dispatches
+one vmapped step and one fused scan.  Each engine run is preceded by an
+identically-shaped warmup run so compile time is excluded.
+
+Uses deterministic random tensors (not the synthetic-hospital generator) so
+the sweep measures the engine, not data generation; ``--population`` switches
+to `repro.data.synthetic.make_population` data instead.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.core.hfl import FederatedClient, HFLConfig, run_federated_training
+
+
+def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
+                  population: bool):
+    if population:
+        from repro.core.experiment import population_task_data
+        # ~1/5 of events are label ticks, so size the streams to give each
+        # patient enough packed samples for the requested sub-round count
+        packs = population_task_data(C, w, seed=0, n_patients=6,
+                                     n_events=max(10 * n, 300), nf=nf)
+        return [FederatedClient(p["name"], nf, cfg, p["train"], p["valid"],
+                                p["test"], jax.random.PRNGKey(31 * i))
+                for i, p in enumerate(packs)]
+    out = []
+    for i in range(C):
+        rng = np.random.default_rng(1000 + i)
+        mk = lambda m: (rng.normal(size=(m, nf, w)).astype(np.float32),
+                        rng.normal(size=(m, nf, w)).astype(np.float32),
+                        rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"h{i:03d}", nf, cfg, mk(n), mk(2 * cfg.R),
+                                   mk(2 * cfg.R), jax.random.PRNGKey(i)))
+    return out
+
+
+def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
+              population: bool):
+    clients = _make_clients(C, cfg, nf, n, cfg.w, population)
+    # population data has a data-dependent (truncated) length, so the
+    # sub-round count must come from the actual tensors, not from n
+    n_eff = len(clients[0].train[2])
+    sub_rounds = cfg.epochs * max(0, (n_eff - cfg.R) // cfg.R + 1)
+    if sub_rounds == 0:
+        raise SystemExit(
+            f"train split too short for a single sub-round "
+            f"(n={n_eff} < R={cfg.R}); raise --batches or the data sizes")
+    t0 = time.perf_counter()
+    hist = run_federated_training(clients, cfg, engine=engine)
+    elapsed = time.perf_counter() - t0
+    total_rounds = sum(h["rounds"] for h in hist.values())
+    assert total_rounds == C * sub_rounds, (total_rounds, C, sub_rounds)
+    return elapsed, sub_rounds
+
+
+def bench(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
+          population: bool):
+    _run_once(engine, C, cfg, nf, n, population)          # warmup + compile
+    elapsed, sub_rounds = _run_once(engine, C, cfg, nf, n, population)
+    return {
+        "round_ms": 1e3 * elapsed / sub_rounds,           # all C clients
+        "client_rounds_per_s": C * sub_rounds / elapsed,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", default="2,8,32,128")
+    ap.add_argument("--engines", default="sequential,batched")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--R", type=int, default=20)
+    ap.add_argument("--nf", type=int, default=4)
+    ap.add_argument("--batches", type=int, default=3,
+                    help="train sub-rounds per epoch")
+    ap.add_argument("--population", action="store_true",
+                    help="use generated N-hospital data instead of random "
+                         "tensors")
+    args = ap.parse_args()
+    counts = [int(x) for x in args.clients.split(",")]
+    engines = args.engines.split(",")
+    cfg = HFLConfig(mode="always", epochs=args.epochs, R=args.R)
+    n = args.batches * args.R
+
+    print("clients,engine,round_ms,client_rounds_per_s,speedup_vs_sequential")
+    for C in counts:
+        rows = {}
+        for engine in engines:
+            rows[engine] = bench(engine, C, cfg, args.nf, n, args.population)
+        for engine in engines:
+            r = rows[engine]
+            speedup = (r["client_rounds_per_s"]
+                       / rows["sequential"]["client_rounds_per_s"]
+                       if "sequential" in rows else float("nan"))
+            print(f"{C},{engine},{r['round_ms']:.2f},"
+                  f"{r['client_rounds_per_s']:.1f},{speedup:.2f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

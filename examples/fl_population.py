@@ -1,0 +1,59 @@
+"""N-hospital federated population on the batched engine.
+
+  PYTHONPATH=src python examples/fl_population.py [--clients 16]
+
+Generates `--clients` synthetic hospitals (each observing the shared latent
+physiology through its own perturbed observation operator — see
+repro.data.synthetic.population_spec), then trains them as one federated
+population with the batched multi-client engine: every Adam step is vmapped
+across hospitals and each federated opportunity runs as ONE fused
+selection+blend scan (Eq. 7 argmin + Eq. 8 blending for all clients and
+features, no host sync).  `--engine sequential` runs the reference oracle
+instead — same selections, ~an order of magnitude slower at this scale.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.experiment import train_population
+from repro.core.hfl import HFLConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--engine", choices=("batched", "sequential"),
+                    default="batched")
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--patients", type=int, default=10)
+    ap.add_argument("--events", type=int, default=300)
+    ap.add_argument("--mode", default="hfl",
+                    choices=("hfl", "no", "random", "always"))
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    cfg = HFLConfig(epochs=args.epochs, mode=args.mode, R=20)
+    print(f"== {args.clients}-hospital population, engine={args.engine}, "
+          f"mode={args.mode} ==")
+    t0 = time.time()
+    hist = train_population(args.clients, cfg, engine=args.engine,
+                            n_patients=args.patients, n_events=args.events,
+                            verbose=args.verbose)
+    wall = time.time() - t0
+    tests = sorted((h["test"], name, h["rounds"]) for name, h in hist.items())
+    total_rounds = sum(h["rounds"] for h in hist.values())
+    print(f"{'hospital':>10} {'test MSE':>12} {'fed rounds':>10}")
+    for mse, name, rounds in tests[:5]:
+        print(f"{name:>10} {mse:12.2f} {rounds:10d}")
+    if len(tests) > 5:
+        print(f"{'...':>10} ({len(tests) - 5} more hospitals)")
+    print(f"=> {total_rounds} federated rounds across {args.clients} "
+          f"hospitals in {wall:.1f}s "
+          f"({total_rounds / wall:.1f} client-rounds/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -177,6 +177,65 @@ def train_hfl(target: str, label_idx: int, cfg: HFLConfig, seed: int = 0,
             "source_test": hist[source]["test"] * s_scale}
 
 
+# ---------------------------------------------------------------------------
+# N-hospital populations (batched-engine scale-out)
+# ---------------------------------------------------------------------------
+
+def _truncate_common(packs: List[dict]) -> List[dict]:
+    """Truncate every client's split tensors to the population-wide minimum
+    length so they stack along a leading client axis (batched engine)."""
+    out = []
+    mins = {s: min(len(p[s][2]) for p in packs)
+            for s in ("train", "valid", "test")}
+    for p in packs:
+        q = dict(p)
+        for s in ("train", "valid", "test"):
+            q[s] = tuple(a[:mins[s]] for a in p[s])
+        out.append(q)
+    return out
+
+
+def population_task_data(n_clients: int, w: int, seed: int = 0,
+                         n_patients: int = 10, n_events: int = 300,
+                         nf: int = 4) -> List[dict]:
+    """Packed per-hospital tensors for an N-hospital generated population,
+    truncated to common split lengths (stackable for the batched engine)."""
+    pop = syn.make_population(n_clients, seed=seed, nf=nf,
+                              n_patients=n_patients, n_events=n_events)
+    packs = []
+    for data in pop:
+        streams, mu_y, sd_y = _normalize_streams(data)
+        data = syn.HospitalData(data.name, data.feature_names, streams,
+                                data.splits)
+        packed = {"name": data.name}
+        for split in ("train", "valid", "test"):
+            packed[split] = syn.packed_split(data, split, w)
+        packed["label_var"] = sd_y * sd_y
+        packs.append(packed)
+    return _truncate_common(packs)
+
+
+def train_population(n_clients: int, cfg: HFLConfig, engine: str = "batched",
+                     seed: int = 0, n_patients: int = 10,
+                     n_events: int = 300, verbose: bool = False
+                     ) -> Dict[str, Dict[str, float]]:
+    """Federated training over an N-hospital generated population.  Returns
+    the per-client history with test/best_val rescaled to raw units."""
+    packs = population_task_data(n_clients, cfg.w, seed, n_patients, n_events)
+    nf = packs[0]["train"][0].shape[1]
+    clients = [
+        FederatedClient(p["name"], nf, cfg, p["train"], p["valid"], p["test"],
+                        jax.random.PRNGKey(seed + 31 * i))
+        for i, p in enumerate(packs)]
+    hist = run_federated_training(clients, cfg, verbose=verbose,
+                                  engine=engine)
+    for p in packs:
+        h = hist[p["name"]]
+        h["test"] *= p["label_var"]
+        h["best_val"] *= p["label_var"]
+    return hist
+
+
 def run_task(target: str, label_idx: int, systems: Sequence[str],
              cfg: HFLConfig, seed: int = 0, n_patients=None,
              n_events: int = 400) -> Dict[str, Dict[str, float]]:

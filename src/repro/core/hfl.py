@@ -15,10 +15,23 @@ Implements, faithfully:
 Training protocol per the paper §4.2/§5.2: one gradient-descent update per R
 consecutive periods (batch = R samples), Adam lr 0.01, 50 epochs, save-best
 on validation.
+
+Two execution engines (see docs/ARCHITECTURE.md):
+  * ``engine="sequential"`` — the reference oracle: a Python loop over
+    clients with an explicit :class:`HeadPool` object, per-feature scoring
+    and host-side argmin.  Handles heterogeneous feature counts and
+    ragged per-client data lengths.
+  * ``engine="batched"`` — client parameters stacked along a leading axis,
+    the Adam step ``vmap``-ed across clients, and selection+blend for all
+    nf features fused into ONE jitted scan over clients (no per-feature
+    Python loop, no host sync inside a round).  Requires homogeneous
+    clients (same nf, same data shapes).  Matches the sequential oracle's
+    selections exactly and its head params to float tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -43,9 +56,51 @@ class HFLConfig:
     seed: int = 0
 
 
+def switch_active(val_history: Sequence[float], cfg: HFLConfig) -> bool:
+    """Switching mechanism: FL only when validation has plateaued for
+    `patience` epochs (always/random modes bypass; no disables)."""
+    mode = cfg.mode
+    if mode == "no":
+        return False
+    if mode in ("always", "random"):
+        return True
+    h = val_history
+    p = cfg.patience
+    if p <= 0:                   # zero-patience: eligible from epoch 1 on
+        return len(h) > 0
+    if len(h) < p + 1:
+        return False
+    best_before = min(h[:-p])
+    return all(v >= best_before for v in h[-p:])
+
+
 # ---------------------------------------------------------------------------
 # Client
 # ---------------------------------------------------------------------------
+
+def _train_step(opt, params, opt_state, xs, xd, y):
+    """One Adam update on one client's R-batch.  The SINGLE definition both
+    engines build on — sequential jits it directly, batched vmaps it — so
+    they cannot drift apart."""
+    (loss, parts), grads = jax.value_and_grad(
+        N.hfl_loss, has_aux=True)(params, xs, xd, y)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
+
+
+def _eval_mse(params, xs, xd, y):
+    y_hat, _ = N.hfl_forward(params, xs, xd)
+    return jnp.mean((y - y_hat) ** 2)
+
+
+@functools.lru_cache(maxsize=None)
+def _client_fns(lr: float):
+    """Per-lr shared (optimizer, jitted train step, jitted eval) so N clients
+    compile once, not N times."""
+    opt = adam(lr)
+    return (opt, jax.jit(functools.partial(_train_step, opt)),
+            jax.jit(_eval_mse))
+
 
 class FederatedClient:
     """One hospital: local data, local model, recent-R scoring buffer."""
@@ -56,27 +111,12 @@ class FederatedClient:
         self.train, self.valid, self.test = train, valid, test  # (xs, xd, y)
         schema = N.hfl_schema(nf, cfg.w)
         self.params = S.materialize(schema, rng)
-        self.opt = adam(cfg.lr)
+        self.opt, self._train_step, self._eval_mse = _client_fns(cfg.lr)
         self.opt_state = self.opt.init(self.params)
         self.val_history: List[float] = []
         self.best_val = np.inf
         self.best_params = self.params
         self._recent: Optional[Tuple[np.ndarray, np.ndarray]] = None  # xd, y
-
-        @jax.jit
-        def _train_step(params, opt_state, xs, xd, y):
-            (loss, parts), grads = jax.value_and_grad(
-                N.hfl_loss, has_aux=True)(params, xs, xd, y)
-            updates, opt_state = self.opt.update(grads, opt_state, params)
-            return apply_updates(params, updates), opt_state, loss
-
-        @jax.jit
-        def _eval_mse(params, xs, xd, y):
-            y_hat, _ = N.hfl_forward(params, xs, xd)
-            return jnp.mean((y - y_hat) ** 2)
-
-        self._train_step = _train_step
-        self._eval_mse = _eval_mse
 
     def train_epoch(self) -> None:
         xs, xd, y = self.train
@@ -106,19 +146,7 @@ class FederatedClient:
             self.best_params = self.params
 
     def fl_active(self) -> bool:
-        """Switching mechanism: FL only when validation has plateaued for
-        `patience` epochs (always/random modes bypass; no disables)."""
-        mode = self.cfg.mode
-        if mode == "no":
-            return False
-        if mode in ("always", "random"):
-            return True
-        h = self.val_history
-        p = self.cfg.patience
-        if len(h) < p + 1:
-            return False
-        best_before = min(h[:-p])
-        return all(v >= best_before for v in h[-p:])
+        return switch_active(self.val_history, self.cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -159,16 +187,24 @@ def pool_errors(pool_stacked, xd_i, y):
     """Mean squared preliminary-prediction error of every pool head on the
     client's last-R dense vectors of feature i.  xd_i: (R, w); y: (R,).
     Returns (ns,)."""
-    def one(head):
-        return jnp.mean((y - N.head_apply(head, xd_i)) ** 2)
-
-    return jax.vmap(one)(pool_stacked)
+    preds = N.head_pool_apply(pool_stacked, xd_i)      # (ns, R)
+    return jnp.mean((y[None, :] - preds) ** 2, axis=1)
 
 
 def pool_errors_kernel(pool_stacked, xd_i, y):
     """TPU Pallas fused pool sweep (see src/repro/kernels/pool_mlp)."""
     from repro.kernels.pool_mlp.ops import pool_mlp_errors
     return pool_mlp_errors(pool_stacked, xd_i, y)
+
+
+def pool_kernel_available() -> bool:
+    """ImportError only — a genuinely broken kernel module must surface, not
+    silently fall back to the vmap path."""
+    try:
+        from repro.kernels.pool_mlp.ops import pool_mlp_errors  # noqa: F401
+        return True
+    except ImportError:
+        return False
 
 
 @jax.jit
@@ -210,13 +246,206 @@ def federated_round(client: FederatedClient, pool: HeadPool,
 
 
 # ---------------------------------------------------------------------------
+# Fused multi-client selection + blend (batched engine)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nf", "mode", "use_kernel"))
+def fused_selection_round(heads, pool_heads, xd_R, y_R, active, alpha, key,
+                          *, nf: int, mode: str, use_kernel: bool):
+    """One federated opportunity for ALL clients, fused into a single jitted
+    scan — replaces C x nf Python-level `pool_errors` calls and C x nf
+    host-side argmin syncs with one device program.
+
+    The scan walks clients in their processing order, carrying the pool so
+    that client i scores the heads already republished by clients < i in the
+    same sub-round — exactly the sequential oracle's interleaving.
+
+    heads, pool_heads: head params stacked to (C, nf, ...);
+    xd_R: (C, R, nf, w); y_R: (C, R); active: (C,) bool; key: PRNG key
+    (random mode only).  Returns (new_heads, new_pool, chosen) where chosen
+    is (C, nf) int32 flat indices into the row-major (client, feature) pool
+    (-1 where the client was inactive)."""
+    C = y_R.shape[0]
+    ns = C * nf
+
+    def flat(pool):
+        return jax.tree_util.tree_map(
+            lambda p: p.reshape((ns,) + p.shape[2:]), pool)
+
+    def body(carry, inp):
+        heads, pool = carry
+        i, key_i = inp
+        fp = flat(pool)
+        xd_i = jnp.moveaxis(xd_R[i], 1, 0)           # (nf, R, w)
+        if mode == "random":
+            # uniform over the ns - nf foreign entries, mapped to full index
+            e = jax.random.randint(key_i, (nf,), 0, ns - nf)
+            j = jnp.where(e >= i * nf, e + nf, e)
+        else:
+            if use_kernel:
+                from repro.kernels.pool_mlp.ops import pool_mlp_errors_features
+                errs = pool_mlp_errors_features(fp, xd_i, y_R[i])
+            else:
+                errs = jax.vmap(
+                    lambda xf: pool_errors(fp, xf, y_R[i]))(xd_i)  # (nf, ns)
+            own = (jnp.arange(ns) // nf) == i
+            errs = jnp.where(own[None, :], jnp.inf, errs)
+            j = jnp.argmin(errs, axis=1)             # (nf,)
+        selected = jax.tree_util.tree_map(lambda p: p[j], fp)   # (nf, ...)
+        mine = jax.tree_util.tree_map(lambda h: h[i], heads)
+        blended = blend(mine, selected, alpha)
+        act = active[i]
+        new_mine = jax.tree_util.tree_map(
+            lambda b, m: jnp.where(act, b, m), blended, mine)
+        heads = jax.tree_util.tree_map(
+            lambda h, m: h.at[i].set(m), heads, new_mine)
+        # publication: active clients overwrite their pool row, inactive
+        # clients' stale entries persist (paper's asynchrony semantics)
+        pool = jax.tree_util.tree_map(
+            lambda pl, m: pl.at[i].set(jnp.where(act, m, pl[i])),
+            pool, new_mine)
+        chosen = jnp.where(act, j, -1).astype(jnp.int32)
+        return (heads, pool), chosen
+
+    keys = jax.random.split(key, C)
+    (heads, pool_heads), chosen = jax.lax.scan(
+        body, (heads, pool_heads), (jnp.arange(C), keys))
+    return heads, pool_heads, chosen
+
+
+def _stack_trees(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_row(tree, i):
+    return jax.tree_util.tree_map(lambda p: p[i], tree)
+
+
+def _selection_lut(names: Sequence[str], nf: int) -> np.ndarray:
+    """Map the batched engine's row-major (client, feature) flat pool index
+    to the sequential oracle's excluded, sorted-by-(name, feature) index —
+    so both engines log identical selections."""
+    C = len(names)
+    lut = np.full((C, C * nf), -1, np.int64)
+    for i in range(C):
+        others = sorted((names[j], j) for j in range(C) if j != i)
+        for rank, (_, j) in enumerate(others):
+            for g in range(nf):
+                lut[i, j * nf + g] = rank * nf + g
+    return lut
+
+
+@functools.lru_cache(maxsize=None)
+def _make_batched_fns(lr: float):
+    """vmap-over-clients versions of the exact same per-client step/eval the
+    sequential engine jits (see _train_step / _eval_mse)."""
+    opt = adam(lr)
+    step = jax.jit(jax.vmap(functools.partial(_train_step, opt)))
+    evaluate = jax.jit(jax.vmap(_eval_mse))
+    return step, evaluate
+
+
+def _run_batched(clients: Sequence[FederatedClient], cfg: HFLConfig,
+                 verbose: bool = False):
+    """Batched engine: one vmapped Adam step for all clients per sub-round,
+    one fused selection+blend scan per federated opportunity."""
+    C = len(clients)
+    names = [c.name for c in clients]
+    if len(set(names)) != C:
+        raise ValueError(f"duplicate client names: {names}")
+    nf = clients[0].nf
+    shapes = [tuple(np.shape(a) for a in c.train) for c in clients]
+    if any(c.nf != nf for c in clients) or len(set(shapes)) != 1 or \
+            len({tuple(np.shape(a) for a in c.valid) for c in clients}) != 1 or \
+            len({tuple(np.shape(a) for a in c.test) for c in clients}) != 1:
+        raise ValueError(
+            "engine='batched' requires homogeneous clients (same nf and "
+            "identical train/valid/test shapes); truncate to a common length "
+            "(see experiment.population_task_data) or use "
+            "engine='sequential'")
+
+    xs = jnp.stack([np.asarray(c.train[0]) for c in clients])
+    xd = jnp.stack([np.asarray(c.train[1]) for c in clients])
+    y = jnp.stack([np.asarray(c.train[2]) for c in clients])
+    val = tuple(jnp.stack([np.asarray(c.valid[k]) for c in clients])
+                for k in range(3))
+    tst = tuple(jnp.stack([np.asarray(c.test[k]) for c in clients])
+                for k in range(3))
+
+    params = _stack_trees([c.params for c in clients])
+    opt_state = _stack_trees([c.opt_state for c in clients])
+    pool_heads = params["heads"]                  # initial publication
+    step_fn, eval_fn = _make_batched_fns(cfg.lr)
+    use_kernel = cfg.use_pool_kernel and pool_kernel_available()
+    lut = _selection_lut(names, nf)
+
+    histories = [list(c.val_history) for c in clients]
+    best_val = np.array([c.best_val for c in clients], np.float64)
+    best_params = params
+    n_rounds = np.zeros(C, np.int64)
+    selections: Dict[str, list] = {n: [] for n in names}
+    key = jax.random.PRNGKey(cfg.seed)
+    n, R = int(y.shape[1]), cfg.R
+
+    for epoch in range(cfg.epochs):
+        active = np.array([switch_active(histories[i], cfg)
+                           for i in range(C)])
+        active_dev = jnp.asarray(active)
+        epoch_chosen = []          # device arrays; materialized once/epoch
+        for start in range(0, n - R + 1, R):
+            sl = slice(start, start + R)
+            params, opt_state, _ = step_fn(
+                params, opt_state, xs[:, sl], xd[:, sl], y[:, sl])
+            if cfg.mode != "no" and active.any():
+                if C >= 2:
+                    key, sub = jax.random.split(key)
+                    new_heads, pool_heads, chosen = fused_selection_round(
+                        params["heads"], pool_heads, xd[:, sl], y[:, sl],
+                        active_dev, cfg.alpha, sub,
+                        nf=nf, mode=cfg.mode, use_kernel=use_kernel)
+                    params = {**params, "heads": new_heads}
+                    epoch_chosen.append(chosen)
+                n_rounds += active
+        for chosen in map(np.asarray, epoch_chosen):
+            for i in range(C):
+                if active[i]:
+                    selections[names[i]].append(lut[i, chosen[i]].tolist())
+        v = np.asarray(eval_fn(params, *val), np.float64)
+        improved = v < best_val
+        best_val = np.where(improved, v, best_val)
+        mask = jnp.asarray(improved)
+        best_params = jax.tree_util.tree_map(
+            lambda b, p: jnp.where(
+                mask.reshape((C,) + (1,) * (p.ndim - 1)), p, b),
+            best_params, params)
+        for i in range(C):
+            histories[i].append(float(v[i]))
+        if verbose:
+            msg = " ".join(f"{names[i]}={v[i]:.4f}"
+                           f"{'*' if active[i] else ''}" for i in range(C))
+            print(f"[hfl/batched] epoch {epoch:3d} val: {msg}", flush=True)
+
+    test = np.asarray(eval_fn(best_params, *tst), np.float64)
+    # write the final state back so the client objects stay usable
+    for i, c in enumerate(clients):
+        c.params = _tree_row(params, i)
+        c.opt_state = _tree_row(opt_state, i)
+        c.val_history = histories[i]
+        c.best_val = float(best_val[i])
+        c.best_params = _tree_row(best_params, i)
+    return {names[i]: {"val": histories[i], "test": float(test[i]),
+                       "rounds": int(n_rounds[i]),
+                       "best_val": float(best_val[i]),
+                       "selections": selections[names[i]]}
+            for i in range(C)}
+
+
+# ---------------------------------------------------------------------------
 # Orchestration
 # ---------------------------------------------------------------------------
 
-def run_federated_training(clients: Sequence[FederatedClient],
-                           cfg: HFLConfig, verbose: bool = False):
-    """Decentralized HFL over a set of clients.  Returns per-client history:
-    {name: {"val": [...], "test": float, "rounds": int}}."""
+def _run_sequential(clients: Sequence[FederatedClient], cfg: HFLConfig,
+                    verbose: bool = False):
     rng = np.random.default_rng(cfg.seed)
     pool = HeadPool()
     # initial publication so the pool is never empty (asynchronous start)
@@ -224,6 +453,7 @@ def run_federated_training(clients: Sequence[FederatedClient],
         pool.publish(c.name, c.params["heads"], c.nf)
 
     n_rounds = {c.name: 0 for c in clients}
+    selections: Dict[str, list] = {c.name: [] for c in clients}
     for epoch in range(cfg.epochs):
         active = {c.name: c.fl_active() for c in clients}
         iters = {c.name: c.train_epoch() for c in clients}
@@ -238,7 +468,9 @@ def run_federated_training(clients: Sequence[FederatedClient],
                     live.discard(c.name)
                     continue
                 if active[c.name] and cfg.mode != "no":
-                    federated_round(c, pool, rng)
+                    sel = federated_round(c, pool, rng)
+                    if sel is not None:
+                        selections[c.name].append(sel)
                     n_rounds[c.name] += 1
                     pool.publish(c.name, c.params["heads"], c.nf)
         for c in clients:
@@ -248,5 +480,27 @@ def run_federated_training(clients: Sequence[FederatedClient],
                            f"{'*' if active[c.name] else ''}" for c in clients)
             print(f"[hfl] epoch {epoch:3d} val: {msg}", flush=True)
     return {c.name: {"val": c.val_history, "test": c.test_mse(),
-                     "rounds": n_rounds[c.name], "best_val": c.best_val}
+                     "rounds": n_rounds[c.name], "best_val": c.best_val,
+                     "selections": selections[c.name]}
             for c in clients}
+
+
+def run_federated_training(clients: Sequence[FederatedClient],
+                           cfg: HFLConfig, verbose: bool = False,
+                           engine: str = "sequential"):
+    """Decentralized HFL over a set of clients.
+
+    engine="sequential": the reference oracle (Python loop, HeadPool object,
+    host-side per-feature argmin); handles heterogeneous nf / ragged data.
+    engine="batched": vmapped train steps + one fused selection scan per
+    round; requires homogeneous clients.  Both record the same history:
+    {name: {"val": [...], "test": float, "rounds": int, "best_val": float,
+    "selections": [[...], ...]}} — selections are indices into the pool
+    sorted by (user, feature) excluding the client itself, identical across
+    engines for modes hfl/always/no (random draws from different rng
+    streams)."""
+    if engine == "batched":
+        return _run_batched(clients, cfg, verbose=verbose)
+    if engine != "sequential":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _run_sequential(clients, cfg, verbose=verbose)

@@ -59,6 +59,14 @@ def head_apply(params, xd):
     return _mlp_apply(params, xd, _H_ACTS)[..., 0]
 
 
+def head_pool_apply(pool_stacked, xd):
+    """Apply every head of a stacked pool to one probe batch.
+
+    pool_stacked: head params with a leading pool dim (ns, ...);
+    xd: (R, w).  Returns (ns, R) preliminary predictions."""
+    return jax.vmap(lambda h: head_apply(h, xd))(pool_stacked)
+
+
 def embed_schema(nf: int, w: int):
     """Local embedding E: sparse tensor (nf*w,) -> temporal embedding (w,)."""
     return _mlp_schema((nf * w, 16, 256, 64, 16, w))

@@ -14,6 +14,7 @@ channel frequencies mimic Table 3's record-count skew.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List
 
 import numpy as np
@@ -68,9 +69,11 @@ def _ou_path(rng: np.random.Generator, times: np.ndarray) -> np.ndarray:
     return z
 
 
-def make_patient(rng: np.random.Generator, hospital: str,
+def make_patient(rng: np.random.Generator, hospital,
                  n_events: int, label_noise: float = 0.15) -> EventStream:
-    spec = HOSPITALS[hospital]
+    """`hospital` is a name from HOSPITALS or a spec dict of the same shape
+    (population hospitals are generated, not registered)."""
+    spec = HOSPITALS[hospital] if isinstance(hospital, str) else hospital
     chans = spec["features"] + [spec["label"]]
     nf = len(spec["features"])
     freq = np.array([c[4] for c in chans])
@@ -92,17 +95,78 @@ def make_patient(rng: np.random.Generator, hospital: str,
 
 def make_hospital(hospital: str, seed: int = 0, n_patients: int = None,
                   n_events: int = 400) -> HospitalData:
-    rng = np.random.default_rng(seed + hash(hospital) % 100003)
-    spec = HOSPITALS[hospital]
+    return make_hospital_from_spec(hospital, HOSPITALS[hospital], seed,
+                                   n_patients, n_events)
+
+
+def make_hospital_from_spec(name: str, spec: dict, seed: int = 0,
+                            n_patients: int = None,
+                            n_events: int = 400) -> HospitalData:
+    # crc32, not hash(): str hashes are salted per process, which would make
+    # "identical seed" runs train on different data across interpreter runs
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 100003)
     n = n_patients or spec["n_patients"]
-    streams = [make_patient(rng, hospital, n_events) for _ in range(n)]
+    streams = [make_patient(rng, spec, n_events) for _ in range(n)]
     idx = rng.permutation(n)
     n_tr, n_va = int(0.6 * n), int(0.2 * n)
     splits = {"train": idx[:n_tr].tolist(),
               "valid": idx[n_tr:n_tr + n_va].tolist(),
               "test": idx[n_tr + n_va:].tolist()}
-    return HospitalData(hospital, [c[0] for c in spec["features"]],
+    return HospitalData(name, [c[0] for c in spec["features"]],
                         streams, splits)
+
+
+# ---------------------------------------------------------------------------
+# N-hospital populations (scaling beyond the paper's two-source setting)
+# ---------------------------------------------------------------------------
+
+# union of both paper hospitals' channel templates — population hospitals
+# draw jittered variants of these, mimicking Table 3's near-synonymous
+# channels ('SpO2' vs 'O2 saturation pulse oximetry', ...)
+_CHANNEL_BANK = (HOSPITALS["carevue"]["features"]
+                 + [HOSPITALS["carevue"]["label"]]
+                 + HOSPITALS["metavision"]["features"]
+                 + [HOSPITALS["metavision"]["label"]])
+
+
+def population_spec(rng: np.random.Generator, nf: int = 4) -> dict:
+    """One generated hospital: nf feature channels + 1 label channel, each a
+    perturbed draw from the channel bank (different scales, noise, latent
+    weights, observation frequencies — heterogeneous observation operators
+    over the SAME latent physiology, exactly the paper's setting)."""
+    n_chan = nf + 1
+    replace = n_chan > len(_CHANNEL_BANK)
+    picks = rng.choice(len(_CHANNEL_BANK), size=n_chan, replace=replace)
+    chans = []
+    for k, b in enumerate(picks):
+        name, mu, sd, wz, freq = _CHANNEL_BANK[b]
+        chans.append((
+            f"{name}_v{k}",
+            float(mu * (1 + 0.08 * rng.normal())),
+            float(sd * abs(1 + 0.15 * rng.normal()) + 1e-3),
+            tuple(np.asarray(wz, np.float64) + 0.1 * rng.normal(size=Z_DIM)),
+            float(freq * np.exp(0.4 * rng.normal())),
+        ))
+    return {"features": chans[:nf], "label": chans[nf],
+            # skewed domain sizes, echoing Table 3's carevue/metavision gap
+            "n_patients": int(rng.integers(8, 25))}
+
+
+def make_population(n_hospitals: int, seed: int = 0, nf: int = 4,
+                    n_patients: int = None,
+                    n_events: int = 300) -> List[HospitalData]:
+    """Generate an N-hospital federated population.  Every hospital observes
+    the shared OU latent state through its own generated observation operator
+    (population_spec).  `n_patients=None` keeps the skewed per-hospital
+    sizes; an int forces equal sizes (what the batched engine wants)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for h in range(n_hospitals):
+        spec = population_spec(rng, nf)
+        out.append(make_hospital_from_spec(
+            f"h{h:03d}", spec, seed=seed + 7919 * (h + 1),
+            n_patients=n_patients, n_events=n_events))
+    return out
 
 
 def packed_split(data: HospitalData, split: str, w: int):

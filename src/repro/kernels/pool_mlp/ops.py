@@ -12,11 +12,20 @@ from repro.kernels.pool_mlp.kernel import pool_mlp_pallas
 _KEYS = ("w0", "b0", "w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
 
 
+def _resolve_interpret(interpret):
+    """None -> compiled kernel on TPU, interpret-mode emulation elsewhere
+    (the kernel targets the MXU; interpret keeps CPU tests running)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 @functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
 def pool_mlp_errors(pool_stacked, xd, y, *, block_pool: int = 8,
-                    interpret: bool = True):
+                    interpret=None):
     """pool_stacked: dict of stacked Table-4 head params (ns leading dim);
     xd: (R, w); y: (R,).  Returns (ns,) mean squared errors (Eq. 7)."""
+    interpret = _resolve_interpret(interpret)
     ns = pool_stacked["w0"].shape[0]
     BP = min(block_pool, ns)
     pad = (-ns) % BP
@@ -30,3 +39,17 @@ def pool_mlp_errors(pool_stacked, xd, y, *, block_pool: int = 8,
     errs = pool_mlp_pallas(xd, y, tuple(weights), block_pool=BP,
                            interpret=interpret)
     return errs[:ns]
+
+
+def pool_mlp_errors_features(pool_stacked, xd_feats, y, *, block_pool: int = 8,
+                             interpret=None):
+    """Score the whole pool against EVERY target feature's probe batch.
+
+    xd_feats: (nf, R, w) — one (R, w) dense-vector batch per target feature;
+    y: (R,).  Returns (nf, ns).  One fused kernel sweep per feature (nf is
+    small and static, so this stays a trace-time loop rather than a vmap over
+    the pallas_call)."""
+    return jnp.stack([
+        pool_mlp_errors(pool_stacked, xd_feats[f], y,
+                        block_pool=block_pool, interpret=interpret)
+        for f in range(xd_feats.shape[0])])

@@ -1,6 +1,7 @@
 """Unit + hypothesis property tests for the paper's §3 feature tensors."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests degrade to skip offline
 from hypothesis import given, settings, strategies as st
 
 from repro.core.feature_tensors import (EventStream, pack_feature_tensors,

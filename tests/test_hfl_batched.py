@@ -1,0 +1,124 @@
+"""Batched multi-client engine vs the sequential reference oracle: identical
+selections, bit-close blended heads, same switching behavior; plus
+vmap-vs-Pallas parity for the fused multi-feature pool scoring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import networks as N
+from repro.core.hfl import (FederatedClient, HFLConfig, pool_errors,
+                            run_federated_training)
+from repro.sharding import spec as S
+
+
+def _mk_clients(cfg, C=4, nf=3, n=40, seed0=100):
+    out = []
+    for i in range(C):
+        rng = np.random.default_rng(seed0 + i)
+        mk = lambda m: (rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"c{i}", nf, cfg, mk(n), mk(30), mk(30),
+                                   jax.random.PRNGKey(i)))
+    return out
+
+
+def _head_gap(c1, c2):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree_util.tree_leaves(c1.params["heads"]),
+                   jax.tree_util.tree_leaves(c2.params["heads"])))
+
+
+def test_batched_matches_sequential_always_mode():
+    """4-client run, every round federated: same selected pool indices,
+    head params within 1e-5 (the acceptance bar — in practice bit-equal)."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    cs_seq = _mk_clients(cfg)
+    cs_bat = _mk_clients(cfg)
+    h_seq = run_federated_training(cs_seq, cfg, engine="sequential")
+    h_bat = run_federated_training(cs_bat, cfg, engine="batched")
+    for name in h_seq:
+        assert h_seq[name]["selections"] == h_bat[name]["selections"]
+        assert h_seq[name]["rounds"] == h_bat[name]["rounds"] > 0
+        np.testing.assert_allclose(h_seq[name]["val"], h_bat[name]["val"],
+                                   rtol=1e-5, atol=1e-6)
+    for c1, c2 in zip(cs_seq, cs_bat):
+        assert _head_gap(c1, c2) < 1e-5
+
+
+def test_batched_matches_sequential_switching():
+    """hfl mode: the plateau-gated switching fires the same rounds on both
+    engines (same val histories -> same fl_active schedule)."""
+    cfg = HFLConfig(mode="hfl", epochs=8, R=20, patience=2)
+    h_seq = run_federated_training(_mk_clients(cfg, C=3, nf=2), cfg,
+                                   engine="sequential")
+    h_bat = run_federated_training(_mk_clients(cfg, C=3, nf=2), cfg,
+                                   engine="batched")
+    rounds = [h_seq[n]["rounds"] for n in h_seq]
+    assert any(r > 0 for r in rounds)     # the switch actually fired
+    for name in h_seq:
+        assert h_seq[name]["rounds"] == h_bat[name]["rounds"]
+        assert h_seq[name]["selections"] == h_bat[name]["selections"]
+
+
+def test_batched_no_mode_never_federates():
+    cfg = HFLConfig(mode="no", epochs=2, R=20)
+    hist = run_federated_training(_mk_clients(cfg, C=2), cfg,
+                                  engine="batched")
+    for h in hist.values():
+        assert h["rounds"] == 0 and h["selections"] == []
+
+
+def test_batched_rejects_heterogeneous_clients():
+    cfg = HFLConfig(mode="always", epochs=1, R=20)
+    clients = _mk_clients(cfg, C=2, nf=3) + _mk_clients(cfg, C=1, nf=2)
+    clients[2].name = "c9"
+    with pytest.raises(ValueError, match="homogeneous"):
+        run_federated_training(clients, cfg, engine="batched")
+
+
+def test_batched_kernel_path_matches_vmap_path():
+    """use_pool_kernel=True routes the fused round through the Pallas pool
+    sweep; selections and heads must match the vmap fallback."""
+    cfg_v = HFLConfig(mode="always", epochs=2, R=20)
+    cfg_k = dataclasses.replace(cfg_v, use_pool_kernel=True)
+    cs_v = _mk_clients(cfg_v, C=3, nf=2)
+    cs_k = _mk_clients(cfg_k, C=3, nf=2)
+    h_v = run_federated_training(cs_v, cfg_v, engine="batched")
+    h_k = run_federated_training(cs_k, cfg_k, engine="batched")
+    for name in h_v:
+        assert h_v[name]["selections"] == h_k[name]["selections"]
+    for c1, c2 in zip(cs_v, cs_k):
+        assert _head_gap(c1, c2) < 1e-5
+
+
+def test_pool_errors_features_vmap_vs_pallas():
+    """Multi-feature pool scoring: the Pallas sweep equals the vmap oracle."""
+    from repro.kernels.pool_mlp.ops import pool_mlp_errors_features
+
+    w, R, ns, nf = 3, 20, 6, 4
+    heads = [S.materialize(N.head_schema(w), jax.random.PRNGKey(i))
+             for i in range(ns)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *heads)
+    xd = jax.random.normal(jax.random.PRNGKey(1), (nf, R, w))
+    y = jax.random.normal(jax.random.PRNGKey(2), (R,))
+    ref = jax.vmap(lambda xf: pool_errors(stacked, xf, y))(xd)
+    out = pool_mlp_errors_features(stacked, xd, y, block_pool=4)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_population_runs_on_both_engines():
+    from repro.core.experiment import train_population
+
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    h_b = train_population(3, cfg, engine="batched", seed=1,
+                           n_patients=8, n_events=150)
+    h_s = train_population(3, cfg, engine="sequential", seed=1,
+                           n_patients=8, n_events=150)
+    assert set(h_b) == set(h_s) == {"h000", "h001", "h002"}
+    for name in h_b:
+        assert h_b[name]["selections"] == h_s[name]["selections"]
+        assert np.isfinite(h_b[name]["test"])

@@ -82,6 +82,15 @@ def test_switch_requires_plateau():
     assert not c.fl_active()
 
 
+def test_switch_zero_patience_is_eligible_after_first_epoch():
+    import dataclasses
+    c = _mk_client("hfl")
+    c.cfg = dataclasses.replace(c.cfg, patience=0)
+    assert not c.fl_active()            # no validation history yet
+    c.val_history = [5.0]
+    assert c.fl_active()
+
+
 def test_mode_gates():
     c = _mk_client("no")
     c.val_history = [5, 5, 5, 5, 5]
