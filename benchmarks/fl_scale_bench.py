@@ -13,20 +13,28 @@ identically-shaped warmup run so compile time is excluded.
 Uses deterministic random tensors (not the synthetic-hospital generator) so
 the sweep measures the engine, not data generation; ``--population`` switches
 to `repro.data.synthetic.make_population` data instead.
+
+Besides the CSV on stdout, writes a machine-readable ``BENCH_fl_scale.json``
+at the repo root (``--out`` to redirect, ``--out ""`` to disable) so the
+perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO_ROOT / "src"))
 
 import jax
 import numpy as np
 
-from repro.core.hfl import FederatedClient, HFLConfig, run_federated_training
+from repro.core.federation import Federation
+from repro.core.hfl import FederatedClient, HFLConfig
 
 
 def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
@@ -63,7 +71,7 @@ def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
             f"train split too short for a single sub-round "
             f"(n={n_eff} < R={cfg.R}); raise --batches or the data sizes")
     t0 = time.perf_counter()
-    hist = run_federated_training(clients, cfg, engine=engine)
+    hist = Federation(clients, cfg, engine=engine).fit()
     elapsed = time.perf_counter() - t0
     total_rounds = sum(h["rounds"] for h in hist.values())
     assert total_rounds == C * sub_rounds, (total_rounds, C, sub_rounds)
@@ -92,12 +100,15 @@ def main():
     ap.add_argument("--population", action="store_true",
                     help="use generated N-hospital data instead of random "
                          "tensors")
+    ap.add_argument("--out", default=str(_REPO_ROOT / "BENCH_fl_scale.json"),
+                    help="machine-readable results path (empty to disable)")
     args = ap.parse_args()
     counts = [int(x) for x in args.clients.split(",")]
     engines = args.engines.split(",")
     cfg = HFLConfig(mode="always", epochs=args.epochs, R=args.R)
     n = args.batches * args.R
 
+    records = []
     print("clients,engine,round_ms,client_rounds_per_s,speedup_vs_sequential")
     for C in counts:
         rows = {}
@@ -111,6 +122,26 @@ def main():
             print(f"{C},{engine},{r['round_ms']:.2f},"
                   f"{r['client_rounds_per_s']:.1f},{speedup:.2f}",
                   flush=True)
+            records.append({"clients": C, "engine": engine,
+                            "round_ms": r["round_ms"],
+                            "client_rounds_per_s": r["client_rounds_per_s"],
+                            "speedup_vs_sequential":
+                                None if speedup != speedup else speedup})
+    if args.out:
+        payload = {
+            "benchmark": "fl_scale",
+            "unix_time": int(time.time()),
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+            "config": {"epochs": args.epochs, "R": args.R, "nf": args.nf,
+                       "batches": args.batches, "mode": cfg.mode,
+                       "population": bool(args.population),
+                       "clients": counts, "engines": engines},
+            "results": records,
+        }
+        Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

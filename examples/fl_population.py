@@ -1,58 +1,140 @@
-"""N-hospital federated population on the batched engine.
+"""N-hospital federated population on the composable Federation API.
 
   PYTHONPATH=src python examples/fl_population.py [--clients 16]
 
 Generates `--clients` synthetic hospitals (each observing the shared latent
 physiology through its own perturbed observation operator — see
-repro.data.synthetic.population_spec), then trains them as one federated
-population with the batched multi-client engine: every Adam step is vmapped
-across hospitals and each federated opportunity runs as ONE fused
-selection+blend scan (Eq. 7 argmin + Eq. 8 blending for all clients and
-features, no host sync).  `--engine sequential` runs the reference oracle
-instead — same selections, ~an order of magnitude slower at this scale.
+repro.data.synthetic.population_spec), then trains them as one
+:class:`repro.core.federation.Federation`.  The default policy bundle is the
+paper's: plateau-gated switching, Eq.-7 argmin selection, Eq.-8
+alpha-blending, last-write-wins pool asynchrony — every piece swappable from
+the command line:
+
+  --selection softmax --temperature 0.5     # softmax-weighted selection
+  --selection topk --k 3                    # uniform over the 3 best heads
+  --max-staleness 4                         # hide pool entries older than 4
+  --participation 0.5                       # Bernoulli partial participation
+
+With ``--engine batched`` (default) every Adam step is vmapped across
+hospitals and each federated opportunity runs as ONE fused selection+blend
+scan; ``--engine sequential`` runs the reference oracle instead — same
+selections, ~an order of magnitude slower at this scale.
+
+``--save-dir d`` checkpoints the full federation at the end (and ``--resume``
+restarts from such a checkpoint and trains ``--epochs`` MORE epochs —
+bit-identical to never having stopped).
 """
 import argparse
+import dataclasses
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core.experiment import train_population
+from repro.core.experiment import population_clients
+from repro.core.federation import Federation, MetricsCapture
 from repro.core.hfl import HFLConfig
+from repro.core.policies import (FederationPolicies, MaxStaleness,
+                                 ProbSwitch, SoftmaxSelection, TopKSelection)
+
+
+def build_policies(args, cfg) -> FederationPolicies:
+    pol = FederationPolicies.from_config(cfg)       # legacy-mode shorthand
+    if args.selection == "softmax":
+        pol = dataclasses.replace(
+            pol, selection=SoftmaxSelection(args.temperature))
+    elif args.selection == "topk":
+        pol = dataclasses.replace(pol, selection=TopKSelection(args.k))
+    if args.max_staleness is not None:
+        pol = dataclasses.replace(pol, pool=MaxStaleness(args.max_staleness))
+    if args.participation is not None:
+        pol = dataclasses.replace(pol, switch=ProbSwitch(args.participation))
+    return pol
+
+
+def _policy_flags_customized(args) -> bool:
+    return (args.selection != "mode" or args.mode != "hfl"
+            or args.max_staleness is not None
+            or args.participation is not None)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--engine", choices=("batched", "sequential"),
-                    default="batched")
+                    default=None,
+                    help="default: batched for fresh runs, the CHECKPOINTED "
+                         "engine for --resume")
     ap.add_argument("--epochs", type=int, default=12)
     ap.add_argument("--patients", type=int, default=10)
     ap.add_argument("--events", type=int, default=300)
     ap.add_argument("--mode", default="hfl",
                     choices=("hfl", "no", "random", "always"))
+    ap.add_argument("--selection", default="mode",
+                    choices=("mode", "softmax", "topk"),
+                    help="override the mode's selection policy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="hide pool entries unrefreshed for this many rounds")
+    ap.add_argument("--participation", type=float, default=None,
+                    help="Bernoulli(p) per-epoch participation switch")
+    ap.add_argument("--save-dir", default=None,
+                    help="checkpoint the federation here after training")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from --save-dir, train --epochs more")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
     cfg = HFLConfig(epochs=args.epochs, mode=args.mode, R=20)
-    print(f"== {args.clients}-hospital population, engine={args.engine}, "
-          f"mode={args.mode} ==")
-    t0 = time.time()
-    hist = train_population(args.clients, cfg, engine=args.engine,
-                            n_patients=args.patients, n_events=args.events,
-                            verbose=args.verbose)
+    clients, packs = population_clients(args.clients, cfg,
+                                        n_patients=args.patients,
+                                        n_events=args.events)
+    scale = {p["name"]: p["label_var"] for p in packs}  # raw-unit MSEs
+    metrics = MetricsCapture()
+    if args.resume:
+        if not args.save_dir:
+            raise SystemExit("--resume requires --save-dir")
+        if _policy_flags_customized(args):
+            print("note: --resume continues with the CHECKPOINTED policy "
+                  "bundle; --mode/--selection/--max-staleness/"
+                  "--participation are ignored", file=sys.stderr)
+        fed = Federation.restore(args.save_dir, clients,
+                                 engine=args.engine, callbacks=[metrics])
+        print(f"== resumed {args.clients}-hospital federation at epoch "
+              f"{fed.epoch}, engine={fed.engine} ==")
+        rounds0 = sum(fed.n_rounds.values())
+        t0 = time.time()
+        hist = fed.fit(epochs=args.epochs, verbose=args.verbose)
+    else:
+        fed = Federation(clients, cfg, policies=build_policies(args, cfg),
+                         engine=args.engine or "batched",
+                         callbacks=[metrics])
+        print(f"== {args.clients}-hospital population, engine={fed.engine}, "
+              f"mode={args.mode}, selection={args.selection} ==")
+        rounds0 = 0
+        t0 = time.time()
+        hist = fed.fit(verbose=args.verbose)
     wall = time.time() - t0
-    tests = sorted((h["test"], name, h["rounds"]) for name, h in hist.items())
+
+    tests = sorted((h["test"] * scale[name], name, h["rounds"])
+                   for name, h in hist.items())
     total_rounds = sum(h["rounds"] for h in hist.values())
+    new_rounds = total_rounds - rounds0      # rounds run in THIS segment
     print(f"{'hospital':>10} {'test MSE':>12} {'fed rounds':>10}")
     for mse, name, rounds in tests[:5]:
         print(f"{name:>10} {mse:12.2f} {rounds:10d}")
     if len(tests) > 5:
         print(f"{'...':>10} ({len(tests) - 5} more hospitals)")
-    print(f"=> {total_rounds} federated rounds across {args.clients} "
-          f"hospitals in {wall:.1f}s "
-          f"({total_rounds / wall:.1f} client-rounds/s)")
+    print(f"=> {new_rounds} federated rounds ({total_rounds} cumulative) "
+          f"across {args.clients} hospitals, {len(metrics.epochs)} epochs "
+          f"captured, in {wall:.1f}s "
+          f"({max(new_rounds, 1) / wall:.1f} client-rounds/s)")
+    if args.save_dir:
+        fed.save(args.save_dir)
+        print(f"=> federation checkpointed to {args.save_dir} "
+              f"(restore with --resume)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,5 @@
+"""Msgpack pytree checkpointing (see checkpoint.py).  Re-exported here so
+consumers — notably Federation.save/restore — can use the package name."""
+from repro.checkpoint.checkpoint import CheckpointManager, load, save
+
+__all__ = ["CheckpointManager", "load", "save"]

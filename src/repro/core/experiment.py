@@ -22,7 +22,10 @@ import numpy as np
 
 from repro.core import networks as N
 from repro.core.feature_tensors import pack_feature_tensors
-from repro.core.hfl import FederatedClient, HFLConfig, run_federated_training
+from repro.core.federation import (Callback, Federation, RoundSchedule,
+                                   fit_local)
+from repro.core.hfl import FederatedClient, HFLConfig
+from repro.core.policies import FederationPolicies
 from repro.data import synthetic as syn
 from repro.optim import adam, apply_updates
 from repro.sharding import spec as S
@@ -103,12 +106,18 @@ _SYSTEMS = {
 
 
 def train_benchmark(system: str, packed, nf: int, cfg: HFLConfig,
-                    rng_seed: int = 0) -> Dict[str, float]:
+                    rng_seed: int = 0,
+                    callbacks: Sequence[Callback] = ()) -> Dict[str, float]:
+    """Train one non-federated benchmark system on the shared
+    :class:`~repro.core.federation.RoundSchedule` (same epoch / R-batch /
+    save-best protocol as the federated engines, via
+    :func:`~repro.core.federation.fit_local`)."""
     schema_fn, loss_fn, apply_fn = _SYSTEMS[system]
     schema = schema_fn(nf, cfg.w)
     params = S.materialize(schema, jax.random.PRNGKey(rng_seed))
     opt = adam(cfg.lr)
     opt_state = opt.init(params)
+    schedule = RoundSchedule(cfg.epochs, cfg.R)
 
     @jax.jit
     def step(params, opt_state, xs, xd, y):
@@ -132,21 +141,15 @@ def train_benchmark(system: str, packed, nf: int, cfg: HFLConfig,
         key = jax.random.PRNGKey(rng_seed + 1)
         xs, xd, y = packed["train"]
         for e in range(5):
-            for s0 in range(0, len(y) - cfg.R + 1, cfg.R):
+            for sl in schedule.slices(len(y)):
                 key, sub = jax.random.split(key)
-                sl = slice(s0, s0 + cfg.R)
-                params, opt_state = pstep(params, opt_state, xs[sl], xd[sl], sub)
+                params, opt_state = pstep(params, opt_state, xs[sl], xd[sl],
+                                          sub)
         opt_state = opt.init(params)   # fresh optimizer for finetuning
 
-    best_val, best_params = np.inf, params
-    xs, xd, y = packed["train"]
-    for epoch in range(cfg.epochs):
-        for s0 in range(0, len(y) - cfg.R + 1, cfg.R):
-            sl = slice(s0, s0 + cfg.R)
-            params, opt_state = step(params, opt_state, xs[sl], xd[sl], y[sl])
-        v = float(mse(params, *packed["valid"]))
-        if v < best_val:
-            best_val, best_params = v, params
+    params, opt_state, best_params, best_val = fit_local(
+        step, mse, params, opt_state, packed["train"], packed["valid"],
+        schedule, callbacks=callbacks)
     scale = packed["label_var"]
     return {"valid": best_val * scale,
             "test": float(mse(best_params, *packed["test"])) * scale}
@@ -158,7 +161,9 @@ def train_benchmark(system: str, packed, nf: int, cfg: HFLConfig,
 
 def train_hfl(target: str, label_idx: int, cfg: HFLConfig, seed: int = 0,
               n_patients=None, n_events: int = 400,
-              verbose: bool = False) -> Dict[str, float]:
+              verbose: bool = False,
+              policies: Optional[FederationPolicies] = None,
+              callbacks: Sequence[Callback] = ()) -> Dict[str, float]:
     source = "carevue" if target == "metavision" else "metavision"
     t_pack = task_data(target, label_idx, cfg.w, seed, n_patients, n_events)
     s_pack = task_data(source, label_idx, cfg.w, seed, n_patients, n_events)
@@ -169,7 +174,8 @@ def train_hfl(target: str, label_idx: int, cfg: HFLConfig, seed: int = 0,
         FederatedClient(source, nf, cfg, s_pack["train"], s_pack["valid"],
                         s_pack["test"], jax.random.PRNGKey(seed + 17)),
     ]
-    hist = run_federated_training(clients, cfg, verbose=verbose)
+    fed = Federation(clients, cfg, policies=policies, callbacks=callbacks)
+    hist = fed.fit(verbose=verbose)
     t_scale, s_scale = t_pack["label_var"], s_pack["label_var"]
     return {"valid": hist[target]["best_val"] * t_scale,
             "test": hist[target]["test"] * t_scale,
@@ -215,20 +221,35 @@ def population_task_data(n_clients: int, w: int, seed: int = 0,
     return _truncate_common(packs)
 
 
-def train_population(n_clients: int, cfg: HFLConfig, engine: str = "batched",
-                     seed: int = 0, n_patients: int = 10,
-                     n_events: int = 300, verbose: bool = False
-                     ) -> Dict[str, Dict[str, float]]:
-    """Federated training over an N-hospital generated population.  Returns
-    the per-client history with test/best_val rescaled to raw units."""
+def population_clients(n_clients: int, cfg: HFLConfig, seed: int = 0,
+                       n_patients: int = 10, n_events: int = 300
+                       ) -> Tuple[List[FederatedClient], List[dict]]:
+    """Freshly-constructed clients (plus their packed data dicts) for an
+    N-hospital generated population — the building block for
+    :func:`train_population` and for `Federation.restore` (which overlays a
+    checkpoint onto clients built exactly like the originals)."""
     packs = population_task_data(n_clients, cfg.w, seed, n_patients, n_events)
     nf = packs[0]["train"][0].shape[1]
     clients = [
         FederatedClient(p["name"], nf, cfg, p["train"], p["valid"], p["test"],
                         jax.random.PRNGKey(seed + 31 * i))
         for i, p in enumerate(packs)]
-    hist = run_federated_training(clients, cfg, verbose=verbose,
-                                  engine=engine)
+    return clients, packs
+
+
+def train_population(n_clients: int, cfg: HFLConfig, engine: str = "batched",
+                     seed: int = 0, n_patients: int = 10,
+                     n_events: int = 300, verbose: bool = False,
+                     policies: Optional[FederationPolicies] = None,
+                     callbacks: Sequence[Callback] = ()
+                     ) -> Dict[str, Dict[str, float]]:
+    """Federated training over an N-hospital generated population.  Returns
+    the per-client history with test/best_val rescaled to raw units."""
+    clients, packs = population_clients(n_clients, cfg, seed, n_patients,
+                                        n_events)
+    fed = Federation(clients, cfg, engine=engine, policies=policies,
+                     callbacks=callbacks)
+    hist = fed.fit(verbose=verbose)
     for p in packs:
         h = hist[p["name"]]
         h["test"] *= p["label_var"]

@@ -1,0 +1,728 @@
+"""Composable federation API: one policy description, two executors.
+
+:class:`Federation` owns a set of :class:`~repro.core.hfl.FederatedClient`
+objects, a :class:`~repro.core.policies.FederationPolicies` bundle (switch /
+selection / transfer / pool — see `core/policies.py`), a shared
+:class:`RoundSchedule`, and a :class:`Callback` list.  Both executors —
+the ``sequential`` reference oracle and the ``batched`` fused engine —
+consume the SAME policy description, so a new scenario (partial
+participation, staleness bounds, softer selection, per-feature blending)
+is one policy object, not two engine edits.
+
+The batched executor's :func:`fused_policy_round` takes the whole policy
+bundle as a *static* jit argument: every policy is a frozen (hashable)
+dataclass whose ``*_batched`` methods are traced straight into the
+selection scan, which is what preserves the selection-identical guarantee
+between the two engines (pinned by ``tests/test_hfl_batched.py``).
+
+State — per-client params / optimizer state / validation history / best
+snapshot, the head pool with per-entry ages, the host and device RNG
+streams, and the epoch/round counters — lives on the Federation and its
+clients, so :meth:`Federation.fit` is *resumable*: ``fit(epochs=k)`` runs k
+more epochs, and :meth:`Federation.save` / :meth:`Federation.restore`
+round-trip everything through ``repro.checkpoint`` for bit-identical
+mid-training resumption.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.hfl import (FederatedClient, HeadPool, HFLConfig,
+                            _eval_mse, _pool_kernel_ops, _train_step,
+                            pool_errors, pool_errors_kernel,
+                            pool_kernel_available)
+from repro.core.policies import FederationPolicies
+from repro.optim import adam
+
+
+# ---------------------------------------------------------------------------
+# Round schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """The paper's training protocol skeleton, shared by every executor and
+    by the non-federated benchmark loop: `epochs` epochs, one gradient step
+    (and one federated opportunity) per R consecutive periods."""
+    epochs: int
+    R: int
+
+    def slices(self, n: int):
+        """Sub-round batch slices over an n-sample train split."""
+        for start in range(0, n - self.R + 1, self.R):
+            yield slice(start, start + self.R)
+
+    def sub_rounds(self, n: int) -> int:
+        return max(0, (n - self.R) // self.R + 1)
+
+
+# ---------------------------------------------------------------------------
+# Callbacks
+# ---------------------------------------------------------------------------
+
+class Callback:
+    """Training hooks.  `fed` is the running Federation (None when invoked
+    from the non-federated :func:`fit_local` loop)."""
+
+    def on_fit_start(self, fed) -> None: ...
+
+    def on_round(self, fed, epoch: int, round_idx: int) -> None: ...
+
+    def on_epoch_end(self, fed, epoch: int, val: Dict[str, float],
+                     active: Dict[str, bool]) -> None: ...
+
+    def on_fit_end(self, fed, results) -> None: ...
+
+
+class VerboseLogger(Callback):
+    """The engines' legacy per-epoch console line (a `*` marks clients whose
+    switch was active this epoch)."""
+
+    def on_epoch_end(self, fed, epoch, val, active):
+        engine = getattr(fed, "engine", None)
+        tag = "hfl/batched" if engine == "batched" else "hfl"
+        msg = " ".join(f"{n}={val[n]:.4f}{'*' if active.get(n) else ''}"
+                       for n in val)
+        print(f"[{tag}] epoch {epoch:3d} val: {msg}", flush=True)
+
+
+class MetricsCapture(Callback):
+    """Records the per-epoch validation MSEs and switch activity."""
+
+    def __init__(self):
+        self.epochs: List[dict] = []
+
+    def on_epoch_end(self, fed, epoch, val, active):
+        self.epochs.append({"epoch": epoch, "val": dict(val),
+                            "active": dict(active)})
+
+
+class SaveBestCallback(Callback):
+    """Persist the whole federation (Federation.save) whenever the
+    population-mean validation MSE improves — disk-backed save-best."""
+
+    def __init__(self, directory):
+        self.directory = directory
+        self.best = np.inf
+        self.n_saves = 0
+
+    def on_fit_start(self, fed):
+        """Seed `best` from an existing checkpoint at `directory`, so a
+        resumed run never clobbers a better historical best (the last
+        checkpointed epoch is, by construction, the epoch that saved)."""
+        m = Path(self.directory) / "manifest.json"
+        if self.best == np.inf and m.exists():
+            hist = json.loads(m.read_text())["val_histories"].values()
+            if hist and all(h for h in hist):
+                self.best = float(np.mean([h[-1] for h in hist]))
+
+    def on_epoch_end(self, fed, epoch, val, active):
+        if fed is None or not val:
+            return
+        m = float(np.mean(list(val.values())))
+        if m < self.best:
+            self.best = m
+            fed.save(self.directory)
+            self.n_saves += 1
+
+
+# ---------------------------------------------------------------------------
+# Sequential executor: one policy round for one client
+# ---------------------------------------------------------------------------
+
+def policy_round(client: FederatedClient, pool: HeadPool,
+                 rng: np.random.Generator, policies: FederationPolicies,
+                 *, use_kernel: bool = False) -> Optional[List[int]]:
+    """One heterogeneous-transfer round for `client` (paper Fig. 6) under an
+    explicit policy bundle.  Returns the selected pool indices per feature
+    (positions in the sorted foreign pool), or None when there was nothing
+    valid to select from."""
+    if client._recent is None:
+        return None
+    stacked, keys = pool.stacked_for(client.name)
+    if stacked is None:
+        return None
+    valid = pool.fresh_mask(client.name, policies.pool.max_age, keys=keys)
+    if not valid.any():
+        return None
+    xd_R, y_R = client._recent
+    sel = policies.selection
+    chosen, sel_entries = [], []
+    for i in range(client.nf):
+        if sel.needs_errors:
+            score_fn = pool_errors_kernel if use_kernel else pool_errors
+            errs = np.asarray(score_fn(stacked, jnp.asarray(xd_R[:, i]),
+                                       jnp.asarray(y_R)))
+            errs = np.where(valid, errs, np.inf)
+        else:
+            errs = None
+        j = sel.select_host(errs, valid, rng)
+        chosen.append(j)
+        sel_entries.append(jax.tree_util.tree_map(lambda p: p[j], stacked))
+    selected = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sel_entries)
+    client.params = dict(client.params)
+    client.params["heads"] = policies.transfer.apply(client.params["heads"],
+                                                     selected)
+    return chosen
+
+
+def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
+    pol = fed.policies
+    C = len(fed.clients)
+    use_kernel = fed.cfg.use_pool_kernel
+    for _ in range(n_epochs):
+        epoch = fed.epoch
+        active = {c.name: pol.switch.active(c.val_history, fed._switch_rng)
+                  for c in fed.clients}
+        iters = {c.name: c.train_epoch(R=fed.schedule.R)
+                 for c in fed.clients}
+        live = set(iters)
+        fed._mid_epoch = True
+        rnd = 0
+        while live:
+            # staleness clock: tick once per executed sub-round in which
+            # federation can run (mirrors the batched engine's age array)
+            ticked = not (pol.pool.bounded and C >= 2
+                          and any(active[n] for n in live))
+            progressed = False
+            for c in fed.clients:
+                if c.name not in live:
+                    continue
+                try:
+                    next(iters[c.name])
+                except StopIteration:
+                    live.discard(c.name)
+                    continue
+                progressed = True
+                if not ticked:
+                    fed.pool.tick()
+                    ticked = True
+                if active[c.name]:
+                    sel = policy_round(c, fed.pool, fed._sel_rng, pol,
+                                       use_kernel=use_kernel)
+                    if sel is not None:
+                        fed.selections[c.name].append(sel)
+                    fed.n_rounds[c.name] += 1
+                    fed.pool.publish(c.name, c.params["heads"], c.nf)
+            if progressed:
+                for cb in cbs:
+                    cb.on_round(fed, epoch, rnd)
+                rnd += 1
+        for c in fed.clients:
+            c.end_epoch()
+        fed.epoch += 1
+        fed._mid_epoch = False
+        val = {c.name: c.val_history[-1] for c in fed.clients}
+        for cb in cbs:
+            cb.on_epoch_end(fed, epoch, val, active)
+
+
+# ---------------------------------------------------------------------------
+# Batched executor: fused multi-client selection + transfer
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nf", "policies", "use_kernel"))
+def fused_policy_round(heads, pool_heads, pool_age, xd_R, y_R, active, key,
+                       *, nf: int, policies: FederationPolicies,
+                       use_kernel: bool):
+    """One federated opportunity for ALL clients, fused into a single jitted
+    scan.  The policy bundle is a static argument: its jittable
+    ``select_batched`` / ``apply`` kernels are traced straight into the scan
+    body, so a policy swap is a recompile, never an engine edit.
+
+    The scan walks clients in their processing order, carrying the pool (and
+    its per-publisher age vector) so that client i scores the heads already
+    republished by clients < i in the same sub-round — exactly the
+    sequential oracle's interleaving.
+
+    heads, pool_heads: head params stacked to (C, nf, ...); pool_age: (C,)
+    int32 opportunities-since-publication per pool row; xd_R: (C, R, nf, w);
+    y_R: (C, R); active: (C,) bool; key: PRNG key.  Returns (new_heads,
+    new_pool, new_age, chosen) where chosen is (C, nf) int32 flat indices
+    into the row-major (client, feature) pool (-1 where the client was
+    inactive or nothing valid was available)."""
+    C = y_R.shape[0]
+    ns = C * nf
+    sel, transfer, poolp = policies.selection, policies.transfer, policies.pool
+    bounded = poolp.bounded
+
+    def flat(pool):
+        return jax.tree_util.tree_map(
+            lambda p: p.reshape((ns,) + p.shape[2:]), pool)
+
+    def body(carry, inp):
+        heads, pool, age = carry
+        i, key_i = inp
+        fp = flat(pool)
+        own = (jnp.arange(ns) // nf) == i
+        if bounded:
+            excluded = own | jnp.repeat(age > poolp.max_age, nf)
+            any_valid = jnp.any(~excluded)
+        else:
+            excluded = own
+            any_valid = jnp.bool_(True)      # C >= 2 enforced by the caller
+        if sel.needs_errors:
+            xd_i = jnp.moveaxis(xd_R[i], 1, 0)          # (nf, R, w)
+            if use_kernel:
+                errs = _pool_kernel_ops().pool_mlp_errors_features(
+                    fp, xd_i, y_R[i])
+            else:
+                errs = jax.vmap(
+                    lambda xf: pool_errors(fp, xf, y_R[i]))(xd_i)  # (nf, ns)
+            errs = jnp.where(excluded[None, :], jnp.inf, errs)
+        else:
+            errs = None
+        j = sel.select_batched(errs, excluded, key_i,
+                               nf=nf, ns=ns, i=i, bounded=bounded)
+        selected = jax.tree_util.tree_map(lambda p: p[j], fp)      # (nf, ...)
+        mine = jax.tree_util.tree_map(lambda h: h[i], heads)
+        blended = transfer.apply(mine, selected)
+        act = active[i] & any_valid
+        new_mine = jax.tree_util.tree_map(
+            lambda b, m: jnp.where(act, b, m), blended, mine)
+        heads = jax.tree_util.tree_map(
+            lambda h, m: h.at[i].set(m), heads, new_mine)
+        # publication: active clients overwrite their pool row (age resets),
+        # inactive clients' stale entries persist (the pool policy decides
+        # how long they stay *visible*)
+        pub = active[i]
+        pool = jax.tree_util.tree_map(
+            lambda pl, m: pl.at[i].set(jnp.where(pub, m, pl[i])),
+            pool, new_mine)
+        age = age.at[i].set(jnp.where(pub, 0, age[i]))
+        chosen = jnp.where(act, j, -1).astype(jnp.int32)
+        return (heads, pool, age), chosen
+
+    keys = jax.random.split(key, C)
+    (heads, pool_heads, pool_age), chosen = jax.lax.scan(
+        body, (heads, pool_heads, pool_age), (jnp.arange(C), keys))
+    return heads, pool_heads, pool_age, chosen
+
+
+def _stack_trees(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_row(tree, i):
+    return jax.tree_util.tree_map(lambda p: p[i], tree)
+
+
+def _selection_lut(names: Sequence[str], nf: int) -> np.ndarray:
+    """Map the batched engine's row-major (client, feature) flat pool index
+    to the sequential oracle's excluded, sorted-by-(name, feature) index —
+    so both engines log identical selections."""
+    C = len(names)
+    lut = np.full((C, C * nf), -1, np.int64)
+    for i in range(C):
+        others = sorted((names[j], j) for j in range(C) if j != i)
+        for rank, (_, j) in enumerate(others):
+            for g in range(nf):
+                lut[i, j * nf + g] = rank * nf + g
+    return lut
+
+
+@functools.lru_cache(maxsize=None)
+def _make_batched_fns(lr: float):
+    """vmap-over-clients versions of the exact same per-client step/eval the
+    sequential engine jits (see hfl._train_step / hfl._eval_mse)."""
+    opt = adam(lr)
+    step = jax.jit(jax.vmap(functools.partial(_train_step, opt)))
+    evaluate = jax.jit(jax.vmap(_eval_mse))
+    return step, evaluate
+
+
+def _check_homogeneous(clients: Sequence[FederatedClient]) -> None:
+    nf = clients[0].nf
+    shapes = [tuple(np.shape(a) for a in c.train) for c in clients]
+    if any(c.nf != nf for c in clients) or len(set(shapes)) != 1 or \
+            len({tuple(np.shape(a) for a in c.valid) for c in clients}) != 1 or \
+            len({tuple(np.shape(a) for a in c.test) for c in clients}) != 1:
+        raise ValueError(
+            "engine='batched' requires homogeneous clients (same nf and "
+            "identical train/valid/test shapes); truncate to a common length "
+            "(see experiment.population_task_data) or use "
+            "engine='sequential'")
+
+
+def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
+    clients = fed.clients
+    C = len(clients)
+    names = [c.name for c in clients]
+    nf = clients[0].nf
+    _check_homogeneous(clients)
+    cfg, pol = fed.cfg, fed.policies
+
+    xs = jnp.stack([np.asarray(c.train[0]) for c in clients])
+    xd = jnp.stack([np.asarray(c.train[1]) for c in clients])
+    y = jnp.stack([np.asarray(c.train[2]) for c in clients])
+    val = tuple(jnp.stack([np.asarray(c.valid[k]) for c in clients])
+                for k in range(3))
+
+    params = _stack_trees([c.params for c in clients])
+    opt_state = _stack_trees([c.opt_state for c in clients])
+    # pool state comes from the canonical HeadPool (a fresh fit sees the
+    # initial publication; a restored fit sees the checkpointed pool)
+    pool_heads = _stack_trees(
+        [_stack_trees([fed.pool.entries[(n, f)] for f in range(nf)])
+         for n in names])
+    pool_age = jnp.asarray([fed.pool.age_of(n) for n in names], jnp.int32)
+    step_fn, eval_fn = _make_batched_fns(cfg.lr)
+    use_kernel = cfg.use_pool_kernel and pool_kernel_available()
+    lut = _selection_lut(names, nf)
+
+    histories = [list(c.val_history) for c in clients]
+    best_val = np.array([c.best_val for c in clients], np.float64)
+    best_params = _stack_trees([c.best_params for c in clients])
+    n_rounds = np.zeros(C, np.int64)
+    base_rounds = dict(fed.n_rounds)
+    key = fed._key
+    n = int(y.shape[1])
+
+    def sync():
+        """Write the stacked loop state back into the clients / pool / rng —
+        run after the loop, and on demand when a callback checkpoints the
+        federation mid-fit (Federation.save calls this hook)."""
+        ages = np.asarray(pool_age)
+        for i, c in enumerate(clients):
+            c.params = _tree_row(params, i)
+            c.opt_state = _tree_row(opt_state, i)
+            c.val_history = histories[i]
+            c.best_val = float(best_val[i])
+            c.best_params = _tree_row(best_params, i)
+            fed.pool.publish(c.name, _tree_row(pool_heads, i), nf,
+                             age=int(ages[i]))
+            fed.n_rounds[c.name] = base_rounds[c.name] + int(n_rounds[i])
+        fed._key = key
+
+    fed._sync = sync
+    for _ in range(n_epochs):
+        epoch = fed.epoch
+        active = np.array([pol.switch.active(histories[i], fed._switch_rng)
+                           for i in range(C)])
+        active_dev = jnp.asarray(active)
+        epoch_chosen = []          # device arrays; materialized once/epoch
+        fed._mid_epoch = True
+        for rnd, sl in enumerate(fed.schedule.slices(n)):
+            params, opt_state, _ = step_fn(
+                params, opt_state, xs[:, sl], xd[:, sl], y[:, sl])
+            if active.any():
+                if C >= 2:
+                    if pol.pool.bounded:
+                        pool_age = pool_age + 1
+                    key, sub = jax.random.split(key)
+                    new_heads, pool_heads, pool_age, chosen = \
+                        fused_policy_round(
+                            params["heads"], pool_heads, pool_age,
+                            xd[:, sl], y[:, sl], active_dev, sub,
+                            nf=nf, policies=pol, use_kernel=use_kernel)
+                    params = {**params, "heads": new_heads}
+                    epoch_chosen.append(chosen)
+                n_rounds += active
+            for cb in cbs:
+                cb.on_round(fed, epoch, rnd)
+        for chosen in map(np.asarray, epoch_chosen):
+            for i in range(C):
+                if active[i] and chosen[i][0] >= 0:
+                    fed.selections[names[i]].append(lut[i, chosen[i]].tolist())
+        v = np.asarray(eval_fn(params, *val), np.float64)
+        improved = v < best_val
+        best_val = np.where(improved, v, best_val)
+        mask = jnp.asarray(improved)
+        best_params = jax.tree_util.tree_map(
+            lambda b, p: jnp.where(
+                mask.reshape((C,) + (1,) * (p.ndim - 1)), p, b),
+            best_params, params)
+        for i in range(C):
+            histories[i].append(float(v[i]))
+        fed.epoch += 1
+        fed._mid_epoch = False
+        for cb in cbs:
+            cb.on_epoch_end(fed, epoch,
+                            {names[i]: float(v[i]) for i in range(C)},
+                            {names[i]: bool(active[i]) for i in range(C)})
+
+    # write the final state back so the clients / pool / rng stay canonical
+    sync()
+    fed._sync = None
+
+
+# ---------------------------------------------------------------------------
+# Federation
+# ---------------------------------------------------------------------------
+
+def _client_data_shapes(c: FederatedClient):
+    """JSON-comparable split shapes, checked at restore time so a client
+    rebuilt from different pipeline arguments fails fast, not inside jit."""
+    return [[list(np.shape(a)) for a in split]
+            for split in (c.train, c.valid, c.test)]
+
+
+class Federation:
+    """A resumable federated-training run: clients + policies + schedule +
+    callbacks + all mutable state (pool, RNG streams, counters).
+
+    ``fit()`` trains up to ``schedule.epochs``; ``fit(epochs=k)`` trains k
+    MORE epochs from wherever the federation currently is.  ``save(dir)`` /
+    ``restore(dir, clients)`` round-trip the full state through
+    ``repro.checkpoint`` (data is NOT checkpointed — rebuild the clients the
+    same way, then restore overlays params/opt/pool/rng/histories)."""
+
+    def __init__(self, clients: Sequence[FederatedClient],
+                 cfg: Optional[HFLConfig] = None, *,
+                 policies: Optional[FederationPolicies] = None,
+                 schedule: Optional[RoundSchedule] = None,
+                 callbacks: Sequence[Callback] = (),
+                 engine: str = "sequential"):
+        if engine not in ("sequential", "batched"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.clients = list(clients)
+        names = [c.name for c in self.clients]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate client names: {names}")
+        if cfg is None:
+            cfg = self.clients[0].cfg if self.clients else HFLConfig()
+        self.cfg = cfg
+        self.policies = policies if policies is not None \
+            else FederationPolicies.from_config(cfg)
+        self.schedule = schedule or RoundSchedule(cfg.epochs, cfg.R)
+        self.callbacks = list(callbacks)
+        self.engine = engine
+        self.epoch = 0
+        self.n_rounds: Dict[str, int] = {n: 0 for n in names}
+        self.selections: Dict[str, list] = {n: [] for n in names}
+        self.pool = HeadPool()
+        for c in self.clients:   # asynchronous start: pool is never empty
+            self.pool.publish(c.name, c.params["heads"], c.nf)
+        self._sel_rng = np.random.default_rng(cfg.seed)
+        self._switch_rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 0x5F]))
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._sync = None       # set by the batched executor while it runs
+        self._mid_epoch = False  # True inside an epoch: save() would be torn
+
+    # -- training ----------------------------------------------------------
+
+    def fit(self, epochs: Optional[int] = None, verbose: bool = False):
+        """Train `epochs` more epochs (default: up to ``schedule.epochs``
+        total) and return the legacy history dict
+        {name: {val, test, rounds, best_val, selections}}."""
+        target = self.schedule.epochs if epochs is None \
+            else self.epoch + epochs
+        n = max(0, target - self.epoch)
+        cbs = list(self.callbacks)
+        if verbose and not any(isinstance(cb, VerboseLogger) for cb in cbs):
+            cbs.append(VerboseLogger())
+        for cb in cbs:
+            cb.on_fit_start(self)
+        if n:
+            if self.engine == "batched":
+                _fit_batched(self, n, cbs)
+            else:
+                _fit_sequential(self, n, cbs)
+        results = self.results()
+        for cb in cbs:
+            cb.on_fit_end(self, results)
+        return results
+
+    def results(self):
+        """Per-client history in the legacy run_federated_training format."""
+        if self._sync is not None:   # mid-fit (batched executor)
+            self._sync()
+        test = self._test_mses()
+        return {c.name: {"val": list(c.val_history),
+                         "test": test[c.name],
+                         "rounds": self.n_rounds[c.name],
+                         "best_val": float(c.best_val),
+                         "selections": [list(s) for s in
+                                        self.selections[c.name]]}
+                for c in self.clients}
+
+    def _test_mses(self) -> Dict[str, float]:
+        """Best-params test MSE per client — ONE vmapped dispatch on the
+        batched engine (matching its training-path batching) instead of C
+        per-client jit calls."""
+        if self.engine == "batched" and len(self.clients) > 1:
+            tst = tuple(jnp.stack([np.asarray(c.test[k])
+                                   for c in self.clients]) for k in range(3))
+            bp = _stack_trees([c.best_params for c in self.clients])
+            _, eval_fn = _make_batched_fns(self.cfg.lr)
+            v = np.asarray(eval_fn(bp, *tst), np.float64)
+            return {c.name: float(v[i])
+                    for i, c in enumerate(self.clients)}
+        return {c.name: c.test_mse() for c in self.clients}
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, directory) -> Path:
+        """Checkpoint the complete federation state for mid-training resume:
+        per-client params/opt/best, the pool (entries + ages), both host RNG
+        streams, the device PRNG key, and every counter/history.
+
+        Durable against interrupts: the state tree goes to an epoch-stamped
+        file first and the manifest — the commit point, written atomically
+        last — is what references it, so a crash anywhere mid-save leaves
+        the previously committed checkpoint fully readable.  Only valid at
+        an epoch boundary (on_epoch_end / between fits); a mid-epoch save
+        from an on_round callback raises."""
+        if self._mid_epoch:
+            raise RuntimeError(
+                "Federation.save is only valid at an epoch boundary "
+                "(on_epoch_end or between fits); mid-epoch state has "
+                "unlogged selections and an un-advanced epoch counter")
+        if self._sync is not None:  # mid-fit (batched executor): pull the
+            self._sync()            # stacked loop state into the clients
+        d = Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        state = {
+            "epoch": self.epoch,   # cross-checked against the manifest so a
+                                   # torn pair is detected (belt+braces)
+            "clients": [{"params": c.params, "opt_state": c.opt_state,
+                         "best_params": c.best_params}
+                        for c in self.clients],
+            "pool": {f"{u}|{i}": entry
+                     for (u, i), entry in self.pool.entries.items()},
+            "key": np.asarray(self._key),
+        }
+        state_name = f"state_{self.epoch:08d}.msgpack"
+        ckpt.save(d / state_name, state)
+        manifest = {
+            "format": 1,
+            "state_file": state_name,
+            "epoch": self.epoch,
+            "engine": self.engine,
+            "cfg": dataclasses.asdict(self.cfg),
+            "policies": self.policies.spec(),
+            "schedule": {"epochs": self.schedule.epochs,
+                         "R": self.schedule.R},
+            "names": [c.name for c in self.clients],
+            "nf": [c.nf for c in self.clients],
+            "data_shapes": [_client_data_shapes(c) for c in self.clients],
+            "val_histories": {c.name: c.val_history for c in self.clients},
+            "best_val": {c.name: float(c.best_val) for c in self.clients},
+            "n_rounds": self.n_rounds,
+            "selections": self.selections,
+            "pool_ages": {f"{u}|{i}": a
+                          for (u, i), a in self.pool.ages.items()},
+            "sel_rng": self._sel_rng.bit_generator.state,
+            "switch_rng": self._switch_rng.bit_generator.state,
+        }
+        # atomic manifest write = the commit; only then prune state files
+        # superseded by it (the previous pair stays intact until here)
+        tmp = d / "manifest.json.tmp"
+        tmp.write_text(json.dumps(manifest))
+        os.replace(tmp, d / "manifest.json")
+        for p in d.glob("state_*.msgpack"):
+            if p.name != state_name:
+                p.unlink()
+        return d
+
+    @classmethod
+    def restore(cls, directory, clients: Sequence[FederatedClient], *,
+                engine: Optional[str] = None,
+                callbacks: Sequence[Callback] = ()) -> "Federation":
+        """Rebuild a saved federation over freshly-constructed clients (the
+        data pipeline is re-run by the caller; everything learned/random is
+        overlaid from the checkpoint, bit-identically)."""
+        d = Path(directory)
+        manifest = json.loads((d / "manifest.json").read_text())
+        names = [c.name for c in clients]
+        if names != manifest["names"]:
+            raise ValueError(f"client names {names} do not match "
+                             f"checkpoint {manifest['names']}")
+        nfs = [c.nf for c in clients]
+        if nfs != manifest["nf"]:
+            raise ValueError(f"client feature counts {nfs} do not match "
+                             f"checkpoint {manifest['nf']}")
+        shapes = [_client_data_shapes(c) for c in clients]
+        if shapes != manifest.get("data_shapes", shapes):
+            raise ValueError(
+                "client data shapes do not match the checkpoint — rebuild "
+                "the clients with the same data pipeline arguments "
+                f"(got {shapes}, checkpoint has {manifest['data_shapes']})")
+        ck_cfg = manifest["cfg"]
+        for c in clients:
+            # lr is baked into the client's jitted train step at
+            # construction (and w into its schema) — a mismatch would
+            # silently resume on the wrong optimizer/model
+            if c.cfg.lr != ck_cfg["lr"] or c.cfg.w != ck_cfg["w"]:
+                raise ValueError(
+                    f"client {c.name!r} was built with lr={c.cfg.lr}, "
+                    f"w={c.cfg.w} but the checkpoint has "
+                    f"lr={ck_cfg['lr']}, w={ck_cfg['w']} — rebuild the "
+                    f"clients with the checkpointed config")
+        cfg = HFLConfig(**manifest["cfg"])
+        fed = cls(clients, cfg,
+                  policies=FederationPolicies.from_spec(manifest["policies"]),
+                  schedule=RoundSchedule(**manifest["schedule"]),
+                  callbacks=callbacks,
+                  engine=engine or manifest["engine"])
+        state = ckpt.load(d / manifest.get("state_file", "state.msgpack"))
+        if state.get("epoch") != manifest["epoch"]:
+            raise ValueError(
+                f"checkpoint is torn: state.msgpack is at epoch "
+                f"{state.get('epoch')} but manifest.json at "
+                f"{manifest['epoch']} (a save was interrupted between the "
+                f"two writes) — re-save or fall back to an older checkpoint")
+        for c, cs in zip(fed.clients, state["clients"]):
+            c.params = cs["params"]
+            c.opt_state = cs["opt_state"]
+            c.best_params = cs["best_params"]
+            c.val_history = list(manifest["val_histories"][c.name])
+            c.best_val = float(manifest["best_val"][c.name])
+        fed.pool.entries = {
+            (k.rsplit("|", 1)[0], int(k.rsplit("|", 1)[1])): entry
+            for k, entry in state["pool"].items()}
+        fed.pool.ages = {
+            (k.rsplit("|", 1)[0], int(k.rsplit("|", 1)[1])): int(a)
+            for k, a in manifest["pool_ages"].items()}
+        fed.epoch = int(manifest["epoch"])
+        fed.n_rounds = {n: int(v) for n, v in manifest["n_rounds"].items()}
+        fed.selections = {n: [list(s) for s in v]
+                          for n, v in manifest["selections"].items()}
+        fed._key = jnp.asarray(state["key"])
+        fed._sel_rng.bit_generator.state = manifest["sel_rng"]
+        fed._switch_rng.bit_generator.state = manifest["switch_rng"]
+        return fed
+
+
+# ---------------------------------------------------------------------------
+# Non-federated loop on the shared schedule (benchmark systems)
+# ---------------------------------------------------------------------------
+
+def fit_local(step_fn, eval_fn, params, opt_state, train, valid,
+              schedule: RoundSchedule, callbacks: Sequence[Callback] = ()):
+    """Single-model training on the shared :class:`RoundSchedule` with
+    save-best-on-validation (paper §5.2) and the same callback hooks as
+    :meth:`Federation.fit` — the benchmark systems' loop.
+
+    ``step_fn(params, opt_state, xs, xd, y) -> (params, opt_state)``;
+    ``eval_fn(params, xs, xd, y) -> scalar``.  Returns
+    ``(params, opt_state, best_params, best_val)``."""
+    xs, xd, y = train
+    best_val, best_params = np.inf, params
+    for cb in callbacks:
+        cb.on_fit_start(None)
+    for epoch in range(schedule.epochs):
+        for rnd, sl in enumerate(schedule.slices(len(y))):
+            params, opt_state = step_fn(params, opt_state,
+                                        xs[sl], xd[sl], y[sl])
+            for cb in callbacks:
+                cb.on_round(None, epoch, rnd)
+        v = float(eval_fn(params, *valid))
+        if v < best_val:
+            best_val, best_params = v, params
+        for cb in callbacks:
+            cb.on_epoch_end(None, epoch, {"val": v}, {})
+    for cb in callbacks:
+        cb.on_fit_end(None, {"best_val": best_val})
+    return params, opt_state, best_params, best_val

@@ -1,4 +1,4 @@
-"""Heterogeneous Federated Learning mechanism (paper §4.2).
+"""Heterogeneous Federated Learning primitives (paper §4.2).
 
 Implements, faithfully:
   * the asynchronous **head pool** (decentralized: every user publishes its
@@ -16,29 +16,26 @@ Training protocol per the paper §4.2/§5.2: one gradient-descent update per R
 consecutive periods (batch = R samples), Adam lr 0.01, 50 epochs, save-best
 on validation.
 
-Two execution engines (see docs/ARCHITECTURE.md):
-  * ``engine="sequential"`` — the reference oracle: a Python loop over
-    clients with an explicit :class:`HeadPool` object, per-feature scoring
-    and host-side argmin.  Handles heterogeneous feature counts and
-    ragged per-client data lengths.
-  * ``engine="batched"`` — client parameters stacked along a leading axis,
-    the Adam step ``vmap``-ed across clients, and selection+blend for all
-    nf features fused into ONE jitted scan over clients (no per-feature
-    Python loop, no host sync inside a round).  Requires homogeneous
-    clients (same nf, same data shapes).  Matches the sequential oracle's
-    selections exactly and its head params to float tolerance.
+Orchestration lives in `core/federation.py` (the composable Federation API:
+pluggable policies, callbacks, resumable state, the sequential and batched
+executors); the pluggable policy implementations live in `core/policies.py`.
+This module keeps the paper primitives — the client, the pool, Eq.-7
+scoring, Eq.-8 blending — plus :func:`run_federated_training`, the thin
+legacy entry point that maps ``HFLConfig.mode`` strings onto the policy API.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import importlib
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import networks as N
+from repro.core.policies import plateaued
 from repro.optim import adam, apply_updates
 from repro.sharding import spec as S
 
@@ -58,20 +55,15 @@ class HFLConfig:
 
 def switch_active(val_history: Sequence[float], cfg: HFLConfig) -> bool:
     """Switching mechanism: FL only when validation has plateaued for
-    `patience` epochs (always/random modes bypass; no disables)."""
+    `patience` epochs (always/random modes bypass; no disables).  The core
+    plateau rule is :func:`repro.core.policies.plateaued`; explicit policy
+    objects (policies.PlateauSwitch etc.) are the composable form."""
     mode = cfg.mode
     if mode == "no":
         return False
     if mode in ("always", "random"):
         return True
-    h = val_history
-    p = cfg.patience
-    if p <= 0:                   # zero-patience: eligible from epoch 1 on
-        return len(h) > 0
-    if len(h) < p + 1:
-        return False
-    best_before = min(h[:-p])
-    return all(v >= best_before for v in h[-p:])
+    return plateaued(val_history, cfg.patience)
 
 
 # ---------------------------------------------------------------------------
@@ -118,18 +110,19 @@ class FederatedClient:
         self.best_params = self.params
         self._recent: Optional[Tuple[np.ndarray, np.ndarray]] = None  # xd, y
 
-    def train_epoch(self) -> None:
+    def train_epoch(self, R: Optional[int] = None) -> Iterator[None]:
+        """Generator over the epoch's R-batches: one Adam update per batch,
+        yielding after each — a yield is one federated opportunity.  `R`
+        defaults to the client's config (a Federation passes its schedule's
+        R so both executors slice identically)."""
         xs, xd, y = self.train
-        R = self.cfg.R
-        n = len(y)
-        for start in range(0, n - R + 1, R):
+        R = self.cfg.R if R is None else R
+        for start in range(0, len(y) - R + 1, R):
             sl = slice(start, start + R)
             self.params, self.opt_state, _ = self._train_step(
                 self.params, self.opt_state, xs[sl], xd[sl], y[sl])
             self._recent = (xd[sl], y[sl])
-            yield_round = True  # one federated opportunity per R periods
-            if yield_round:
-                yield
+            yield
 
     def val_mse(self) -> float:
         return float(self._eval_mse(self.params, *self.valid))
@@ -158,15 +151,30 @@ class HeadPool:
 
     Entries persist until overwritten ("the last version stored in the
     pool"), so a user that skips publication rounds still contributes its
-    stale heads — the paper's asynchrony semantics."""
+    stale heads — the paper's asynchrony semantics.  Each entry carries an
+    age (federated opportunities since publication, advanced by
+    :meth:`tick`) so a bounded :class:`~repro.core.policies.PoolPolicy` can
+    hide — not delete — entries that have gone unrefreshed too long."""
 
     def __init__(self):
         self.entries: Dict[Tuple[str, int], dict] = {}
+        self.ages: Dict[Tuple[str, int], int] = {}
 
-    def publish(self, user: str, head_params_stacked, nf: int) -> None:
+    def publish(self, user: str, head_params_stacked, nf: int,
+                age: int = 0) -> None:
         for i in range(nf):
             entry = jax.tree_util.tree_map(lambda p: p[i], head_params_stacked)
             self.entries[(user, i)] = entry
+            self.ages[(user, i)] = age
+
+    def tick(self) -> None:
+        """Advance every entry's age by one federated opportunity."""
+        for k in self.ages:
+            self.ages[k] += 1
+
+    def age_of(self, user: str) -> int:
+        """A user's publication age (its entries are published together)."""
+        return self.ages.get((user, 0), 0)
 
     def stacked_for(self, exclude_user: str):
         """All pool heads from OTHER users, stacked to (ns, ...)."""
@@ -177,9 +185,22 @@ class HeadPool:
             lambda *xs: jnp.stack(xs), *[self.entries[k] for k in keys])
         return stacked, keys
 
+    def fresh_mask(self, exclude_user: str, max_age: Optional[int] = None,
+                   keys: Optional[List[Tuple[str, int]]] = None) -> np.ndarray:
+        """Validity mask aligned with :meth:`stacked_for`'s sorted keys:
+        True where the entry is young enough to be served (always, when
+        `max_age` is None — last-write-wins).  Pass the `keys` that
+        stacked_for returned to guarantee alignment with its rows."""
+        if keys is None:
+            keys = [k for k in sorted(self.entries) if k[0] != exclude_user]
+        if max_age is None:
+            return np.ones(len(keys), bool)
+        return np.array([self.ages.get(k, 0) <= max_age for k in keys],
+                        bool)
+
 
 # ---------------------------------------------------------------------------
-# Selection (Eq. 7) + blending (Eq. 8)
+# Selection scoring (Eq. 7) + blending (Eq. 8)
 # ---------------------------------------------------------------------------
 
 @jax.jit
@@ -191,17 +212,24 @@ def pool_errors(pool_stacked, xd_i, y):
     return jnp.mean((y[None, :] - preds) ** 2, axis=1)
 
 
+@functools.lru_cache(maxsize=None)
+def _pool_kernel_ops():
+    """Cached resolver for the Pallas pool-scoring module: one import at
+    first dispatch, not one per round (failed imports are NOT cached —
+    lru_cache only memoizes successful returns)."""
+    return importlib.import_module("repro.kernels.pool_mlp.ops")
+
+
 def pool_errors_kernel(pool_stacked, xd_i, y):
     """TPU Pallas fused pool sweep (see src/repro/kernels/pool_mlp)."""
-    from repro.kernels.pool_mlp.ops import pool_mlp_errors
-    return pool_mlp_errors(pool_stacked, xd_i, y)
+    return _pool_kernel_ops().pool_mlp_errors(pool_stacked, xd_i, y)
 
 
 def pool_kernel_available() -> bool:
     """ImportError only — a genuinely broken kernel module must surface, not
     silently fall back to the vmap path."""
     try:
-        from repro.kernels.pool_mlp.ops import pool_mlp_errors  # noqa: F401
+        _pool_kernel_ops()
         return True
     except ImportError:
         return False
@@ -217,278 +245,27 @@ def blend(target_heads_stacked, selected_stacked, alpha: float):
 
 def federated_round(client: FederatedClient, pool: HeadPool,
                     rng: np.random.Generator) -> Optional[List[int]]:
-    """One heterogeneous-transfer round for `client` (paper Fig. 6).
+    """One heterogeneous-transfer round for `client` (paper Fig. 6) under the
+    client's legacy ``cfg.mode`` — a shim over
+    :func:`repro.core.federation.policy_round` with the mode's policy bundle.
     Returns the selected pool indices per feature (for logging), or None."""
-    if client._recent is None:
-        return None
-    stacked, keys = pool.stacked_for(client.name)
-    if stacked is None:
-        return None
-    xd_R, y_R = client._recent
-    nf = client.nf
-    chosen = []
-    sel_entries = []
-    for i in range(nf):
-        if client.cfg.mode == "random":
-            j = int(rng.integers(len(keys)))
-        else:
-            score_fn = (pool_errors_kernel if client.cfg.use_pool_kernel
-                        else pool_errors)
-            errs = score_fn(stacked, jnp.asarray(xd_R[:, i]), jnp.asarray(y_R))
-            j = int(jnp.argmin(errs))
-        chosen.append(j)
-        sel_entries.append(jax.tree_util.tree_map(lambda p: p[j], stacked))
-    selected = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sel_entries)
-    client.params = dict(client.params)
-    client.params["heads"] = blend(client.params["heads"], selected,
-                                   client.cfg.alpha)
-    return chosen
+    from repro.core.federation import policy_round
+    from repro.core.policies import FederationPolicies
+    return policy_round(client, pool, rng,
+                        FederationPolicies.from_config(client.cfg),
+                        use_kernel=client.cfg.use_pool_kernel)
 
 
 # ---------------------------------------------------------------------------
-# Fused multi-client selection + blend (batched engine)
+# Orchestration (legacy entry point over the Federation API)
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("nf", "mode", "use_kernel"))
-def fused_selection_round(heads, pool_heads, xd_R, y_R, active, alpha, key,
-                          *, nf: int, mode: str, use_kernel: bool):
-    """One federated opportunity for ALL clients, fused into a single jitted
-    scan — replaces C x nf Python-level `pool_errors` calls and C x nf
-    host-side argmin syncs with one device program.
-
-    The scan walks clients in their processing order, carrying the pool so
-    that client i scores the heads already republished by clients < i in the
-    same sub-round — exactly the sequential oracle's interleaving.
-
-    heads, pool_heads: head params stacked to (C, nf, ...);
-    xd_R: (C, R, nf, w); y_R: (C, R); active: (C,) bool; key: PRNG key
-    (random mode only).  Returns (new_heads, new_pool, chosen) where chosen
-    is (C, nf) int32 flat indices into the row-major (client, feature) pool
-    (-1 where the client was inactive)."""
-    C = y_R.shape[0]
-    ns = C * nf
-
-    def flat(pool):
-        return jax.tree_util.tree_map(
-            lambda p: p.reshape((ns,) + p.shape[2:]), pool)
-
-    def body(carry, inp):
-        heads, pool = carry
-        i, key_i = inp
-        fp = flat(pool)
-        xd_i = jnp.moveaxis(xd_R[i], 1, 0)           # (nf, R, w)
-        if mode == "random":
-            # uniform over the ns - nf foreign entries, mapped to full index
-            e = jax.random.randint(key_i, (nf,), 0, ns - nf)
-            j = jnp.where(e >= i * nf, e + nf, e)
-        else:
-            if use_kernel:
-                from repro.kernels.pool_mlp.ops import pool_mlp_errors_features
-                errs = pool_mlp_errors_features(fp, xd_i, y_R[i])
-            else:
-                errs = jax.vmap(
-                    lambda xf: pool_errors(fp, xf, y_R[i]))(xd_i)  # (nf, ns)
-            own = (jnp.arange(ns) // nf) == i
-            errs = jnp.where(own[None, :], jnp.inf, errs)
-            j = jnp.argmin(errs, axis=1)             # (nf,)
-        selected = jax.tree_util.tree_map(lambda p: p[j], fp)   # (nf, ...)
-        mine = jax.tree_util.tree_map(lambda h: h[i], heads)
-        blended = blend(mine, selected, alpha)
-        act = active[i]
-        new_mine = jax.tree_util.tree_map(
-            lambda b, m: jnp.where(act, b, m), blended, mine)
-        heads = jax.tree_util.tree_map(
-            lambda h, m: h.at[i].set(m), heads, new_mine)
-        # publication: active clients overwrite their pool row, inactive
-        # clients' stale entries persist (paper's asynchrony semantics)
-        pool = jax.tree_util.tree_map(
-            lambda pl, m: pl.at[i].set(jnp.where(act, m, pl[i])),
-            pool, new_mine)
-        chosen = jnp.where(act, j, -1).astype(jnp.int32)
-        return (heads, pool), chosen
-
-    keys = jax.random.split(key, C)
-    (heads, pool_heads), chosen = jax.lax.scan(
-        body, (heads, pool_heads), (jnp.arange(C), keys))
-    return heads, pool_heads, chosen
-
-
-def _stack_trees(trees):
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
-
-
-def _tree_row(tree, i):
-    return jax.tree_util.tree_map(lambda p: p[i], tree)
-
-
-def _selection_lut(names: Sequence[str], nf: int) -> np.ndarray:
-    """Map the batched engine's row-major (client, feature) flat pool index
-    to the sequential oracle's excluded, sorted-by-(name, feature) index —
-    so both engines log identical selections."""
-    C = len(names)
-    lut = np.full((C, C * nf), -1, np.int64)
-    for i in range(C):
-        others = sorted((names[j], j) for j in range(C) if j != i)
-        for rank, (_, j) in enumerate(others):
-            for g in range(nf):
-                lut[i, j * nf + g] = rank * nf + g
-    return lut
-
-
-@functools.lru_cache(maxsize=None)
-def _make_batched_fns(lr: float):
-    """vmap-over-clients versions of the exact same per-client step/eval the
-    sequential engine jits (see _train_step / _eval_mse)."""
-    opt = adam(lr)
-    step = jax.jit(jax.vmap(functools.partial(_train_step, opt)))
-    evaluate = jax.jit(jax.vmap(_eval_mse))
-    return step, evaluate
-
-
-def _run_batched(clients: Sequence[FederatedClient], cfg: HFLConfig,
-                 verbose: bool = False):
-    """Batched engine: one vmapped Adam step for all clients per sub-round,
-    one fused selection+blend scan per federated opportunity."""
-    C = len(clients)
-    names = [c.name for c in clients]
-    if len(set(names)) != C:
-        raise ValueError(f"duplicate client names: {names}")
-    nf = clients[0].nf
-    shapes = [tuple(np.shape(a) for a in c.train) for c in clients]
-    if any(c.nf != nf for c in clients) or len(set(shapes)) != 1 or \
-            len({tuple(np.shape(a) for a in c.valid) for c in clients}) != 1 or \
-            len({tuple(np.shape(a) for a in c.test) for c in clients}) != 1:
-        raise ValueError(
-            "engine='batched' requires homogeneous clients (same nf and "
-            "identical train/valid/test shapes); truncate to a common length "
-            "(see experiment.population_task_data) or use "
-            "engine='sequential'")
-
-    xs = jnp.stack([np.asarray(c.train[0]) for c in clients])
-    xd = jnp.stack([np.asarray(c.train[1]) for c in clients])
-    y = jnp.stack([np.asarray(c.train[2]) for c in clients])
-    val = tuple(jnp.stack([np.asarray(c.valid[k]) for c in clients])
-                for k in range(3))
-    tst = tuple(jnp.stack([np.asarray(c.test[k]) for c in clients])
-                for k in range(3))
-
-    params = _stack_trees([c.params for c in clients])
-    opt_state = _stack_trees([c.opt_state for c in clients])
-    pool_heads = params["heads"]                  # initial publication
-    step_fn, eval_fn = _make_batched_fns(cfg.lr)
-    use_kernel = cfg.use_pool_kernel and pool_kernel_available()
-    lut = _selection_lut(names, nf)
-
-    histories = [list(c.val_history) for c in clients]
-    best_val = np.array([c.best_val for c in clients], np.float64)
-    best_params = params
-    n_rounds = np.zeros(C, np.int64)
-    selections: Dict[str, list] = {n: [] for n in names}
-    key = jax.random.PRNGKey(cfg.seed)
-    n, R = int(y.shape[1]), cfg.R
-
-    for epoch in range(cfg.epochs):
-        active = np.array([switch_active(histories[i], cfg)
-                           for i in range(C)])
-        active_dev = jnp.asarray(active)
-        epoch_chosen = []          # device arrays; materialized once/epoch
-        for start in range(0, n - R + 1, R):
-            sl = slice(start, start + R)
-            params, opt_state, _ = step_fn(
-                params, opt_state, xs[:, sl], xd[:, sl], y[:, sl])
-            if cfg.mode != "no" and active.any():
-                if C >= 2:
-                    key, sub = jax.random.split(key)
-                    new_heads, pool_heads, chosen = fused_selection_round(
-                        params["heads"], pool_heads, xd[:, sl], y[:, sl],
-                        active_dev, cfg.alpha, sub,
-                        nf=nf, mode=cfg.mode, use_kernel=use_kernel)
-                    params = {**params, "heads": new_heads}
-                    epoch_chosen.append(chosen)
-                n_rounds += active
-        for chosen in map(np.asarray, epoch_chosen):
-            for i in range(C):
-                if active[i]:
-                    selections[names[i]].append(lut[i, chosen[i]].tolist())
-        v = np.asarray(eval_fn(params, *val), np.float64)
-        improved = v < best_val
-        best_val = np.where(improved, v, best_val)
-        mask = jnp.asarray(improved)
-        best_params = jax.tree_util.tree_map(
-            lambda b, p: jnp.where(
-                mask.reshape((C,) + (1,) * (p.ndim - 1)), p, b),
-            best_params, params)
-        for i in range(C):
-            histories[i].append(float(v[i]))
-        if verbose:
-            msg = " ".join(f"{names[i]}={v[i]:.4f}"
-                           f"{'*' if active[i] else ''}" for i in range(C))
-            print(f"[hfl/batched] epoch {epoch:3d} val: {msg}", flush=True)
-
-    test = np.asarray(eval_fn(best_params, *tst), np.float64)
-    # write the final state back so the client objects stay usable
-    for i, c in enumerate(clients):
-        c.params = _tree_row(params, i)
-        c.opt_state = _tree_row(opt_state, i)
-        c.val_history = histories[i]
-        c.best_val = float(best_val[i])
-        c.best_params = _tree_row(best_params, i)
-    return {names[i]: {"val": histories[i], "test": float(test[i]),
-                       "rounds": int(n_rounds[i]),
-                       "best_val": float(best_val[i]),
-                       "selections": selections[names[i]]}
-            for i in range(C)}
-
-
-# ---------------------------------------------------------------------------
-# Orchestration
-# ---------------------------------------------------------------------------
-
-def _run_sequential(clients: Sequence[FederatedClient], cfg: HFLConfig,
-                    verbose: bool = False):
-    rng = np.random.default_rng(cfg.seed)
-    pool = HeadPool()
-    # initial publication so the pool is never empty (asynchronous start)
-    for c in clients:
-        pool.publish(c.name, c.params["heads"], c.nf)
-
-    n_rounds = {c.name: 0 for c in clients}
-    selections: Dict[str, list] = {c.name: [] for c in clients}
-    for epoch in range(cfg.epochs):
-        active = {c.name: c.fl_active() for c in clients}
-        iters = {c.name: c.train_epoch() for c in clients}
-        live = set(iters)
-        while live:
-            for c in clients:
-                if c.name not in live:
-                    continue
-                try:
-                    next(iters[c.name])
-                except StopIteration:
-                    live.discard(c.name)
-                    continue
-                if active[c.name] and cfg.mode != "no":
-                    sel = federated_round(c, pool, rng)
-                    if sel is not None:
-                        selections[c.name].append(sel)
-                    n_rounds[c.name] += 1
-                    pool.publish(c.name, c.params["heads"], c.nf)
-        for c in clients:
-            c.end_epoch()
-        if verbose:
-            msg = " ".join(f"{c.name}={c.val_history[-1]:.4f}"
-                           f"{'*' if active[c.name] else ''}" for c in clients)
-            print(f"[hfl] epoch {epoch:3d} val: {msg}", flush=True)
-    return {c.name: {"val": c.val_history, "test": c.test_mse(),
-                     "rounds": n_rounds[c.name], "best_val": c.best_val,
-                     "selections": selections[c.name]}
-            for c in clients}
-
 
 def run_federated_training(clients: Sequence[FederatedClient],
                            cfg: HFLConfig, verbose: bool = False,
                            engine: str = "sequential"):
-    """Decentralized HFL over a set of clients.
+    """Decentralized HFL over a set of clients — compat shim over
+    :class:`repro.core.federation.Federation` with the ``cfg.mode`` legacy
+    shorthand expanded to an explicit policy bundle.
 
     engine="sequential": the reference oracle (Python loop, HeadPool object,
     host-side per-feature argmin); handles heterogeneous nf / ragged data.
@@ -499,8 +276,5 @@ def run_federated_training(clients: Sequence[FederatedClient],
     sorted by (user, feature) excluding the client itself, identical across
     engines for modes hfl/always/no (random draws from different rng
     streams)."""
-    if engine == "batched":
-        return _run_batched(clients, cfg, verbose=verbose)
-    if engine != "sequential":
-        raise ValueError(f"unknown engine {engine!r}")
-    return _run_sequential(clients, cfg, verbose=verbose)
+    from repro.core.federation import Federation
+    return Federation(clients, cfg, engine=engine).fit(verbose=verbose)

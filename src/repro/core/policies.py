@@ -1,0 +1,360 @@
+"""Pluggable federation policies (the composable HFL API).
+
+The paper's mechanisms are four orthogonal decisions, each now a policy
+protocol with interchangeable implementations:
+
+  * :class:`SwitchPolicy`  — WHEN a client federates.  The paper's
+    validation-plateau rule (:class:`PlateauSwitch`), plus ``always`` /
+    ``never`` / Bernoulli-``prob(p)`` variants.
+  * :class:`SelectionPolicy` — WHICH pool head a client pulls per feature.
+    Eq. 7 argmin (:class:`ArgminSelection`), uniform :class:`RandomSelection`
+    (the §5.5 ablation), softmax-weighted sampling and uniform-over-top-k.
+  * :class:`TransferRule` — HOW a selected head is merged into the local
+    head.  Eq. 8 alpha-blend (:class:`AlphaBlend`) and a per-feature-alpha
+    variant.
+  * :class:`PoolPolicy` — WHAT the pool serves.  Last-write-wins asynchrony
+    (stale entries persist forever, the paper's semantics) or a bounded
+    max-staleness variant that hides entries older than ``max_age``
+    federated opportunities.
+
+Every policy is a **frozen dataclass**: hashable, so the whole bundle can be
+a static argument to the batched engine's fused jitted round — selection /
+transfer expose *jittable* ``*_batched`` methods traced straight into the
+scan, next to the host-side methods the sequential oracle calls.  Legacy
+``HFLConfig.mode`` strings remain factory shorthands via
+:meth:`FederationPolicies.from_config`.
+
+Policies serialize to plain dict specs (``spec()`` / :func:`policy_from_spec`)
+so a resumable :class:`~repro.core.federation.Federation` checkpoint can
+rebuild them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def plateaued(val_history: Sequence[float], patience: int) -> bool:
+    """The paper's switching criterion: the validation loss has not improved
+    for `patience` consecutive epochs (zero patience: eligible from epoch 1
+    on)."""
+    h = val_history
+    if patience <= 0:
+        return len(h) > 0
+    if len(h) < patience + 1:
+        return False
+    best_before = min(h[:-patience])
+    return all(v >= best_before for v in h[-patience:])
+
+
+class _Spec:
+    """spec()/from-spec plumbing shared by every policy dataclass."""
+
+    def spec(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["kind"] = type(self).__name__
+        return d
+
+
+# ---------------------------------------------------------------------------
+# SwitchPolicy — when does a client federate?
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SwitchPolicy(_Spec):
+    """Decides, at the start of each epoch, whether a client participates in
+    federated transfer this epoch.  Host-side only (the activity mask is
+    computed once per epoch on the host by both engines, in client order, so
+    stochastic policies stay engine-deterministic)."""
+
+    def active(self, val_history: Sequence[float],
+               rng: np.random.Generator) -> bool:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PlateauSwitch(SwitchPolicy):
+    """Federate only when validation has plateaued (paper §4.2)."""
+    patience: int = 3
+
+    def active(self, val_history, rng):
+        return plateaued(val_history, self.patience)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysSwitch(SwitchPolicy):
+    """Every epoch federates (§5.5 `always`, also the `random` ablation)."""
+
+    def active(self, val_history, rng):
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class NeverSwitch(SwitchPolicy):
+    """Transfer disabled (§5.5 `no`)."""
+
+    def active(self, val_history, rng):
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbSwitch(SwitchPolicy):
+    """Bernoulli(p) participation — partial-participation scenarios."""
+    p: float = 0.5
+
+    def active(self, val_history, rng):
+        return bool(rng.random() < self.p)
+
+
+# ---------------------------------------------------------------------------
+# SelectionPolicy — which pool head per feature?
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SelectionPolicy(_Spec):
+    """Picks one pool entry per target feature.
+
+    Host path (sequential oracle): :meth:`select_host` gets the Eq.-7 error
+    vector (np, ``inf`` at excluded entries; ``None`` when
+    ``needs_errors`` is False), the validity mask, and the shared host rng —
+    returns an int index.
+
+    Batched path: :meth:`select_batched` is traced inside the fused round
+    scan; gets errors ``(nf, ns)`` (already ``inf``-masked) or ``None``, the
+    per-entry exclusion mask ``(ns,)``, a per-client PRNG key, and static
+    geometry — returns ``(nf,)`` int32 flat pool indices."""
+
+    needs_errors = True
+
+    def select_host(self, errs: Optional[np.ndarray], valid: np.ndarray,
+                    rng: np.random.Generator) -> int:
+        raise NotImplementedError
+
+    def select_batched(self, errs, excluded, key, *, nf: int, ns: int, i,
+                       bounded: bool):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ArgminSelection(SelectionPolicy):
+    """Eq. 7: the pool head with the smallest preliminary-prediction squared
+    error on the client's last-R probe batch."""
+
+    def select_host(self, errs, valid, rng):
+        return int(np.argmin(errs))
+
+    def select_batched(self, errs, excluded, key, *, nf, ns, i, bounded):
+        return jnp.argmin(errs, axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomSelection(SelectionPolicy):
+    """Uniform over the (valid) foreign pool — the §5.5 `random` ablation.
+    Skips Eq.-7 scoring entirely."""
+
+    needs_errors = False
+
+    def select_host(self, errs, valid, rng):
+        if valid.all():              # legacy stream: one draw over all keys
+            return int(rng.integers(len(valid)))
+        idx = np.flatnonzero(valid)
+        return int(idx[rng.integers(len(idx))])
+
+    def select_batched(self, errs, excluded, key, *, nf, ns, i, bounded):
+        if not bounded:
+            # uniform over the ns - nf foreign entries, mapped to full index
+            e = jax.random.randint(key, (nf,), 0, ns - nf)
+            return jnp.where(e >= i * nf, e + nf, e)
+        logits = jnp.where(excluded, -jnp.inf, 0.0)
+        return jax.random.categorical(
+            key, jnp.broadcast_to(logits, (nf, ns)), axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxSelection(SelectionPolicy):
+    """Sample proportionally to softmax(-err / temperature) — softer than
+    argmin, explores near-optimal sources."""
+    temperature: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature <= 0:
+            raise ValueError(f"temperature must be > 0, "
+                             f"got {self.temperature} (use ArgminSelection "
+                             f"for the deterministic limit)")
+
+    def select_host(self, errs, valid, rng):
+        logits = -errs / self.temperature
+        logits = logits - logits[np.isfinite(logits)].max()
+        p = np.where(np.isfinite(logits), np.exp(logits), 0.0)
+        return int(rng.choice(len(errs), p=p / p.sum()))
+
+    def select_batched(self, errs, excluded, key, *, nf, ns, i, bounded):
+        return jax.random.categorical(key, -errs / self.temperature, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSelection(SelectionPolicy):
+    """Uniform over the k lowest-error valid heads (k=1 == argmin)."""
+    k: int = 3
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+
+    def select_host(self, errs, valid, rng):
+        order = np.argsort(errs, kind="stable")       # inf (excluded) last
+        kk = max(1, min(self.k, int(np.isfinite(errs).sum())))
+        return int(order[rng.integers(kk)])
+
+    def select_batched(self, errs, excluded, key, *, nf, ns, i, bounded):
+        k = min(self.k, ns)
+        neg, idx = jax.lax.top_k(-errs, k)            # (nf, k), best first
+        kk = jnp.clip(jnp.sum(neg > -jnp.inf, axis=1), 1, k)
+        u = jax.random.uniform(key, (nf,))
+        r = jnp.minimum((u * kk).astype(jnp.int32), kk - 1)
+        return idx[jnp.arange(nf), r]
+
+
+# ---------------------------------------------------------------------------
+# TransferRule — how is a selected head merged in?
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransferRule(_Spec):
+    """Merges the selected pool heads into the client's own heads.  `apply`
+    operates on the stacked ``(nf, ...)`` head trees and must be jittable
+    (it is traced inside the batched engine's fused scan)."""
+
+    def apply(self, target_heads_stacked, selected_stacked):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaBlend(TransferRule):
+    """Eq. 8: H_i <- alpha * H_hat + (1 - alpha) * H_i for all nf heads."""
+    alpha: float = 0.2
+
+    def apply(self, target, selected):
+        a = self.alpha
+        return jax.tree_util.tree_map(
+            lambda t, s: a * s + (1 - a) * t, target, selected)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerFeatureAlpha(TransferRule):
+    """Eq. 8 with a distinct alpha per target feature (e.g. trust foreign
+    knowledge more on sparsely-observed channels)."""
+    alphas: Tuple[float, ...] = (0.2,)
+
+    def apply(self, target, selected):
+        a = jnp.asarray(self.alphas, jnp.float32)
+
+        def blend_leaf(t, s):
+            af = a.reshape((-1,) + (1,) * (t.ndim - 1))
+            return af * s + (1 - af) * t
+
+        return jax.tree_util.tree_map(blend_leaf, target, selected)
+
+
+# ---------------------------------------------------------------------------
+# PoolPolicy — what does the pool serve?
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolPolicy(_Spec):
+    """Asynchrony semantics of the head pool.  ``max_age`` is None for the
+    paper's last-write-wins rule (stale entries persist forever); an int
+    bounds how many federated opportunities an entry may go unrefreshed
+    before it stops being served to selectors (it is hidden, not deleted —
+    a republish revives the row)."""
+    max_age: Optional[int] = None
+
+    @property
+    def bounded(self) -> bool:
+        return self.max_age is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class LastWriteWins(PoolPolicy):
+    """Entries persist until overwritten — the paper's asynchrony."""
+    max_age: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxStaleness(PoolPolicy):
+    """Hide entries older than `max_age` federated opportunities."""
+    max_age: Optional[int] = 3
+
+
+# ---------------------------------------------------------------------------
+# Bundle + legacy-mode factory + spec round-trip
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FederationPolicies:
+    """One complete policy description consumed by BOTH engines.  Hashable,
+    so the bundle itself is a static argument of the fused batched round."""
+    switch: SwitchPolicy
+    selection: SelectionPolicy
+    transfer: TransferRule
+    pool: PoolPolicy
+
+    @classmethod
+    def from_config(cls, cfg) -> "FederationPolicies":
+        """Legacy ``HFLConfig.mode`` shorthand -> explicit policy bundle."""
+        mode = cfg.mode
+        if mode == "no":
+            switch: SwitchPolicy = NeverSwitch()
+        elif mode in ("always", "random"):
+            switch = AlwaysSwitch()
+        elif mode == "hfl":
+            switch = PlateauSwitch(patience=cfg.patience)
+        else:
+            raise ValueError(f"unknown HFL mode {mode!r}")
+        selection = (RandomSelection() if mode == "random"
+                     else ArgminSelection())
+        return cls(switch=switch, selection=selection,
+                   transfer=AlphaBlend(alpha=cfg.alpha),
+                   pool=LastWriteWins())
+
+    def spec(self) -> dict:
+        return {"switch": self.switch.spec(),
+                "selection": self.selection.spec(),
+                "transfer": self.transfer.spec(),
+                "pool": self.pool.spec()}
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "FederationPolicies":
+        return cls(**{slot: policy_from_spec(spec[slot])
+                      for slot in ("switch", "selection", "transfer", "pool")})
+
+
+_REGISTRY = {cls.__name__: cls for cls in (
+    PlateauSwitch, AlwaysSwitch, NeverSwitch, ProbSwitch,
+    ArgminSelection, RandomSelection, SoftmaxSelection, TopKSelection,
+    AlphaBlend, PerFeatureAlpha,
+    LastWriteWins, MaxStaleness, PoolPolicy,
+)}
+
+
+def register_policy(cls):
+    """Third-party policy plugin hook: registered classes round-trip through
+    Federation checkpoints.  Usable as a decorator."""
+    _REGISTRY[cls.__name__] = cls
+    return cls
+
+
+def policy_from_spec(spec: dict):
+    d = dict(spec)
+    kind = d.pop("kind")
+    if kind not in _REGISTRY:
+        raise ValueError(f"unknown policy kind {kind!r} "
+                         f"(register it with policies.register_policy)")
+    for k, v in d.items():          # JSON round-trip turns tuples into lists
+        if isinstance(v, list):
+            d[k] = tuple(v)
+    return _REGISTRY[kind](**d)

@@ -1,0 +1,305 @@
+"""The composable Federation API: legacy mode-string vs explicit
+policy-object parity on BOTH engines, mid-training save/restore to
+bit-identical histories, callbacks, and the new policy variants end-to-end."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.federation import (Callback, Federation, MetricsCapture,
+                                   RoundSchedule, SaveBestCallback,
+                                   VerboseLogger)
+from repro.core.hfl import (FederatedClient, HFLConfig,
+                            run_federated_training)
+from repro.core.policies import (AlphaBlend, AlwaysSwitch, ArgminSelection,
+                                 FederationPolicies, LastWriteWins,
+                                 MaxStaleness, PerFeatureAlpha,
+                                 SoftmaxSelection)
+
+ENGINES = ("sequential", "batched")
+
+
+def _mk_clients(cfg, C=3, nf=2, n=40, seed0=100):
+    out = []
+    for i in range(C):
+        rng = np.random.default_rng(seed0 + i)
+        mk = lambda m: (rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"c{i}", nf, cfg, mk(n), mk(30), mk(30),
+                                   jax.random.PRNGKey(i)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Legacy mode strings == explicit policy objects, on both engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("mode", ("hfl", "always", "random", "no"))
+def test_mode_string_equals_policy_objects(mode, engine):
+    cfg = HFLConfig(mode=mode, epochs=5, R=20, patience=2)
+    h_mode = Federation(_mk_clients(cfg), cfg, engine=engine).fit()
+    h_pol = Federation(_mk_clients(cfg), cfg,
+                       policies=FederationPolicies.from_config(cfg),
+                       engine=engine).fit()
+    for name in h_mode:
+        assert h_mode[name]["selections"] == h_pol[name]["selections"]
+        assert h_mode[name]["rounds"] == h_pol[name]["rounds"]
+        assert h_mode[name]["val"] == h_pol[name]["val"]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_legacy_shim_equals_federation_api(engine):
+    """run_federated_training(clients, cfg) is a pure pass-through."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    h_shim = run_federated_training(_mk_clients(cfg), cfg, engine=engine)
+    h_fed = Federation(_mk_clients(cfg), cfg, engine=engine).fit()
+    assert h_shim == h_fed
+
+
+def test_policy_runs_match_across_engines():
+    """Deterministic policy bundles (incl. the NEW staleness + per-feature
+    alpha variants) reproduce the sequential oracle's selections exactly on
+    the batched engine."""
+    cfg = HFLConfig(mode="always", epochs=4, R=20)
+    pol = FederationPolicies(AlwaysSwitch(), ArgminSelection(),
+                             PerFeatureAlpha((0.1, 0.4)), MaxStaleness(2))
+    h_seq = Federation(_mk_clients(cfg), cfg, policies=pol,
+                       engine="sequential").fit()
+    h_bat = Federation(_mk_clients(cfg), cfg, policies=pol,
+                       engine="batched").fit()
+    assert any(h_seq[n]["rounds"] > 0 for n in h_seq)
+    for name in h_seq:
+        assert h_seq[name]["selections"] == h_bat[name]["selections"]
+        assert h_seq[name]["rounds"] == h_bat[name]["rounds"]
+        np.testing.assert_allclose(h_seq[name]["val"], h_bat[name]["val"],
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_softmax_selection_trains(engine):
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    pol = FederationPolicies(AlwaysSwitch(), SoftmaxSelection(0.5),
+                             AlphaBlend(0.2), LastWriteWins())
+    h = Federation(_mk_clients(cfg), cfg, policies=pol, engine=engine).fit()
+    for v in h.values():
+        assert v["rounds"] > 0 and np.isfinite(v["test"])
+        assert all(len(s) == 2 for s in v["selections"])
+
+
+def test_unknown_engine_rejected():
+    cfg = HFLConfig(epochs=1, R=20)
+    with pytest.raises(ValueError, match="unknown engine"):
+        Federation(_mk_clients(cfg), cfg, engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# Resumable state: save/restore mid-training is bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_save_restore_bit_identical_resume(tmp_path, engine):
+    cfg = HFLConfig(mode="hfl", epochs=8, R=20, patience=2)
+    h_straight = Federation(_mk_clients(cfg), cfg, engine=engine).fit()
+
+    fed = Federation(_mk_clients(cfg), cfg, engine=engine)
+    fed.fit(epochs=4)
+    fed.save(tmp_path / "ck")
+    restored = Federation.restore(tmp_path / "ck", _mk_clients(cfg))
+    assert restored.epoch == 4 and restored.engine == engine
+    h_resumed = restored.fit()          # the remaining 4 epochs
+
+    for name in h_straight:
+        assert h_straight[name]["val"] == h_resumed[name]["val"]
+        assert h_straight[name]["selections"] == \
+            h_resumed[name]["selections"]
+        assert h_straight[name]["rounds"] == h_resumed[name]["rounds"]
+        assert h_straight[name]["best_val"] == h_resumed[name]["best_val"]
+    assert any(h_straight[n]["rounds"] > 0 for n in h_straight)
+
+
+def test_save_restore_random_mode_preserves_rng_stream(tmp_path):
+    """The host selection rng stream continues bit-identically across a
+    checkpoint (mode=random consumes it every round)."""
+    cfg = HFLConfig(mode="random", epochs=6, R=20)
+    h_straight = Federation(_mk_clients(cfg), cfg).fit()
+    fed = Federation(_mk_clients(cfg), cfg)
+    fed.fit(epochs=3)
+    fed.save(tmp_path / "ck")
+    h_resumed = Federation.restore(tmp_path / "ck", _mk_clients(cfg)).fit()
+    for name in h_straight:
+        assert h_straight[name]["selections"] == \
+            h_resumed[name]["selections"]
+
+
+def test_save_best_callback_seeds_best_across_restarts(tmp_path):
+    """A SaveBestCallback pointed at an existing checkpoint adopts its best
+    metric instead of clobbering it with the first (possibly worse) epoch."""
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    sb = SaveBestCallback(tmp_path / "b")
+    Federation(_mk_clients(cfg), cfg, callbacks=[sb]).fit()
+    assert np.isfinite(sb.best)
+    sb2 = SaveBestCallback(tmp_path / "b")
+    sb2.on_fit_start(None)
+    assert sb2.best == sb.best
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_save_mid_epoch_is_rejected(tmp_path, engine):
+    """on_round fires mid-epoch, where a save would checkpoint unlogged
+    selections and an un-advanced epoch counter — must raise, not corrupt."""
+    class MidEpochSaver(Callback):
+        def __init__(self):
+            self.raised = 0
+
+        def on_round(self, fed, epoch, rnd):
+            with pytest.raises(RuntimeError, match="epoch boundary"):
+                fed.save(tmp_path / "mid")
+            self.raised += 1
+
+    cfg = HFLConfig(mode="always", epochs=1, R=20)
+    saver = MidEpochSaver()
+    Federation(_mk_clients(cfg), cfg, engine=engine,
+               callbacks=[saver]).fit()
+    assert saver.raised > 0
+    assert not (tmp_path / "mid").exists()
+
+
+def test_checkpoint_survives_interrupted_resave(tmp_path):
+    """The manifest is the commit point: a crash that only managed to write
+    a newer state file leaves the previously committed pair restorable."""
+    cfg = HFLConfig(mode="always", epochs=4, R=20)
+    fed = Federation(_mk_clients(cfg), cfg)
+    fed.fit(epochs=2)
+    fed.save(tmp_path / "ck")
+    # simulate an interrupt after the state write, before the manifest swap
+    (tmp_path / "ck" / "state_00000099.msgpack").write_bytes(b"torn")
+    restored = Federation.restore(tmp_path / "ck", _mk_clients(cfg))
+    assert restored.epoch == 2
+    # a completed re-save prunes superseded state files
+    restored.fit(epochs=1)
+    restored.save(tmp_path / "ck")
+    states = sorted(p.name for p in (tmp_path / "ck").glob("state_*"))
+    assert states == ["state_00000003.msgpack"]
+
+
+def test_restore_rejects_mismatched_clients(tmp_path):
+    cfg = HFLConfig(epochs=2, R=20)
+    fed = Federation(_mk_clients(cfg), cfg)
+    fed.save(tmp_path / "ck")
+    wrong = _mk_clients(cfg, C=2)
+    with pytest.raises(ValueError, match="do not match"):
+        Federation.restore(tmp_path / "ck", wrong)
+
+
+def test_restore_rebuilds_policies_from_spec(tmp_path):
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    pol = FederationPolicies(AlwaysSwitch(), SoftmaxSelection(0.7),
+                             PerFeatureAlpha((0.1, 0.2)), MaxStaleness(3))
+    fed = Federation(_mk_clients(cfg), cfg, policies=pol)
+    fed.save(tmp_path / "ck")
+    restored = Federation.restore(tmp_path / "ck", _mk_clients(cfg))
+    assert restored.policies == pol
+
+
+# ---------------------------------------------------------------------------
+# Callbacks
+# ---------------------------------------------------------------------------
+
+class _Recorder(Callback):
+    def __init__(self):
+        self.events = []
+
+    def on_fit_start(self, fed):
+        self.events.append("start")
+
+    def on_round(self, fed, epoch, round_idx):
+        self.events.append(("round", epoch, round_idx))
+
+    def on_epoch_end(self, fed, epoch, val, active):
+        self.events.append(("epoch", epoch))
+
+    def on_fit_end(self, fed, results):
+        self.events.append("end")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_callback_hooks_fire_in_order(engine):
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    rec = _Recorder()
+    Federation(_mk_clients(cfg, n=40), cfg, engine=engine,
+               callbacks=[rec]).fit()
+    assert rec.events[0] == "start" and rec.events[-1] == "end"
+    # 40 samples / R=20 -> 2 sub-rounds per epoch, 2 epochs
+    assert rec.events.count(("round", 0, 0)) == 1
+    assert [e for e in rec.events if e[0] == "round"] == \
+        [("round", 0, 0), ("round", 0, 1), ("round", 1, 0), ("round", 1, 1)]
+    assert [e for e in rec.events if e[0] == "epoch"] == \
+        [("epoch", 0), ("epoch", 1)]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_metrics_capture_and_verbose(engine, capsys):
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    metrics = MetricsCapture()
+    Federation(_mk_clients(cfg), cfg, engine=engine,
+               callbacks=[metrics, VerboseLogger()]).fit()
+    assert len(metrics.epochs) == 2
+    assert set(metrics.epochs[0]["val"]) == {"c0", "c1", "c2"}
+    assert all(metrics.epochs[0]["active"].values())
+    out = capsys.readouterr().out
+    assert "epoch   0" in out and "c0=" in out
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_save_best_callback_checkpoints_improvements(tmp_path, engine):
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    sb = SaveBestCallback(tmp_path / "best")
+    Federation(_mk_clients(cfg), cfg, engine=engine, callbacks=[sb]).fit()
+    assert sb.n_saves >= 1
+    restored = Federation.restore(tmp_path / "best", _mk_clients(cfg))
+    assert 1 <= restored.epoch <= 3
+    # a mid-fit checkpoint must carry trained state, not init state: the
+    # saved epoch's history must be present and resumable
+    assert all(len(c.val_history) == restored.epoch
+               for c in restored.clients)
+    h = restored.fit()               # completes the remaining schedule
+    assert all(len(v["val"]) == 3 for v in h.values())
+
+
+# ---------------------------------------------------------------------------
+# RoundSchedule
+# ---------------------------------------------------------------------------
+
+def test_custom_schedule_R_drives_both_engines_identically():
+    """A RoundSchedule with R different from cfg.R must govern BOTH
+    executors' sub-round slicing (selections stay engine-identical)."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    sched = RoundSchedule(epochs=3, R=10)
+    h_seq = Federation(_mk_clients(cfg), cfg, schedule=sched,
+                       engine="sequential").fit()
+    h_bat = Federation(_mk_clients(cfg), cfg, schedule=sched,
+                       engine="batched").fit()
+    for name in h_seq:
+        # 40 samples / R=10 -> 4 sub-rounds x 3 epochs, not 2 x 3
+        assert h_seq[name]["rounds"] == h_bat[name]["rounds"] == 12
+        assert h_seq[name]["selections"] == h_bat[name]["selections"]
+
+
+def test_round_schedule_slices():
+    s = RoundSchedule(epochs=3, R=20)
+    assert list(s.slices(40)) == [slice(0, 20), slice(20, 40)]
+    assert list(s.slices(59)) == [slice(0, 20), slice(20, 40)]
+    assert list(s.slices(19)) == []
+    assert s.sub_rounds(40) == 2 and s.sub_rounds(19) == 0
+
+
+def test_fit_partial_epochs_accumulates():
+    cfg = HFLConfig(mode="always", epochs=6, R=20)
+    fed = Federation(_mk_clients(cfg), cfg)
+    fed.fit(epochs=2)
+    assert fed.epoch == 2
+    h = fed.fit()                        # completes the schedule
+    assert fed.epoch == 6
+    for v in h.values():
+        assert len(v["val"]) == 6

@@ -1,0 +1,259 @@
+"""Unit tests for the pluggable federation policies (core/policies.py):
+switch edge cases, selection variants, transfer rules, pool staleness, and
+the spec round-trip that backs resumable checkpoints."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import networks as N
+from repro.core.hfl import HeadPool, HFLConfig, blend, switch_active
+from repro.core.policies import (AlphaBlend, AlwaysSwitch, ArgminSelection,
+                                 FederationPolicies, LastWriteWins,
+                                 MaxStaleness, NeverSwitch, PerFeatureAlpha,
+                                 PlateauSwitch, ProbSwitch, RandomSelection,
+                                 SoftmaxSelection, TopKSelection,
+                                 plateaued, policy_from_spec)
+from repro.sharding import spec as S
+
+
+def _head(seed, w=3):
+    return S.materialize(N.head_schema(w), jax.random.PRNGKey(seed))
+
+
+def _stack(heads):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *heads)
+
+
+# ---------------------------------------------------------------------------
+# Switch: plateau rule edge cases (and the legacy switch_active wrapper)
+# ---------------------------------------------------------------------------
+
+def test_plateau_empty_history():
+    for patience in (0, 1, 3):
+        assert not plateaued([], patience)
+        assert not switch_active([], HFLConfig(mode="hfl", patience=patience))
+
+
+def test_plateau_patience_one():
+    assert not plateaued([5.0], 1)            # needs patience+1 epochs
+    assert plateaued([5.0, 6.0], 1)           # last epoch >= best-before
+    assert plateaued([5.0, 5.0], 1)           # equality counts as no improve
+    assert not plateaued([5.0, 4.0], 1)       # still improving
+
+
+def test_plateau_then_improve_resets():
+    # plateaued for 2 epochs...
+    assert plateaued([5.0, 3.0, 3.5, 3.4], 2)
+    # ...then a fresh improvement within the window clears eligibility
+    assert not plateaued([5.0, 3.0, 3.5, 2.9], 2)
+    assert not plateaued([5.0, 3.0, 3.5, 3.4, 2.9], 2)
+    # and re-plateauing after the improvement re-arms it
+    assert plateaued([5.0, 3.0, 3.5, 2.9, 3.0, 3.1], 2)
+
+
+def test_plateau_switch_matches_legacy_switch_active():
+    histories = [[], [5.0], [5, 4, 3], [5, 3, 3.5, 3.4, 3.6],
+                 [5, 3, 3.5, 2.9, 3.6], [2.0, 2.0, 2.0, 2.0]]
+    for p in (0, 1, 2, 3):
+        cfg = HFLConfig(mode="hfl", patience=p)
+        pol = PlateauSwitch(patience=p)
+        rng = np.random.default_rng(0)
+        for h in histories:
+            assert pol.active(h, rng) == switch_active(h, cfg), (p, h)
+
+
+def test_always_never_prob_switch():
+    rng = np.random.default_rng(0)
+    assert AlwaysSwitch().active([], rng)
+    assert not NeverSwitch().active([5.0] * 10, rng)
+    assert not ProbSwitch(0.0).active([], rng)
+    assert ProbSwitch(1.0).active([], rng)
+    draws = [ProbSwitch(0.5).active([], np.random.default_rng(7))
+             for _ in range(5)]
+    redraws = [ProbSwitch(0.5).active([], np.random.default_rng(7))
+               for _ in range(5)]
+    assert draws == redraws                    # seeded determinism
+    hits = sum(ProbSwitch(0.5).active([], rng) for _ in range(200))
+    assert 60 < hits < 140                     # roughly Bernoulli(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Selection variants
+# ---------------------------------------------------------------------------
+
+def test_argmin_and_topk1_select_min_error():
+    errs = np.array([3.0, 0.5, 2.0, np.inf], np.float32)
+    valid = np.isfinite(errs)
+    rng = np.random.default_rng(0)
+    assert ArgminSelection().select_host(errs, valid, rng) == 1
+    assert TopKSelection(1).select_host(errs, valid, rng) == 1
+    j = ArgminSelection().select_batched(jnp.asarray(errs)[None, :], None,
+                                         None, nf=1, ns=4, i=0, bounded=False)
+    assert int(j[0]) == 1
+
+
+def test_topk_stays_inside_k_best_and_valid():
+    errs = np.array([0.1, 0.2, 0.3, 5.0, np.inf, np.inf], np.float32)
+    valid = np.isfinite(errs)
+    rng = np.random.default_rng(0)
+    picks = {TopKSelection(3).select_host(errs, valid, rng)
+             for _ in range(50)}
+    assert picks <= {0, 1, 2}
+    assert len(picks) > 1                      # actually explores the top-k
+    key = jax.random.PRNGKey(0)
+    e = jnp.asarray(errs)[None, :]
+    for s in range(20):
+        j = TopKSelection(3).select_batched(
+            e, None, jax.random.fold_in(key, s), nf=1, ns=6, i=0,
+            bounded=False)
+        assert int(j[0]) in (0, 1, 2)
+
+
+def test_topk_k_larger_than_valid_pool():
+    errs = np.array([0.4, np.inf, np.inf], np.float32)
+    valid = np.isfinite(errs)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        assert TopKSelection(5).select_host(errs, valid, rng) == 0
+
+
+def test_softmax_prefers_low_error_and_avoids_excluded():
+    errs = np.array([0.01, 4.0, np.inf], np.float32)
+    valid = np.isfinite(errs)
+    rng = np.random.default_rng(0)
+    picks = [SoftmaxSelection(0.5).select_host(errs, valid, rng)
+             for _ in range(200)]
+    assert 2 not in picks
+    assert picks.count(0) > picks.count(1)
+    key = jax.random.PRNGKey(3)
+    e = jnp.asarray(errs)[None, :]
+    bpicks = [int(SoftmaxSelection(0.5).select_batched(
+        e, None, jax.random.fold_in(key, s), nf=1, ns=3, i=0,
+        bounded=False)[0]) for s in range(100)]
+    assert 2 not in bpicks
+    assert bpicks.count(0) > bpicks.count(1)
+
+
+def test_random_selection_masks():
+    rng = np.random.default_rng(0)
+    valid = np.array([False, True, False, True])
+    picks = {RandomSelection().select_host(None, valid, rng)
+             for _ in range(50)}
+    assert picks == {1, 3}
+    # batched legacy path: uniform over foreign entries only (own excluded)
+    nf, C = 2, 3
+    ns = C * nf
+    for s in range(30):
+        j = RandomSelection().select_batched(
+            None, None, jax.random.PRNGKey(s), nf=nf, ns=ns, i=1,
+            bounded=False)
+        assert all(int(x) not in (2, 3) for x in j)    # client 1's own rows
+    # bounded path: categorical over the exclusion mask
+    excluded = jnp.asarray([True, False, True, True, False, True])
+    for s in range(20):
+        j = RandomSelection().select_batched(
+            None, excluded, jax.random.PRNGKey(s), nf=nf, ns=ns, i=0,
+            bounded=True)
+        assert all(int(x) in (1, 4) for x in j)
+
+
+# ---------------------------------------------------------------------------
+# Transfer rules
+# ---------------------------------------------------------------------------
+
+def test_alpha_blend_matches_legacy_blend():
+    a, b = _stack([_head(0), _head(1)]), _stack([_head(2), _head(3)])
+    out_legacy = blend(a, b, 0.3)
+    out_policy = AlphaBlend(0.3).apply(a, b)
+    for x, y in zip(jax.tree_util.tree_leaves(out_legacy),
+                    jax.tree_util.tree_leaves(out_policy)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_per_feature_alpha_blends_each_head_differently():
+    t = _stack([_head(0), _head(1)])
+    s = _stack([_head(2), _head(3)])
+    out = PerFeatureAlpha((0.0, 1.0)).apply(t, s)
+    for pt, ps, po in zip(jax.tree_util.tree_leaves(t),
+                          jax.tree_util.tree_leaves(s),
+                          jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(np.asarray(po[0]), np.asarray(pt[0]))
+        np.testing.assert_allclose(np.asarray(po[1]), np.asarray(ps[1]))
+
+
+# ---------------------------------------------------------------------------
+# Pool staleness
+# ---------------------------------------------------------------------------
+
+def test_pool_ages_and_fresh_mask():
+    pool = HeadPool()
+    pool.publish("alice", _stack([_head(0), _head(1)]), nf=2)
+    pool.publish("bob", _stack([_head(2), _head(3)]), nf=2)
+    assert pool.fresh_mask("carol", max_age=0).all()
+    pool.tick()
+    pool.tick()
+    pool.publish("alice", _stack([_head(4), _head(5)]), nf=2)  # age resets
+    mask = pool.fresh_mask("carol", max_age=1)
+    keys = [k for k in sorted(pool.entries)]
+    by_key = dict(zip(keys, mask))
+    assert by_key[("alice", 0)] and by_key[("alice", 1)]
+    assert not by_key[("bob", 0)] and not by_key[("bob", 1)]
+    # entries are hidden, never deleted (asynchrony: a republish revives)
+    assert ("bob", 0) in pool.entries
+    assert pool.fresh_mask("carol", max_age=None).all()
+    assert pool.age_of("bob") == 2 and pool.age_of("alice") == 0
+
+
+def test_pool_policy_bounded_flag():
+    assert not LastWriteWins().bounded
+    assert MaxStaleness(4).bounded and MaxStaleness(4).max_age == 4
+
+
+# ---------------------------------------------------------------------------
+# Bundle factory + spec round-trip
+# ---------------------------------------------------------------------------
+
+def test_from_config_maps_legacy_modes():
+    cfg = HFLConfig(mode="hfl", patience=5, alpha=0.4)
+    pol = FederationPolicies.from_config(cfg)
+    assert pol == FederationPolicies(PlateauSwitch(5), ArgminSelection(),
+                                     AlphaBlend(0.4), LastWriteWins())
+    assert FederationPolicies.from_config(
+        dataclasses.replace(cfg, mode="no")).switch == NeverSwitch()
+    prand = FederationPolicies.from_config(
+        dataclasses.replace(cfg, mode="random"))
+    assert prand.switch == AlwaysSwitch()
+    assert prand.selection == RandomSelection()
+    assert FederationPolicies.from_config(
+        dataclasses.replace(cfg, mode="always")).selection == \
+        ArgminSelection()
+    with pytest.raises(ValueError, match="unknown HFL mode"):
+        FederationPolicies.from_config(dataclasses.replace(cfg, mode="boom"))
+
+
+def test_spec_json_roundtrip():
+    pol = FederationPolicies(ProbSwitch(0.25), TopKSelection(4),
+                             PerFeatureAlpha((0.1, 0.2, 0.3)),
+                             MaxStaleness(7))
+    rebuilt = FederationPolicies.from_spec(
+        json.loads(json.dumps(pol.spec())))
+    assert rebuilt == pol
+
+
+def test_unknown_policy_kind_rejected():
+    with pytest.raises(ValueError, match="unknown policy kind"):
+        policy_from_spec({"kind": "NotAPolicy"})
+
+
+def test_degenerate_selection_params_rejected():
+    with pytest.raises(ValueError, match="temperature"):
+        SoftmaxSelection(0.0)
+    with pytest.raises(ValueError, match="temperature"):
+        SoftmaxSelection(-1.0)
+    with pytest.raises(ValueError, match="k must be"):
+        TopKSelection(0)
