@@ -4,19 +4,24 @@
 
 Sweeps the number of simulated hospitals and reports, per engine, the mean
 wall time of one federated sub-round (train step + selection + blend +
-publication for every client) and the round throughput in client-rounds/s.
-The sequential engine dispatches C train steps, C x nf pool scorings, and
-C x nf host-side argmin syncs per sub-round; the batched engine dispatches
-one vmapped step and one fused scan.  Each engine run is preceded by an
+publication for every client), the round throughput in client-rounds/s, and
+the number of compiled-function dispatches per epoch.  The sequential
+engine dispatches C train steps, C x nf pool scorings, and C x nf host-side
+argmin syncs per sub-round; the batched engine scans the WHOLE epoch inside
+one jitted dispatch (train steps, policy rounds, eval, save-best merge)
+with donated state buffers.  Each engine run is preceded by an
 identically-shaped warmup run so compile time is excluded.
 
 Uses deterministic random tensors (not the synthetic-hospital generator) so
 the sweep measures the engine, not data generation; ``--population`` switches
-to `repro.data.synthetic.make_population` data instead.
+to `repro.data.synthetic.make_population` data instead.  ``--profile`` adds
+a per-phase (train / policy / eval) wall-time split of the batched engine's
+building blocks at each client count.
 
 Besides the CSV on stdout, writes a machine-readable ``BENCH_fl_scale.json``
-at the repo root (``--out`` to redirect, ``--out ""`` to disable) so the
-perf trajectory is tracked across PRs.
+at the repo root (``--out`` to redirect, ``--out ""`` to disable;
+:func:`validate_payload` pins its schema, and CI smoke-runs a tiny sweep
+against it) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -25,15 +30,17 @@ import json
 import platform
 import sys
 import time
+import warnings
 from pathlib import Path
 
 _REPO_ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_REPO_ROOT / "src"))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.federation import Federation
+from repro.core.federation import Federation, RoundSchedule
 from repro.core.hfl import FederatedClient, HFLConfig
 
 
@@ -65,27 +72,142 @@ def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
     # population data has a data-dependent (truncated) length, so the
     # sub-round count must come from the actual tensors, not from n
     n_eff = len(clients[0].train[2])
-    sub_rounds = cfg.epochs * max(0, (n_eff - cfg.R) // cfg.R + 1)
+    sched = RoundSchedule(cfg.epochs, cfg.R)
+    sub_rounds = cfg.epochs * sched.sub_rounds(n_eff)
     if sub_rounds == 0:
         raise SystemExit(
             f"train split too short for a single sub-round "
             f"(n={n_eff} < R={cfg.R}); raise --batches or the data sizes")
+    fed = Federation(clients, cfg, engine=engine)
     t0 = time.perf_counter()
-    hist = Federation(clients, cfg, engine=engine).fit()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", UserWarning)   # ragged-length drop
+        hist = fed.fit()
     elapsed = time.perf_counter() - t0
     total_rounds = sum(h["rounds"] for h in hist.values())
     assert total_rounds == C * sub_rounds, (total_rounds, C, sub_rounds)
-    return elapsed, sub_rounds
+    return elapsed, sub_rounds, fed.dispatch_stats
 
 
 def bench(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
           population: bool):
     _run_once(engine, C, cfg, nf, n, population)          # warmup + compile
-    elapsed, sub_rounds = _run_once(engine, C, cfg, nf, n, population)
+    elapsed, sub_rounds, dispatch = _run_once(engine, C, cfg, nf, n,
+                                              population)
     return {
         "round_ms": 1e3 * elapsed / sub_rounds,           # all C clients
         "client_rounds_per_s": C * sub_rounds / elapsed,
+        "dispatches_per_epoch": dispatch["dispatches_per_epoch"],
+        "dispatch_path": dispatch["path"],
     }
+
+
+def profile_phases(C: int, cfg: HFLConfig, nf: int, n: int,
+                   population: bool, repeats: int = 20):
+    """Per-phase wall time of the batched engine's building blocks at this
+    client count: one vmapped train step, one fused policy round, one
+    vmapped eval — the three phases the fused epoch scan stitches together.
+    Returns per-dispatch microseconds plus each phase's share of an epoch
+    (train and policy run once per sub-round, eval once per epoch)."""
+    from repro.core.federation import (_make_batched_fns, _stack_trees,
+                                       fused_policy_round, stack_pool)
+    from repro.core.policies import FederationPolicies
+
+    clients = _make_clients(C, cfg, nf, n, cfg.w, population)
+    pol = FederationPolicies.from_config(cfg)
+    R = cfg.R
+    xs = jnp.stack([np.asarray(c.train[0][:R]) for c in clients])
+    xd = jnp.stack([np.asarray(c.train[1][:R]) for c in clients])
+    y = jnp.stack([np.asarray(c.train[2][:R]) for c in clients])
+    val = tuple(jnp.stack([np.asarray(c.valid[k]) for c in clients])
+                for k in range(3))
+    params = _stack_trees([c.params for c in clients])
+    opt_state = _stack_trees([c.opt_state for c in clients])
+    # the engine's own stacked-pool layout, from a Federation's initial
+    # publication — profiled shapes cannot drift from executed shapes
+    fed = Federation(clients, cfg)
+    pool_heads = stack_pool(fed.pool, [c.name for c in clients], nf)
+    pool_age = jnp.zeros(C, jnp.int32)
+    active = jnp.ones(C, bool)
+    key = jax.random.PRNGKey(0)
+    step_fn, eval_fn = _make_batched_fns(cfg.lr)
+
+    def timed(fn):
+        jax.block_until_ready(fn())                       # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn()
+        jax.block_until_ready(out)
+        return 1e6 * (time.perf_counter() - t0) / repeats
+
+    train_us = timed(lambda: step_fn(params, opt_state, xs, xd, y))
+    policy_us = timed(lambda: fused_policy_round(
+        params["heads"], pool_heads, pool_age, xd, y, active, key,
+        nf=nf, policies=pol, use_kernel=False))
+    eval_us = timed(lambda: eval_fn(params, *val))
+
+    n_eff = len(clients[0].train[2])
+    sub = RoundSchedule(cfg.epochs, R).sub_rounds(n_eff)
+    epoch_us = sub * (train_us + policy_us) + eval_us
+    return {
+        "train_us_per_round": train_us,
+        "policy_us_per_round": policy_us,
+        "eval_us_per_epoch": eval_us,
+        "sub_rounds_per_epoch": sub,
+        "phase_split": {
+            "train": sub * train_us / epoch_us,
+            "policy": sub * policy_us / epoch_us,
+            "eval": eval_us / epoch_us,
+        },
+    }
+
+
+def validate_payload(payload: dict) -> None:
+    """Structural schema check for BENCH_fl_scale.json — CI smoke-runs a
+    tiny sweep and validates the emitted file through this, so the schema
+    can't drift silently under downstream tooling."""
+    def need(obj, key, types, where):
+        if key not in obj:
+            raise ValueError(f"{where}: missing key {key!r}")
+        if not isinstance(obj[key], types):
+            raise ValueError(f"{where}[{key!r}]: expected {types}, "
+                             f"got {type(obj[key]).__name__}")
+
+    need(payload, "benchmark", str, "payload")
+    if payload["benchmark"] != "fl_scale":
+        raise ValueError(f"payload[benchmark]: {payload['benchmark']!r}")
+    need(payload, "unix_time", int, "payload")
+    need(payload, "backend", str, "payload")
+    need(payload, "device_count", int, "payload")
+    need(payload, "platform", str, "payload")
+    need(payload, "config", dict, "payload")
+    need(payload, "results", list, "payload")
+    for k in ("epochs", "R", "nf", "batches"):
+        need(payload["config"], k, int, "config")
+    need(payload["config"], "clients", list, "config")
+    need(payload["config"], "engines", list, "config")
+    if not payload["results"]:
+        raise ValueError("results: empty")
+    for i, r in enumerate(payload["results"]):
+        where = f"results[{i}]"
+        need(r, "clients", int, where)
+        need(r, "engine", str, where)
+        need(r, "round_ms", (int, float), where)
+        need(r, "client_rounds_per_s", (int, float), where)
+        need(r, "dispatches_per_epoch", (int, float), where)
+        need(r, "dispatch_path", str, where)
+        need(r, "speedup_vs_sequential", (int, float, type(None)), where)
+    for key, p in payload.get("profiles", {}).items():
+        where = f"profiles[{key!r}]"
+        if not isinstance(p, dict):
+            raise ValueError(f"{where}: expected dict")
+        for k in ("train_us_per_round", "policy_us_per_round",
+                  "eval_us_per_epoch"):
+            need(p, k, (int, float), where)
+        need(p, "sub_rounds_per_epoch", int, where)
+        need(p, "phase_split", dict, where)
+        for k in ("train", "policy", "eval"):
+            need(p["phase_split"], k, (int, float), f"{where}[phase_split]")
 
 
 def main():
@@ -100,6 +222,9 @@ def main():
     ap.add_argument("--population", action="store_true",
                     help="use generated N-hospital data instead of random "
                          "tensors")
+    ap.add_argument("--profile", action="store_true",
+                    help="also report the batched engine's train/policy/"
+                         "eval phase split per client count")
     ap.add_argument("--out", default=str(_REPO_ROOT / "BENCH_fl_scale.json"),
                     help="machine-readable results path (empty to disable)")
     args = ap.parse_args()
@@ -109,7 +234,9 @@ def main():
     n = args.batches * args.R
 
     records = []
-    print("clients,engine,round_ms,client_rounds_per_s,speedup_vs_sequential")
+    profiles = {}
+    print("clients,engine,round_ms,client_rounds_per_s,"
+          "dispatches_per_epoch,speedup_vs_sequential")
     for C in counts:
         rows = {}
         for engine in engines:
@@ -120,13 +247,26 @@ def main():
                        / rows["sequential"]["client_rounds_per_s"]
                        if "sequential" in rows else float("nan"))
             print(f"{C},{engine},{r['round_ms']:.2f},"
-                  f"{r['client_rounds_per_s']:.1f},{speedup:.2f}",
+                  f"{r['client_rounds_per_s']:.1f},"
+                  f"{r['dispatches_per_epoch']:.1f},{speedup:.2f}",
                   flush=True)
             records.append({"clients": C, "engine": engine,
                             "round_ms": r["round_ms"],
                             "client_rounds_per_s": r["client_rounds_per_s"],
+                            "dispatches_per_epoch": r["dispatches_per_epoch"],
+                            "dispatch_path": r["dispatch_path"],
                             "speedup_vs_sequential":
                                 None if speedup != speedup else speedup})
+        if args.profile:
+            p = profile_phases(C, cfg, args.nf, n, args.population)
+            profiles[str(C)] = p
+            s = p["phase_split"]
+            print(f"[profile] C={C}: train {p['train_us_per_round']:.0f}us"
+                  f"/round, policy {p['policy_us_per_round']:.0f}us/round, "
+                  f"eval {p['eval_us_per_epoch']:.0f}us/epoch -> "
+                  f"split train {100 * s['train']:.0f}% / "
+                  f"policy {100 * s['policy']:.0f}% / "
+                  f"eval {100 * s['eval']:.0f}%", file=sys.stderr)
     if args.out:
         payload = {
             "benchmark": "fl_scale",
@@ -140,6 +280,9 @@ def main():
                        "clients": counts, "engines": engines},
             "results": records,
         }
+        if profiles:
+            payload["profiles"] = profiles
+        validate_payload(payload)
         Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {args.out}", file=sys.stderr)
 

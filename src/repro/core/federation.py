@@ -9,11 +9,18 @@ consume the SAME policy description, so a new scenario (partial
 participation, staleness bounds, softer selection, per-feature blending)
 is one policy object, not two engine edits.
 
-The batched executor's :func:`fused_policy_round` takes the whole policy
-bundle as a *static* jit argument: every policy is a frozen (hashable)
-dataclass whose ``*_batched`` methods are traced straight into the
-selection scan, which is what preserves the selection-identical guarantee
-between the two engines (pinned by ``tests/test_hfl_batched.py``).
+The batched executor fuses the ENTIRE federated epoch into one jitted
+``lax.scan`` over sub-rounds (:func:`_make_epoch_fn`): each scan step runs
+the vmapped Adam step on that round's R-slice and then the fused policy
+round, with the per-epoch eval + save-best merge folded into the same
+compiled function and the whole carried state donated, so an epoch is ONE
+dispatch and zero host round-trips.  The policy bundle is a *static* jit
+argument: every policy is a frozen (hashable) dataclass whose ``*_batched``
+methods are traced straight into the scan, which is what preserves the
+selection-identical guarantee between the two engines (pinned by
+``tests/test_hfl_batched.py`` and ``tests/test_fused_epoch.py``).
+Callbacks that need per-round delivery (see :class:`Callback`) fall back to
+a chunked scan — the same compiled body dispatched per sub-round.
 
 State — per-client params / optimizer state / validation history / best
 snapshot, the head pool with per-entry ages, the host and device RNG
@@ -29,6 +36,7 @@ import dataclasses
 import functools
 import json
 import os
+import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
@@ -58,12 +66,24 @@ class RoundSchedule:
     R: int
 
     def slices(self, n: int):
-        """Sub-round batch slices over an n-sample train split."""
+        """Sub-round batch slices over an n-sample train split.
+
+        Only FULL R-batches are yielded: when n is not a multiple of R, the
+        trailing partial batch of ``leftover(n)`` events is dropped — those
+        events are never trained on, in any epoch.  :meth:`Federation.fit`
+        announces this with a UserWarning so population sweeps over ragged
+        lengths don't silently lose data (truncate to a multiple of R, or
+        pick a divisor R, to silence it)."""
         for start in range(0, n - self.R + 1, self.R):
             yield slice(start, start + self.R)
 
     def sub_rounds(self, n: int) -> int:
         return max(0, (n - self.R) // self.R + 1)
+
+    def leftover(self, n: int) -> int:
+        """Trailing events per epoch that :meth:`slices` drops (0 when n is
+        a multiple of R; n itself when n < R)."""
+        return n - self.sub_rounds(n) * self.R
 
 
 # ---------------------------------------------------------------------------
@@ -72,7 +92,19 @@ class RoundSchedule:
 
 class Callback:
     """Training hooks.  `fed` is the running Federation (None when invoked
-    from the non-federated :func:`fit_local` loop)."""
+    from the non-federated :func:`fit_local` loop).
+
+    ``needs_per_round`` declares whether the callback must observe every
+    ``on_round``.  The batched executor fuses a WHOLE epoch into one
+    compiled dispatch when no callback needs per-round delivery; a callback
+    that does forces the chunked path (one dispatch per sub-round, every
+    ``on_round`` fired).  The default ``None`` auto-detects: overriding
+    :meth:`on_round` opts in, leaving it untouched keeps the fused fast
+    path.  Set it to ``False`` explicitly to keep the fused path even with
+    an ``on_round`` override (the override then never fires on the batched
+    engine), or ``True`` to force per-round delivery."""
+
+    needs_per_round: Optional[bool] = None
 
     def on_fit_start(self, fed) -> None: ...
 
@@ -82,6 +114,13 @@ class Callback:
                      active: Dict[str, bool]) -> None: ...
 
     def on_fit_end(self, fed, results) -> None: ...
+
+
+def _wants_per_round(cb: Callback) -> bool:
+    flag = getattr(cb, "needs_per_round", None)
+    if flag is None:
+        return type(cb).on_round is not Callback.on_round
+    return bool(flag)
 
 
 class VerboseLogger(Callback):
@@ -180,10 +219,13 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
     pol = fed.policies
     C = len(fed.clients)
     use_kernel = fed.cfg.use_pool_kernel
+    n_dispatch = 0            # jitted calls: train steps + Eq.-7 scorings +
+                              # per-epoch evals (eager tree ops not counted)
     for _ in range(n_epochs):
         epoch = fed.epoch
-        active = {c.name: pol.switch.active(c.val_history, fed._switch_rng)
-                  for c in fed.clients}
+        mask = pol.switch.active_mask(
+            [c.val_history for c in fed.clients], fed._switch_rng)
+        active = {c.name: bool(mask[i]) for i, c in enumerate(fed.clients)}
         iters = {c.name: c.train_epoch(R=fed.schedule.R)
                  for c in fed.clients}
         live = set(iters)
@@ -204,6 +246,7 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                     live.discard(c.name)
                     continue
                 progressed = True
+                n_dispatch += 1
                 if not ticked:
                     fed.pool.tick()
                     ticked = True
@@ -212,6 +255,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                                        use_kernel=use_kernel)
                     if sel is not None:
                         fed.selections[c.name].append(sel)
+                        if pol.selection.needs_errors:
+                            n_dispatch += c.nf
                     fed.n_rounds[c.name] += 1
                     fed.pool.publish(c.name, c.params["heads"], c.nf)
             if progressed:
@@ -220,25 +265,30 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                 rnd += 1
         for c in fed.clients:
             c.end_epoch()
+        n_dispatch += C
         fed.epoch += 1
         fed._mid_epoch = False
         val = {c.name: c.val_history[-1] for c in fed.clients}
         for cb in cbs:
             cb.on_epoch_end(fed, epoch, val, active)
+    fed.dispatch_stats = {"engine": "sequential", "path": "per-round",
+                          "epochs": n_epochs, "dispatches": n_dispatch,
+                          "dispatches_per_epoch": n_dispatch / n_epochs}
 
 
 # ---------------------------------------------------------------------------
 # Batched executor: fused multi-client selection + transfer
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("nf", "policies", "use_kernel"))
-def fused_policy_round(heads, pool_heads, pool_age, xd_R, y_R, active, key,
+def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
                        *, nf: int, policies: FederationPolicies,
                        use_kernel: bool):
-    """One federated opportunity for ALL clients, fused into a single jitted
-    scan.  The policy bundle is a static argument: its jittable
-    ``select_batched`` / ``apply`` kernels are traced straight into the scan
-    body, so a policy swap is a recompile, never an engine edit.
+    """One federated opportunity for ALL clients as a traceable scan over
+    clients — the body both :func:`fused_policy_round` (standalone jit) and
+    the fused-epoch scan (:func:`_make_epoch_fn`) trace.  The policy
+    bundle's jittable ``select_batched`` / ``apply`` kernels are traced
+    straight into the scan body, so a policy swap is a recompile, never an
+    engine edit.
 
     The scan walks clients in their processing order, carrying the pool (and
     its per-publisher age vector) so that client i scores the heads already
@@ -309,8 +359,30 @@ def fused_policy_round(heads, pool_heads, pool_age, xd_R, y_R, active, key,
     return heads, pool_heads, pool_age, chosen
 
 
+@functools.partial(jax.jit, static_argnames=("nf", "policies", "use_kernel"))
+def fused_policy_round(heads, pool_heads, pool_age, xd_R, y_R, active, key,
+                       *, nf: int, policies: FederationPolicies,
+                       use_kernel: bool):
+    """Standalone jitted :func:`_policy_round_body` — ONE federated
+    opportunity per dispatch.  The fused-epoch engine no longer dispatches
+    this per round (it traces the body into its epoch scan); it remains the
+    single-round entry point for diagnostics and benchmarks."""
+    return _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R,
+                              active, key, nf=nf, policies=policies,
+                              use_kernel=use_kernel)
+
+
 def _stack_trees(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_pool(pool: HeadPool, names: Sequence[str], nf: int):
+    """A HeadPool's entries as the batched engine's stacked ``(C, nf, ...)``
+    tree — the one place that defines the stacked pool layout, shared by
+    the executor and by benchmarks profiling its building blocks."""
+    return _stack_trees(
+        [_stack_trees([pool.entries[(n, f)] for f in range(nf)])
+         for n in names])
 
 
 def _tree_row(tree, i):
@@ -341,6 +413,72 @@ def _make_batched_fns(lr: float):
     return step, evaluate
 
 
+@functools.lru_cache(maxsize=None)
+def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
+                   use_kernel: bool, do_federate: bool, do_eval: bool):
+    """Compile-cached whole-epoch function: ONE dispatch scans every
+    sub-round of an epoch — the vmapped Adam step on that round's R-slice,
+    then the fused policy round (selection, blend, publish, aging, RNG
+    fold-in) — and, when ``do_eval``, folds the per-epoch validation eval
+    and the save-best ``where``-merge into the same compiled function.
+
+    The whole carried state (stacked params, opt state, pool, ages, PRNG
+    key, best-val, best-params) is DONATED, so XLA reuses the stacked
+    buffers across epochs instead of copying them every dispatch.  The
+    per-round ``chosen`` indices come back stacked ``(n_rounds, C, nf)``
+    as a scan output: selection traces materialize in one device-to-host
+    transfer per epoch, not one per round.
+
+    The cache key is the trace-relevant statics — (lr, nf, policies,
+    use_kernel, do_federate, do_eval); jit itself caches per shape, so one
+    factory entry serves every (C, n_rounds, R) geometry.  The chunked
+    fallback (per-round callbacks) dispatches the same function over
+    1-round slices with ``do_eval`` only on the last chunk."""
+    opt = adam(lr)
+    step = jax.vmap(functools.partial(_train_step, opt))
+    evaluate = jax.vmap(_eval_mse)
+    bounded = policies.pool.bounded
+
+    def epoch(params, opt_state, pool_heads, pool_age, key, best_val,
+              best_params, xs_r, xd_r, y_r, active, val_xs, val_xd, val_y):
+        C = active.shape[0]
+
+        def body(carry, batch):
+            params, opt_state, pool_heads, pool_age, key = carry
+            xs_b, xd_b, y_b = batch
+            params, opt_state, _ = step(params, opt_state, xs_b, xd_b, y_b)
+            if do_federate:
+                if bounded:
+                    pool_age = pool_age + 1
+                key, sub = jax.random.split(key)
+                new_heads, pool_heads, pool_age, chosen = _policy_round_body(
+                    params["heads"], pool_heads, pool_age, xd_b, y_b,
+                    active, sub, nf=nf, policies=policies,
+                    use_kernel=use_kernel)
+                params = {**params, "heads": new_heads}
+            else:
+                chosen = jnp.full((C, nf), -1, jnp.int32)
+            return (params, opt_state, pool_heads, pool_age, key), chosen
+
+        carry = (params, opt_state, pool_heads, pool_age, key)
+        (params, opt_state, pool_heads, pool_age, key), chosen = \
+            jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
+        if do_eval:
+            v = evaluate(params, val_xs, val_xd, val_y)
+            improved = v < best_val
+            best_val = jnp.where(improved, v, best_val)
+            best_params = jax.tree_util.tree_map(
+                lambda b, p: jnp.where(
+                    improved.reshape((C,) + (1,) * (p.ndim - 1)), p, b),
+                best_params, params)
+        else:
+            v = None
+        return (params, opt_state, pool_heads, pool_age, key, best_val,
+                best_params, v, chosen)
+
+    return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+
+
 def _check_homogeneous(clients: Sequence[FederatedClient]) -> None:
     nf = clients[0].nf
     shapes = [tuple(np.shape(a) for a in c.train) for c in clients]
@@ -361,43 +499,59 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     nf = clients[0].nf
     _check_homogeneous(clients)
     cfg, pol = fed.cfg, fed.policies
+    R = fed.schedule.R
 
     xs = jnp.stack([np.asarray(c.train[0]) for c in clients])
     xd = jnp.stack([np.asarray(c.train[1]) for c in clients])
     y = jnp.stack([np.asarray(c.train[2]) for c in clients])
     val = tuple(jnp.stack([np.asarray(c.valid[k]) for c in clients])
                 for k in range(3))
+    n = int(y.shape[1])
+    n_sub = fed.schedule.sub_rounds(n)
+
+    def rounds_axis(t):
+        """(C, n, ...) -> (n_sub, C, R, ...): the schedule's R-slices stacked
+        on a leading scan axis (the slices are contiguous from 0, so this is
+        a reshape + transpose, done once per fit)."""
+        m = n_sub * R
+        return jnp.moveaxis(
+            t[:, :m].reshape((C, n_sub, R) + t.shape[2:]), 1, 0)
+
+    xs_r, xd_r, y_r = rounds_axis(xs), rounds_axis(xd), rounds_axis(y)
 
     params = _stack_trees([c.params for c in clients])
     opt_state = _stack_trees([c.opt_state for c in clients])
     # pool state comes from the canonical HeadPool (a fresh fit sees the
     # initial publication; a restored fit sees the checkpointed pool)
-    pool_heads = _stack_trees(
-        [_stack_trees([fed.pool.entries[(n, f)] for f in range(nf)])
-         for n in names])
-    pool_age = jnp.asarray([fed.pool.age_of(n) for n in names], jnp.int32)
-    step_fn, eval_fn = _make_batched_fns(cfg.lr)
+    pool_heads = stack_pool(fed.pool, names, nf)
+    pool_age = jnp.asarray([fed.pool.age_of(n_) for n_ in names], jnp.int32)
     use_kernel = cfg.use_pool_kernel and pool_kernel_available()
     lut = _selection_lut(names, nf)
 
     histories = [list(c.val_history) for c in clients]
-    best_val = np.array([c.best_val for c in clients], np.float64)
+    best_val = jnp.asarray([c.best_val for c in clients], jnp.float32)
     best_params = _stack_trees([c.best_params for c in clients])
     n_rounds = np.zeros(C, np.int64)
     base_rounds = dict(fed.n_rounds)
     key = fed._key
-    n = int(y.shape[1])
+
+    # the fused path runs the whole epoch in ONE dispatch; any callback that
+    # needs per-round delivery forces the chunked path (one dispatch per
+    # sub-round through the SAME compiled function, on_round after each)
+    fused = not any(_wants_per_round(cb) for cb in cbs)
+    n_dispatch = 0
 
     def sync():
         """Write the stacked loop state back into the clients / pool / rng —
         run after the loop, and on demand when a callback checkpoints the
         federation mid-fit (Federation.save calls this hook)."""
         ages = np.asarray(pool_age)
+        bv = np.asarray(best_val)
         for i, c in enumerate(clients):
             c.params = _tree_row(params, i)
             c.opt_state = _tree_row(opt_state, i)
             c.val_history = histories[i]
-            c.best_val = float(best_val[i])
+            c.best_val = float(bv[i])
             c.best_params = _tree_row(best_params, i)
             fed.pool.publish(c.name, _tree_row(pool_heads, i), nf,
                              age=int(ages[i]))
@@ -407,41 +561,58 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     fed._sync = sync
     for _ in range(n_epochs):
         epoch = fed.epoch
-        active = np.array([pol.switch.active(histories[i], fed._switch_rng)
-                           for i in range(C)])
+        active = np.asarray(pol.switch.active_mask(histories,
+                                                   fed._switch_rng))
         active_dev = jnp.asarray(active)
-        epoch_chosen = []          # device arrays; materialized once/epoch
+        do_federate = bool(active.any()) and C >= 2
+        state = (params, opt_state, pool_heads, pool_age, key, best_val,
+                 best_params)
         fed._mid_epoch = True
-        for rnd, sl in enumerate(fed.schedule.slices(n)):
-            params, opt_state, _ = step_fn(
-                params, opt_state, xs[:, sl], xd[:, sl], y[:, sl])
-            if active.any():
-                if C >= 2:
-                    if pol.pool.bounded:
-                        pool_age = pool_age + 1
-                    key, sub = jax.random.split(key)
-                    new_heads, pool_heads, pool_age, chosen = \
-                        fused_policy_round(
-                            params["heads"], pool_heads, pool_age,
-                            xd[:, sl], y[:, sl], active_dev, sub,
-                            nf=nf, policies=pol, use_kernel=use_kernel)
-                    params = {**params, "heads": new_heads}
-                    epoch_chosen.append(chosen)
-                n_rounds += active
-            for cb in cbs:
-                cb.on_round(fed, epoch, rnd)
-        for chosen in map(np.asarray, epoch_chosen):
-            for i in range(C):
-                if active[i] and chosen[i][0] >= 0:
-                    fed.selections[names[i]].append(lut[i, chosen[i]].tolist())
-        v = np.asarray(eval_fn(params, *val), np.float64)
-        improved = v < best_val
-        best_val = np.where(improved, v, best_val)
-        mask = jnp.asarray(improved)
-        best_params = jax.tree_util.tree_map(
-            lambda b, p: jnp.where(
-                mask.reshape((C,) + (1,) * (p.ndim - 1)), p, b),
-            best_params, params)
+        if fused:
+            epoch_fn = _make_epoch_fn(cfg.lr, nf, pol, use_kernel,
+                                      do_federate, True)
+            (*state, v, chosen) = epoch_fn(*state, xs_r, xd_r, y_r,
+                                           active_dev, *val)
+            n_dispatch += 1
+        else:
+            chunks = []
+            for rnd in range(n_sub):
+                epoch_fn = _make_epoch_fn(cfg.lr, nf, pol, use_kernel,
+                                          do_federate,
+                                          rnd == n_sub - 1)
+                (*state, v, ch) = epoch_fn(
+                    *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
+                    y_r[rnd:rnd + 1], active_dev, *val)
+                chunks.append(ch)
+                n_dispatch += 1
+                # sync the carried state (and the live round counters)
+                # before handing control to the callback so a mid-epoch
+                # reader sees current state, as on the sequential engine
+                (params, opt_state, pool_heads, pool_age, key, best_val,
+                 best_params) = state
+                if active.any():
+                    n_rounds += active
+                for cb in cbs:
+                    cb.on_round(fed, epoch, rnd)
+            if n_sub == 0:      # no trainable sub-round: eval-only dispatch
+                epoch_fn = _make_epoch_fn(cfg.lr, nf, pol, use_kernel,
+                                          do_federate, True)
+                (*state, v, ch) = epoch_fn(*state, xs_r, xd_r, y_r,
+                                           active_dev, *val)
+                chunks.append(ch)
+                n_dispatch += 1
+            chosen = jnp.concatenate(chunks) if chunks else None
+        (params, opt_state, pool_heads, pool_age, key, best_val,
+         best_params) = state
+        if do_federate:
+            # ONE device->host materialization of the epoch's selections
+            for ch in np.asarray(chosen):
+                for i in range(C):
+                    if active[i] and ch[i][0] >= 0:
+                        fed.selections[names[i]].append(lut[i, ch[i]].tolist())
+        if fused and active.any():   # chunked path counted per round above
+            n_rounds += active * n_sub
+        v = np.asarray(v, np.float64)
         for i in range(C):
             histories[i].append(float(v[i]))
         fed.epoch += 1
@@ -451,6 +622,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                             {names[i]: float(v[i]) for i in range(C)},
                             {names[i]: bool(active[i]) for i in range(C)})
 
+    fed.dispatch_stats = {"engine": "batched",
+                          "path": "fused" if fused else "chunked",
+                          "epochs": n_epochs, "dispatches": n_dispatch,
+                          "dispatches_per_epoch": n_dispatch / n_epochs}
     # write the final state back so the clients / pool / rng stay canonical
     sync()
     fed._sync = None
@@ -509,6 +684,11 @@ class Federation:
         self._key = jax.random.PRNGKey(cfg.seed)
         self._sync = None       # set by the batched executor while it runs
         self._mid_epoch = False  # True inside an epoch: save() would be torn
+        # {engine, path, epochs, dispatches, dispatches_per_epoch} for the
+        # most recent fit: "fused" = one compiled dispatch per epoch,
+        # "chunked" = one per sub-round (per-round callbacks present),
+        # "per-round" = the sequential oracle's per-client dispatch pattern
+        self.dispatch_stats: Optional[dict] = None
 
     # -- training ----------------------------------------------------------
 
@@ -525,6 +705,17 @@ class Federation:
         for cb in cbs:
             cb.on_fit_start(self)
         if n:
+            dropped = {c.name: self.schedule.leftover(len(c.train[2]))
+                       for c in self.clients}
+            dropped = {k: v for k, v in dropped.items() if v}
+            if dropped:
+                warnings.warn(
+                    f"RoundSchedule(R={self.schedule.R}) drops the trailing "
+                    f"partial batch every epoch: {dropped} train events per "
+                    f"epoch are never trained on (train lengths are not "
+                    f"multiples of R); truncate to a multiple of R or pick "
+                    f"a divisor R to silence this", UserWarning,
+                    stacklevel=2)
             if self.engine == "batched":
                 _fit_batched(self, n, cbs)
             else:

@@ -49,7 +49,9 @@ class HFLConfig:
     epochs: int = 50
     patience: int = 3
     mode: str = "hfl"            # hfl | no | random | always
-    use_pool_kernel: bool = False  # Pallas pool-scoring kernel (TPU path)
+    use_pool_kernel: bool = False  # Pallas pool-scoring kernel (compiled on
+                                   # TPU, experimentally on GPU; interpret-
+                                   # mode elsewhere)
     seed: int = 0
 
 
@@ -221,7 +223,8 @@ def _pool_kernel_ops():
 
 
 def pool_errors_kernel(pool_stacked, xd_i, y):
-    """TPU Pallas fused pool sweep (see src/repro/kernels/pool_mlp)."""
+    """Pallas fused pool sweep — compiled on TPU/GPU, interpreted elsewhere
+    (see src/repro/kernels/pool_mlp)."""
     return _pool_kernel_ops().pool_mlp_errors(pool_stacked, xd_i, y)
 
 

@@ -51,6 +51,25 @@ def plateaued(val_history: Sequence[float], patience: int) -> bool:
     return all(v >= best_before for v in h[-patience:])
 
 
+def plateaued_mask(hist, patience: int):
+    """Jittable vectorized :func:`plateaued` over a (C, E) history matrix —
+    the whole population's switch mask as in-graph ops, so a fused engine
+    can trace the plateau rule instead of looping clients on the host.  E
+    is the (common) history length, static under jit.  Elementwise equal to
+    ``[plateaued(h, patience) for h in hist]`` at the array's own dtype;
+    note ``jnp.asarray`` follows jax's default promotion (float32 unless
+    x64 is enabled) — the host-side epoch path uses
+    :meth:`PlateauSwitch.active_mask`, which compares in exact float64."""
+    hist = jnp.asarray(hist)
+    C, E = hist.shape
+    if patience <= 0:
+        return jnp.full((C,), E > 0)
+    if E < patience + 1:
+        return jnp.zeros((C,), bool)
+    best_before = jnp.min(hist[:, :E - patience], axis=1)
+    return jnp.all(hist[:, E - patience:] >= best_before[:, None], axis=1)
+
+
 class _Spec:
     """spec()/from-spec plumbing shared by every policy dataclass."""
 
@@ -75,6 +94,15 @@ class SwitchPolicy(_Spec):
                rng: np.random.Generator) -> bool:
         raise NotImplementedError
 
+    def active_mask(self, histories: Sequence[Sequence[float]],
+                    rng: np.random.Generator) -> np.ndarray:
+        """The whole population's activity for one epoch as a (C,) bool
+        array.  The default walks clients in list order calling
+        :meth:`active`, so stochastic policies consume the shared host rng
+        stream exactly as the sequential oracle does; deterministic policies
+        override with a vectorized form."""
+        return np.array([self.active(h, rng) for h in histories], bool)
+
 
 @dataclasses.dataclass(frozen=True)
 class PlateauSwitch(SwitchPolicy):
@@ -84,6 +112,24 @@ class PlateauSwitch(SwitchPolicy):
     def active(self, val_history, rng):
         return plateaued(val_history, self.patience)
 
+    def active_mask(self, histories, rng):
+        """Vectorized over the population in exact float64 on the host —
+        bitwise the same comparisons as the scalar :func:`plateaued` (the
+        jittable in-graph form is :func:`plateaued_mask`)."""
+        C = len(histories)
+        E = min((len(h) for h in histories), default=0)
+        if E != max((len(h) for h in histories), default=0):
+            return super().active_mask(histories, rng)   # ragged: loop
+        if self.patience <= 0:
+            return np.full(C, E > 0)
+        if E < self.patience + 1:
+            return np.zeros(C, bool)
+        hist = np.asarray([list(h) for h in histories],
+                          np.float64).reshape(C, E)
+        best_before = hist[:, :E - self.patience].min(axis=1)
+        return (hist[:, E - self.patience:] >=
+                best_before[:, None]).all(axis=1)
+
 
 @dataclasses.dataclass(frozen=True)
 class AlwaysSwitch(SwitchPolicy):
@@ -92,6 +138,9 @@ class AlwaysSwitch(SwitchPolicy):
     def active(self, val_history, rng):
         return True
 
+    def active_mask(self, histories, rng):
+        return np.ones(len(histories), bool)
+
 
 @dataclasses.dataclass(frozen=True)
 class NeverSwitch(SwitchPolicy):
@@ -99,6 +148,9 @@ class NeverSwitch(SwitchPolicy):
 
     def active(self, val_history, rng):
         return False
+
+    def active_mask(self, histories, rng):
+        return np.zeros(len(histories), bool)
 
 
 @dataclasses.dataclass(frozen=True)

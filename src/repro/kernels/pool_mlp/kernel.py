@@ -5,14 +5,16 @@ additional computation (for model selection)") — it evaluates EVERY pool head
 (ns = NS x nf models) on the client's last R dense vectors: ns x R tiny MLP
 forwards.  A GPU implementation launches ns tiny GEMM chains; on TPU that is
 dominated by launch/HBM latency.  This kernel fuses the whole sweep: one grid
-cell scores a BP-sized block of pool heads, keeping all five Table-4 layers
-(16-256-64-16-1) and the (R, w) probe batch resident in VMEM, with the
-(BP*R, d) matmuls shaped for the MXU.  Outputs the (ns,) error vector that
-feeds argmin selection.
+cell scores a BP-sized block of pool heads against one target feature's
+probe batch, keeping all five Table-4 layers (16-256-64-16-1) and the (R, w)
+probe batch resident in VMEM, with the (BP*R, d) matmuls shaped for the MXU.
+
+The grid is (nf, ns // BP): the multi-feature sweep the batched engine needs
+is ONE pallas_call whose first grid dimension walks the target features, not
+a trace-time Python loop of nf single-feature sweeps.  Outputs the (nf, ns)
+error matrix that feeds argmin selection.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +25,7 @@ from repro.core.networks import LRELU_SLOPE
 
 def _pool_kernel(xd_ref, y_ref, w0, b0, w1, b1, w2, b2, w3, b3, w4, b4,
                  o_ref):
-    xd = xd_ref[...].astype(jnp.float32)          # (R, w)
+    xd = xd_ref[0].astype(jnp.float32)            # (R, w): this cell's feature
     y = y_ref[0].astype(jnp.float32)              # (R,)
 
     def sig(x):
@@ -44,30 +46,49 @@ def _pool_kernel(xd_ref, y_ref, w0, b0, w1, b1, w2, b2, w3, b3, w4, b4,
     out = (jnp.einsum("prk,pkj->prj", h, w4[...].astype(jnp.float32))
            + b4[...][:, None, :])[..., 0]         # (BP, R)
     err = jnp.mean((y[None, :] - out) ** 2, axis=1)
-    o_ref[...] = err.astype(o_ref.dtype)
+    o_ref[0, :] = err.astype(o_ref.dtype)
 
 
-def pool_mlp_pallas(xd, y, weights, *, block_pool: int = 8,
-                    interpret: bool = True):
-    """xd: (R, w); y: (R,); weights: tuple (w0,b0,...,w4,b4) each with leading
-    pool dim ns (multiple of block_pool).  Returns (ns,) errors."""
+def pool_mlp_features_pallas(xd_feats, y, weights, *, block_pool: int = 8,
+                             interpret: bool = True):
+    """Score the pool against every target feature in one fused sweep.
+
+    xd_feats: (nf, R, w); y: (R,); weights: tuple (w0,b0,...,w4,b4) each with
+    leading pool dim ns.  Returns (nf, ns) errors.  ns must be a multiple of
+    block_pool — the jitted wrapper in ``ops.py`` owns the padding; this raw
+    entry point refuses ragged pools rather than silently mis-tiling."""
     ns = weights[0].shape[0]
     BP = min(block_pool, ns)
-    assert ns % BP == 0, (ns, BP)
-    R, w = xd.shape
+    if ns % BP:
+        raise ValueError(
+            f"pool size ns={ns} is not a multiple of block_pool={BP}; pad "
+            f"the pool to a block multiple first (ops.pool_mlp_errors / "
+            f"ops.pool_mlp_errors_features do this for you)")
+    nf, R, w = xd_feats.shape
 
     w_specs = []
     for t in weights:
         blk = (BP,) + t.shape[1:]
-        w_specs.append(pl.BlockSpec(blk, lambda p, _n=len(t.shape): (p,) + (0,) * (_n - 1)))
+        w_specs.append(pl.BlockSpec(
+            blk, lambda f, p, _n=len(t.shape): (p,) + (0,) * (_n - 1)))
     return pl.pallas_call(
         _pool_kernel,
-        grid=(ns // BP,),
+        grid=(nf, ns // BP),
         in_specs=[
-            pl.BlockSpec((R, w), lambda p: (0, 0)),
-            pl.BlockSpec((1, R), lambda p: (0, 0)),
+            pl.BlockSpec((1, R, w), lambda f, p: (f, 0, 0)),
+            pl.BlockSpec((1, R), lambda f, p: (0, 0)),
         ] + w_specs,
-        out_specs=pl.BlockSpec((BP,), lambda p: (p,)),
-        out_shape=jax.ShapeDtypeStruct((ns,), jnp.float32),
+        out_specs=pl.BlockSpec((1, BP), lambda f, p: (f, p)),
+        out_shape=jax.ShapeDtypeStruct((nf, ns), jnp.float32),
         interpret=interpret,
-    )(xd, y[None], *weights)
+    )(xd_feats, y[None], *weights)
+
+
+def pool_mlp_pallas(xd, y, weights, *, block_pool: int = 8,
+                    interpret: bool = True):
+    """Single-feature sweep: xd: (R, w); y: (R,); weights as above (ns a
+    multiple of block_pool).  Returns (ns,) errors — the nf=1 slice of the
+    feature-batched grid."""
+    return pool_mlp_features_pallas(xd[None], y, weights,
+                                    block_pool=block_pool,
+                                    interpret=interpret)[0]

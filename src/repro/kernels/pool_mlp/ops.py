@@ -1,23 +1,55 @@
 """Jitted wrapper mapping the HeadPool's stacked param dict onto the fused
-pool-scoring kernel (pads the pool to the block size)."""
+pool-scoring kernel.  Pool padding to the block size lives HERE, and only
+here — the raw kernel entry points refuse ragged pools."""
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pool_mlp.kernel import pool_mlp_pallas
+from repro.kernels.pool_mlp.kernel import (pool_mlp_features_pallas,
+                                           pool_mlp_pallas)
 
 _KEYS = ("w0", "b0", "w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
 
+# Backends with a Pallas lowering for this kernel: Mosaic on TPU (the tuned
+# target) and Triton on GPU (EXPERIMENTAL: the batched-einsum body is
+# untested against Triton's dot lowering — if it fails to lower on your
+# GPU, set REPRO_POOL_KERNEL_INTERPRET=1 to force interpret mode without a
+# code change).  Everywhere else (CPU tests, exotic backends) the kernel
+# runs in interpret mode.
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
 
 def _resolve_interpret(interpret):
-    """None -> compiled kernel on TPU, interpret-mode emulation elsewhere
-    (the kernel targets the MXU; interpret keeps CPU tests running)."""
+    """None -> compiled kernel on TPU and GPU, interpret-mode emulation
+    elsewhere (interpret keeps CPU tests running).  The
+    REPRO_POOL_KERNEL_INTERPRET env var (0/1) overrides the backend
+    heuristic either way."""
+    env = os.environ.get("REPRO_POOL_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "")
     if interpret is None:
-        return jax.default_backend() != "tpu"
+        return jax.default_backend() not in _COMPILED_BACKENDS
     return interpret
+
+
+def _padded_weights(pool_stacked, BP: int):
+    """The stacked Table-4 param dict as the kernel's weight tuple, zero-
+    padded so the pool dim is a multiple of the block size (the single home
+    of the padding logic)."""
+    ns = pool_stacked["w0"].shape[0]
+    pad = (-ns) % BP
+    weights = []
+    for k in _KEYS:
+        t = pool_stacked[k]
+        if pad:
+            t = jnp.concatenate(
+                [t, jnp.zeros((pad,) + t.shape[1:], t.dtype)], axis=0)
+        weights.append(t)
+    return tuple(weights)
 
 
 @functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
@@ -28,28 +60,24 @@ def pool_mlp_errors(pool_stacked, xd, y, *, block_pool: int = 8,
     interpret = _resolve_interpret(interpret)
     ns = pool_stacked["w0"].shape[0]
     BP = min(block_pool, ns)
-    pad = (-ns) % BP
-    weights = []
-    for k in _KEYS:
-        t = pool_stacked[k]
-        if pad:
-            t = jnp.concatenate(
-                [t, jnp.zeros((pad,) + t.shape[1:], t.dtype)], axis=0)
-        weights.append(t)
-    errs = pool_mlp_pallas(xd, y, tuple(weights), block_pool=BP,
-                           interpret=interpret)
+    errs = pool_mlp_pallas(xd, y, _padded_weights(pool_stacked, BP),
+                           block_pool=BP, interpret=interpret)
     return errs[:ns]
 
 
-def pool_mlp_errors_features(pool_stacked, xd_feats, y, *, block_pool: int = 8,
-                             interpret=None):
+@functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
+def pool_mlp_errors_features(pool_stacked, xd_feats, y, *,
+                             block_pool: int = 8, interpret=None):
     """Score the whole pool against EVERY target feature's probe batch.
 
     xd_feats: (nf, R, w) — one (R, w) dense-vector batch per target feature;
-    y: (R,).  Returns (nf, ns).  One fused kernel sweep per feature (nf is
-    small and static, so this stays a trace-time loop rather than a vmap over
-    the pallas_call)."""
-    return jnp.stack([
-        pool_mlp_errors(pool_stacked, xd_feats[f], y,
-                        block_pool=block_pool, interpret=interpret)
-        for f in range(xd_feats.shape[0])])
+    y: (R,).  Returns (nf, ns).  ONE pallas_call whose grid walks
+    (feature, pool-block) cells — nf sweeps in a single kernel launch, not a
+    trace-time Python loop of nf launches."""
+    interpret = _resolve_interpret(interpret)
+    ns = pool_stacked["w0"].shape[0]
+    BP = min(block_pool, ns)
+    errs = pool_mlp_features_pallas(xd_feats, y,
+                                    _padded_weights(pool_stacked, BP),
+                                    block_pool=BP, interpret=interpret)
+    return errs[:, :ns]

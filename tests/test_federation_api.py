@@ -294,6 +294,37 @@ def test_round_schedule_slices():
     assert s.sub_rounds(40) == 2 and s.sub_rounds(19) == 0
 
 
+def test_round_schedule_drops_trailing_partial_batch():
+    """slices() yields FULL R-batches only: the trailing n % R events are
+    dropped from every epoch, and leftover() reports exactly how many."""
+    s = RoundSchedule(epochs=1, R=20)
+    assert list(s.slices(59)) == [slice(0, 20), slice(20, 40)]  # 19 dropped
+    assert s.leftover(59) == 19
+    assert s.leftover(40) == 0
+    assert s.leftover(19) == 19        # too short for even one sub-round
+    covered = sum(sl.stop - sl.start for sl in s.slices(59))
+    assert covered + s.leftover(59) == 59
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_fit_warns_when_schedule_drops_events(engine):
+    """Ragged train lengths must not lose data SILENTLY: fit announces the
+    per-client dropped-event counts with a UserWarning."""
+    cfg = HFLConfig(mode="always", epochs=1, R=20)
+    with pytest.warns(UserWarning, match="drops the trailing partial"):
+        Federation(_mk_clients(cfg, n=45), cfg, engine=engine).fit()
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_fit_does_not_warn_on_exact_multiples(engine):
+    import warnings as _warnings
+
+    cfg = HFLConfig(mode="always", epochs=1, R=20)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", UserWarning)
+        Federation(_mk_clients(cfg, n=40), cfg, engine=engine).fit()
+
+
 def test_fit_partial_epochs_accumulates():
     cfg = HFLConfig(mode="always", epochs=6, R=20)
     fed = Federation(_mk_clients(cfg), cfg)

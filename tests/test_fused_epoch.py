@@ -1,0 +1,192 @@
+"""The fused-epoch batched engine: one compiled dispatch per epoch must be
+selection-identical to the sequential oracle AND to its own chunked
+(per-round-dispatch) fallback; `needs_per_round` callbacks still receive
+every on_round; dispatch accounting pins the O(1)-dispatches-per-epoch
+claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.federation import Callback, Federation
+from repro.core.hfl import FederatedClient, HFLConfig
+
+
+def _mk_clients(cfg, C=3, nf=2, n=40, seed0=100):
+    out = []
+    for i in range(C):
+        rng = np.random.default_rng(seed0 + i)
+        mk = lambda m: (rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"c{i}", nf, cfg, mk(n), mk(40), mk(40),
+                                   jax.random.PRNGKey(i)))
+    return out
+
+
+class _RoundCounter(Callback):
+    """Overrides on_round -> auto-detected as needs_per_round."""
+
+    def __init__(self):
+        self.rounds = []
+
+    def on_round(self, fed, epoch, rnd):
+        self.rounds.append((epoch, rnd))
+
+
+class _SilentRoundCounter(_RoundCounter):
+    """Same override, but explicitly opts OUT of per-round delivery — the
+    fused path stays engaged and on_round never fires."""
+
+    needs_per_round = False
+
+
+def _head_gap(c1, c2):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree_util.tree_leaves(c1.params["heads"]),
+                   jax.tree_util.tree_leaves(c2.params["heads"])))
+
+
+# ---------------------------------------------------------------------------
+# Parity: fused epoch vs chunked fallback vs the sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ("always", "hfl"))
+def test_fused_equals_chunked_on_batched_engine(mode):
+    """The one-dispatch epoch scan and the per-round chunked scan are the
+    same computation: identical selections, bit-close head params."""
+    cfg = HFLConfig(mode=mode, epochs=4, R=20, patience=2)
+    cs_fused = _mk_clients(cfg)
+    cs_chunk = _mk_clients(cfg)
+    fed_fused = Federation(cs_fused, cfg, engine="batched")
+    h_fused = fed_fused.fit()
+    counter = _RoundCounter()
+    fed_chunk = Federation(cs_chunk, cfg, engine="batched",
+                           callbacks=[counter])
+    h_chunk = fed_chunk.fit()
+    assert fed_fused.dispatch_stats["path"] == "fused"
+    assert fed_chunk.dispatch_stats["path"] == "chunked"
+    for name in h_fused:
+        assert h_fused[name]["selections"] == h_chunk[name]["selections"]
+        assert h_fused[name]["rounds"] == h_chunk[name]["rounds"]
+        np.testing.assert_allclose(h_fused[name]["val"],
+                                   h_chunk[name]["val"],
+                                   rtol=1e-6, atol=1e-7)
+    for c1, c2 in zip(cs_fused, cs_chunk):
+        assert _head_gap(c1, c2) < 1e-6
+    # 40 samples / R=20 -> 2 sub-rounds x 4 epochs of on_round events
+    assert counter.rounds == [(e, r) for e in range(4) for r in range(2)]
+
+
+def test_fused_epoch_matches_sequential_oracle():
+    """Acceptance pin: the fused-epoch engine's selections are identical to
+    the sequential oracle's (no callbacks -> the fused path is what runs)."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    cs_seq = _mk_clients(cfg, C=4, nf=3)
+    cs_bat = _mk_clients(cfg, C=4, nf=3)
+    h_seq = Federation(cs_seq, cfg, engine="sequential").fit()
+    fed_bat = Federation(cs_bat, cfg, engine="batched")
+    h_bat = fed_bat.fit()
+    assert fed_bat.dispatch_stats["path"] == "fused"
+    for name in h_seq:
+        assert h_seq[name]["selections"] == h_bat[name]["selections"]
+        assert h_seq[name]["rounds"] == h_bat[name]["rounds"] > 0
+        np.testing.assert_allclose(h_seq[name]["val"], h_bat[name]["val"],
+                                   rtol=1e-5, atol=1e-6)
+    for c1, c2 in zip(cs_seq, cs_bat):
+        assert _head_gap(c1, c2) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Callback routing: needs_per_round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ("sequential", "batched"))
+def test_needs_per_round_callbacks_receive_every_round(engine):
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    counter = _RoundCounter()
+    Federation(_mk_clients(cfg), cfg, engine=engine,
+               callbacks=[counter]).fit()
+    assert counter.rounds == [(e, r) for e in range(3) for r in range(2)]
+
+
+def test_explicit_opt_out_keeps_fused_path():
+    """needs_per_round=False beats the on_round-override auto-detection:
+    the fused path runs and the override never fires."""
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    silent = _SilentRoundCounter()
+    fed = Federation(_mk_clients(cfg), cfg, engine="batched",
+                     callbacks=[silent])
+    fed.fit()
+    assert fed.dispatch_stats["path"] == "fused"
+    assert silent.rounds == []
+
+
+def test_default_callbacks_do_not_break_fusion():
+    """The built-in epoch-level callbacks (VerboseLogger / MetricsCapture /
+    SaveBestCallback) must engage the fused path automatically."""
+    from repro.core.federation import (MetricsCapture, SaveBestCallback,
+                                       VerboseLogger)
+    import tempfile
+
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    with tempfile.TemporaryDirectory() as d:
+        cbs = [VerboseLogger(), MetricsCapture(), SaveBestCallback(d)]
+        fed = Federation(_mk_clients(cfg), cfg, engine="batched",
+                         callbacks=cbs)
+        fed.fit()
+    assert fed.dispatch_stats["path"] == "fused"
+    assert len(cbs[1].epochs) == 2
+    assert cbs[2].n_saves >= 1
+
+
+# ---------------------------------------------------------------------------
+# Dispatch accounting
+# ---------------------------------------------------------------------------
+
+def test_fused_path_is_one_dispatch_per_epoch():
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    fed = Federation(_mk_clients(cfg), cfg, engine="batched")
+    fed.fit()
+    st = fed.dispatch_stats
+    assert st["path"] == "fused" and st["engine"] == "batched"
+    assert st["epochs"] == 3 and st["dispatches"] == 3
+    assert st["dispatches_per_epoch"] == 1.0
+
+
+def test_chunked_path_is_one_dispatch_per_round():
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    fed = Federation(_mk_clients(cfg), cfg, engine="batched",
+                     callbacks=[_RoundCounter()])
+    fed.fit()
+    st = fed.dispatch_stats
+    # 40 samples / R=20 -> 2 sub-rounds per epoch
+    assert st["path"] == "chunked" and st["dispatches_per_epoch"] == 2.0
+
+
+def test_sequential_dispatch_stats_scale_with_clients():
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    fed = Federation(_mk_clients(cfg, C=3), cfg, engine="sequential")
+    fed.fit()
+    st = fed.dispatch_stats
+    assert st["engine"] == "sequential" and st["path"] == "per-round"
+    # per epoch: 3 clients x 2 train rounds + 3 x 2 x nf=2 scorings + 3 evals
+    assert st["dispatches_per_epoch"] == 3 * 2 + 3 * 2 * 2 + 3
+
+
+# ---------------------------------------------------------------------------
+# Save/restore through the fused path stays bit-identical
+# ---------------------------------------------------------------------------
+
+def test_fused_save_restore_bit_identical(tmp_path):
+    cfg = HFLConfig(mode="hfl", epochs=6, R=20, patience=2)
+    h_straight = Federation(_mk_clients(cfg), cfg, engine="batched").fit()
+    fed = Federation(_mk_clients(cfg), cfg, engine="batched")
+    fed.fit(epochs=3)
+    fed.save(tmp_path / "ck")
+    h_resumed = Federation.restore(tmp_path / "ck", _mk_clients(cfg)).fit()
+    for name in h_straight:
+        assert h_straight[name]["val"] == h_resumed[name]["val"]
+        assert h_straight[name]["selections"] == \
+            h_resumed[name]["selections"]
+        assert h_straight[name]["best_val"] == h_resumed[name]["best_val"]

@@ -151,3 +151,23 @@ def test_pool_mlp_shapes(ns, R, w, bp):
     ref = pool_errors_ref(stacked, xd, y)
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
     assert int(jnp.argmin(out)) == int(jnp.argmin(ref))
+
+
+def test_pool_mlp_raw_kernel_rejects_ragged_pool():
+    """Padding lives in ops.pool_mlp_errors* only; the raw kernel entry
+    point must refuse a pool that is not a block multiple with a real
+    error, not an assert."""
+    from repro.core.networks import head_schema
+    from repro.kernels.pool_mlp.kernel import pool_mlp_pallas
+    from repro.sharding import spec as S
+
+    ns, R, w = 5, 10, 3
+    pool = [S.materialize(head_schema(w), jax.random.PRNGKey(i))
+            for i in range(ns)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pool)
+    weights = tuple(stacked[k] for k in ("w0", "b0", "w1", "b1", "w2", "b2",
+                                         "w3", "b3", "w4", "b4"))
+    xd = jax.random.normal(jax.random.PRNGKey(0), (R, w))
+    y = jax.random.normal(jax.random.PRNGKey(1), (R,))
+    with pytest.raises(ValueError, match="multiple of block_pool"):
+        pool_mlp_pallas(xd, y, weights, block_pool=4)

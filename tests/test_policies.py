@@ -257,3 +257,42 @@ def test_degenerate_selection_params_rejected():
         SoftmaxSelection(-1.0)
     with pytest.raises(ValueError, match="k must be"):
         TopKSelection(0)
+
+
+def test_plateaued_mask_matches_scalar_rule():
+    """The jittable vectorized plateau mask and PlateauSwitch.active_mask
+    both reproduce the scalar plateaued() elementwise across edge cases."""
+    from repro.core.policies import plateaued_mask
+
+    histories = [
+        [5.0, 4.0, 3.0, 2.0],          # improving: not plateaued
+        [5.0, 4.0, 4.0, 4.5],          # stalled for 2
+        [1.0, 2.0, 3.0, 4.0],          # monotonically worse
+        [2.0, 1.0, 1.0, 0.5],          # dips then improves
+    ]
+    rng = np.random.default_rng(0)
+    for patience in (0, 1, 2, 3, 5):
+        expect = [plateaued(h, patience) for h in histories]
+        mask = np.asarray(plateaued_mask(np.asarray(histories), patience))
+        assert mask.tolist() == expect, patience
+        sw = PlateauSwitch(patience=patience)
+        assert sw.active_mask(histories, rng).tolist() == expect, patience
+    # empty histories (epoch 0)
+    assert np.asarray(plateaued_mask(np.empty((3, 0)), 2)).tolist() == \
+        [False] * 3
+    assert PlateauSwitch(2).active_mask([[], [], []], rng).tolist() == \
+        [False] * 3
+
+
+def test_plateau_active_mask_exact_float64_and_ragged_fallback():
+    """active_mask compares in exact float64 (a sub-float32 improvement
+    must count as improvement, as in the scalar rule) and falls back to the
+    per-client loop on ragged history lengths."""
+    rng = np.random.default_rng(0)
+    sw = PlateauSwitch(patience=1)
+    h = [[1.0, 1.0 - 1e-12]]           # improvement below f32 resolution
+    assert [plateaued(x, 1) for x in h] == [False]
+    assert sw.active_mask(h, rng).tolist() == [False]
+    ragged = [[3.0, 2.0], [3.0, 3.0, 3.0]]
+    expect = [plateaued(x, 1) for x in ragged]
+    assert sw.active_mask(ragged, rng).tolist() == expect
