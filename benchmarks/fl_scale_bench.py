@@ -12,6 +12,15 @@ one jitted dispatch (train steps, policy rounds, eval, save-best merge)
 with donated state buffers.  Each engine run is preceded by an
 identically-shaped warmup run so compile time is excluded.
 
+``--mesh`` adds a ``batched+mesh`` row per client count: the same fused
+epoch, client-sharded over a `clients` device mesh spanning every local
+device (see `repro.core.mesh_federation` and docs/SCALING.md) — the
+devices x clients scaling axis.  ``--force-devices N`` splits the host CPU
+into N virtual devices (must be handled before jax initializes, so it is
+read straight from argv) to exercise the sharded path without
+accelerators; client counts not divisible by the device count skip the
+mesh row.
+
 Uses deterministic random tensors (not the synthetic-hospital generator) so
 the sweep measures the engine, not data generation; ``--population`` switches
 to `repro.data.synthetic.make_population` data instead.  ``--profile`` adds
@@ -27,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
@@ -36,12 +46,42 @@ from pathlib import Path
 _REPO_ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_REPO_ROOT / "src"))
 
+
+def _force_devices_from_argv() -> None:
+    """Apply ``--force-devices N`` BEFORE jax first initializes — jax locks
+    the host platform device count at first init, so argparse (which runs
+    after the imports below) would be too late.  Accepts both the
+    space-separated and ``--force-devices=N`` spellings; a missing value
+    is left for argparse to report."""
+    n = None
+    for i, arg in enumerate(sys.argv):
+        if arg == "--force-devices" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif arg.startswith("--force-devices="):
+            n = arg.split("=", 1)[1]
+    if n is None:
+        return
+    try:
+        count = int(n)
+    except ValueError:
+        count = -1
+    if count < 1:
+        raise SystemExit(f"--force-devices must be a positive integer, "
+                         f"got {n!r}")
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={count}").strip()
+
+
+_force_devices_from_argv()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.federation import Federation, RoundSchedule
 from repro.core.hfl import FederatedClient, HFLConfig
+from repro.core.mesh_federation import make_mesh, mesh_devices
 
 
 def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
@@ -67,7 +107,7 @@ def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
 
 
 def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
-              population: bool):
+              population: bool, mesh=None):
     clients = _make_clients(C, cfg, nf, n, cfg.w, population)
     # population data has a data-dependent (truncated) length, so the
     # sub-round count must come from the actual tensors, not from n
@@ -78,7 +118,7 @@ def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
         raise SystemExit(
             f"train split too short for a single sub-round "
             f"(n={n_eff} < R={cfg.R}); raise --batches or the data sizes")
-    fed = Federation(clients, cfg, engine=engine)
+    fed = Federation(clients, cfg, engine=engine, mesh=mesh)
     t0 = time.perf_counter()
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", UserWarning)   # ragged-length drop
@@ -90,15 +130,16 @@ def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
 
 
 def bench(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
-          population: bool):
-    _run_once(engine, C, cfg, nf, n, population)          # warmup + compile
+          population: bool, mesh=None):
+    _run_once(engine, C, cfg, nf, n, population, mesh)    # warmup + compile
     elapsed, sub_rounds, dispatch = _run_once(engine, C, cfg, nf, n,
-                                              population)
+                                              population, mesh)
     return {
         "round_ms": 1e3 * elapsed / sub_rounds,           # all C clients
         "client_rounds_per_s": C * sub_rounds / elapsed,
         "dispatches_per_epoch": dispatch["dispatches_per_epoch"],
         "dispatch_path": dispatch["path"],
+        "devices": dispatch.get("devices", 1),
     }
 
 
@@ -192,6 +233,7 @@ def validate_payload(payload: dict) -> None:
         where = f"results[{i}]"
         need(r, "clients", int, where)
         need(r, "engine", str, where)
+        need(r, "devices", int, where)
         need(r, "round_ms", (int, float), where)
         need(r, "client_rounds_per_s", (int, float), where)
         need(r, "dispatches_per_epoch", (int, float), where)
@@ -225,6 +267,12 @@ def main():
     ap.add_argument("--profile", action="store_true",
                     help="also report the batched engine's train/policy/"
                          "eval phase split per client count")
+    ap.add_argument("--mesh", action="store_true",
+                    help="add a batched+mesh row: the fused epoch "
+                         "client-sharded over all local devices")
+    ap.add_argument("--force-devices", type=int, default=None,
+                    help="split the host CPU into N virtual devices "
+                         "(applied before jax init; see --mesh)")
     ap.add_argument("--out", default=str(_REPO_ROOT / "BENCH_fl_scale.json"),
                     help="machine-readable results path (empty to disable)")
     args = ap.parse_args()
@@ -233,24 +281,46 @@ def main():
     cfg = HFLConfig(mode="always", epochs=args.epochs, R=args.R)
     n = args.batches * args.R
 
+    runs = [(e, None) for e in engines]
+    if args.mesh:
+        mesh = make_mesh()
+        if mesh_devices(mesh) == 1:
+            # a 1-device mesh would just re-measure the single-device path
+            # under a misleading label — skip it rather than record it
+            print("[mesh] 1 local device: skipping batched+mesh rows (the "
+                  "engine would fall back to the single-device path; use "
+                  "--force-devices N to split the host CPU)",
+                  file=sys.stderr)
+        else:
+            runs.append(("batched+mesh", mesh))
+
     records = []
     profiles = {}
-    print("clients,engine,round_ms,client_rounds_per_s,"
+    print("clients,engine,devices,round_ms,client_rounds_per_s,"
           "dispatches_per_epoch,speedup_vs_sequential")
     for C in counts:
         rows = {}
-        for engine in engines:
-            rows[engine] = bench(engine, C, cfg, args.nf, n, args.population)
-        for engine in engines:
-            r = rows[engine]
+        for label, mesh_ in runs:
+            if mesh_ is not None and C % mesh_devices(mesh_):
+                print(f"[mesh] skipping C={C}: not divisible by "
+                      f"{mesh_devices(mesh_)} devices", file=sys.stderr)
+                continue
+            engine = "batched" if mesh_ is not None else label
+            rows[label] = bench(engine, C, cfg, args.nf, n,
+                                args.population, mesh_)
+        for label, _ in runs:
+            if label not in rows:
+                continue
+            r = rows[label]
             speedup = (r["client_rounds_per_s"]
                        / rows["sequential"]["client_rounds_per_s"]
                        if "sequential" in rows else float("nan"))
-            print(f"{C},{engine},{r['round_ms']:.2f},"
+            print(f"{C},{label},{r['devices']},{r['round_ms']:.2f},"
                   f"{r['client_rounds_per_s']:.1f},"
                   f"{r['dispatches_per_epoch']:.1f},{speedup:.2f}",
                   flush=True)
-            records.append({"clients": C, "engine": engine,
+            records.append({"clients": C, "engine": label,
+                            "devices": r["devices"],
                             "round_ms": r["round_ms"],
                             "client_rounds_per_s": r["client_rounds_per_s"],
                             "dispatches_per_epoch": r["dispatches_per_epoch"],
@@ -277,6 +347,7 @@ def main():
             "config": {"epochs": args.epochs, "R": args.R, "nf": args.nf,
                        "batches": args.batches, "mode": cfg.mode,
                        "population": bool(args.population),
+                       "mesh": bool(args.mesh),
                        "clients": counts, "engines": engines},
             "results": records,
         }

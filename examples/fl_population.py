@@ -18,7 +18,10 @@ the command line:
 With ``--engine batched`` (default) every Adam step is vmapped across
 hospitals and each federated opportunity runs as ONE fused selection+blend
 scan; ``--engine sequential`` runs the reference oracle instead — same
-selections, ~an order of magnitude slower at this scale.
+selections, ~an order of magnitude slower at this scale.  ``--mesh``
+client-shards the batched engine over every local device (a 1-D
+``clients`` mesh — see docs/SCALING.md; selections stay identical, and on
+a 1-device host it falls back to the plain path).
 
 ``--save-dir d`` checkpoints the full federation at the end (and ``--resume``
 restarts from such a checkpoint and trains ``--epochs`` MORE epochs —
@@ -80,6 +83,10 @@ def main():
                     help="hide pool entries unrefreshed for this many rounds")
     ap.add_argument("--participation", type=float, default=None,
                     help="Bernoulli(p) per-epoch participation switch")
+    ap.add_argument("--mesh", action="store_true",
+                    help="client-shard the batched engine over all local "
+                         "devices (docs/SCALING.md; falls back to the "
+                         "single-device path on 1 device)")
     ap.add_argument("--save-dir", default=None,
                     help="checkpoint the federation here after training")
     ap.add_argument("--resume", action="store_true",
@@ -87,6 +94,10 @@ def main():
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        from repro.core.mesh_federation import make_mesh
+        mesh = make_mesh()
     cfg = HFLConfig(epochs=args.epochs, mode=args.mode, R=20)
     clients, packs = population_clients(args.clients, cfg,
                                         n_patients=args.patients,
@@ -101,7 +112,8 @@ def main():
                   "bundle; --mode/--selection/--max-staleness/"
                   "--participation are ignored", file=sys.stderr)
         fed = Federation.restore(args.save_dir, clients,
-                                 engine=args.engine, callbacks=[metrics])
+                                 engine=args.engine, callbacks=[metrics],
+                                 mesh=mesh)
         print(f"== resumed {args.clients}-hospital federation at epoch "
               f"{fed.epoch}, engine={fed.engine} ==")
         rounds0 = sum(fed.n_rounds.values())
@@ -110,9 +122,11 @@ def main():
     else:
         fed = Federation(clients, cfg, policies=build_policies(args, cfg),
                          engine=args.engine or "batched",
-                         callbacks=[metrics])
+                         callbacks=[metrics], mesh=mesh)
         print(f"== {args.clients}-hospital population, engine={fed.engine}, "
-              f"mode={args.mode}, selection={args.selection} ==")
+              f"mode={args.mode}, selection={args.selection}"
+              + (f", mesh={mesh.devices.size}dev" if mesh is not None
+                 else "") + " ==")
         rounds0 = 0
         t0 = time.time()
         hist = fed.fit(verbose=args.verbose)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.core import mesh_federation as MF
 from repro.core.hfl import (FederatedClient, HeadPool, HFLConfig,
                             _eval_mse, _pool_kernel_ops, _train_step,
                             pool_errors, pool_errors_kernel,
@@ -106,17 +107,36 @@ class Callback:
 
     needs_per_round: Optional[bool] = None
 
-    def on_fit_start(self, fed) -> None: ...
+    def on_fit_start(self, fed) -> None:
+        """Once per :meth:`Federation.fit` call, before any training (and
+        before the ragged-length UserWarning check)."""
 
-    def on_round(self, fed, epoch: int, round_idx: int) -> None: ...
+    def on_round(self, fed, epoch: int, round_idx: int) -> None:
+        """After each federated sub-round.  ``round_idx`` counts executed
+        sub-rounds from 0 within the epoch.  On the batched engine this
+        fires only on the chunked path (see ``needs_per_round``).  To read
+        mid-epoch state there, go through :meth:`Federation.results` —
+        it syncs the stacked loop state into the clients first; a direct
+        ``fed.clients[i].params`` read is stale until then (current only
+        on the sequential engine).  :meth:`Federation.save` is not valid
+        here (mid-epoch saves raise)."""
 
     def on_epoch_end(self, fed, epoch: int, val: Dict[str, float],
-                     active: Dict[str, bool]) -> None: ...
+                     active: Dict[str, bool]) -> None:
+        """After each epoch: ``val`` maps client name -> this epoch's
+        validation MSE, ``active`` maps client name -> whether its switch
+        was active (it federated) this epoch.  Safe point for
+        :meth:`Federation.save`."""
 
-    def on_fit_end(self, fed, results) -> None: ...
+    def on_fit_end(self, fed, results) -> None:
+        """Once per fit, after training: ``results`` is the
+        :meth:`Federation.results` history dict."""
 
 
 def _wants_per_round(cb: Callback) -> bool:
+    """Resolve a callback's effective per-round need: the explicit
+    ``needs_per_round`` flag if set, else whether it overrides
+    :meth:`Callback.on_round`."""
     flag = getattr(cb, "needs_per_round", None)
     if flag is None:
         return type(cb).on_round is not Callback.on_round
@@ -216,6 +236,10 @@ def policy_round(client: FederatedClient, pool: HeadPool,
 
 
 def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
+    """The reference oracle: a host-driven Python loop — per-client jitted
+    train steps interleaved with per-client :func:`policy_round` calls in
+    list order — that defines the semantics the batched engine must
+    reproduce.  Handles heterogeneous nf and ragged data lengths."""
     pol = fed.policies
     C = len(fed.clients)
     use_kernel = fed.cfg.use_pool_kernel
@@ -272,6 +296,7 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
         for cb in cbs:
             cb.on_epoch_end(fed, epoch, val, active)
     fed.dispatch_stats = {"engine": "sequential", "path": "per-round",
+                          "devices": 1,
                           "epochs": n_epochs, "dispatches": n_dispatch,
                           "dispatches_per_epoch": n_dispatch / n_epochs}
 
@@ -373,6 +398,8 @@ def fused_policy_round(heads, pool_heads, pool_age, xd_R, y_R, active, key,
 
 
 def _stack_trees(trees):
+    """Stack a list of same-structure pytrees leaf-wise on a new leading
+    axis — the batched engine's (C, ...) client stacking."""
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
@@ -386,6 +413,7 @@ def stack_pool(pool: HeadPool, names: Sequence[str], nf: int):
 
 
 def _tree_row(tree, i):
+    """Client i's slice of a stacked (C, ...) tree."""
     return jax.tree_util.tree_map(lambda p: p[i], tree)
 
 
@@ -413,31 +441,29 @@ def _make_batched_fns(lr: float):
     return step, evaluate
 
 
-@functools.lru_cache(maxsize=None)
-def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
-                   use_kernel: bool, do_federate: bool, do_eval: bool):
-    """Compile-cached whole-epoch function: ONE dispatch scans every
-    sub-round of an epoch — the vmapped Adam step on that round's R-slice,
-    then the fused policy round (selection, blend, publish, aging, RNG
-    fold-in) — and, when ``do_eval``, folds the per-epoch validation eval
-    and the save-best ``where``-merge into the same compiled function.
+def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
+                use_kernel: bool, do_federate: bool, do_eval: bool, *,
+                gather=None, local_rows=None):
+    """The fused whole-epoch computation shared by BOTH batched backends:
+    a scan over the epoch's sub-rounds (vmapped Adam step on that round's
+    R-slice, then the fused policy round), with the per-epoch validation
+    eval and save-best ``where``-merge folded in when ``do_eval``.
 
-    The whole carried state (stacked params, opt state, pool, ages, PRNG
-    key, best-val, best-params) is DONATED, so XLA reuses the stacked
-    buffers across epochs instead of copying them every dispatch.  The
-    per-round ``chosen`` indices come back stacked ``(n_rounds, C, nf)``
-    as a scan output: selection traces materialize in one device-to-host
-    transfer per epoch, not one per round.
-
-    The cache key is the trace-relevant statics — (lr, nf, policies,
-    use_kernel, do_federate, do_eval); jit itself caches per shape, so one
-    factory entry serves every (C, n_rounds, R) geometry.  The chunked
-    fallback (per-round callbacks) dispatches the same function over
-    1-round slices with ``do_eval`` only on the last chunk."""
+    ``gather`` / ``local_rows`` are the pool-exchange hooks — the ONLY
+    point where the two backends differ.  Identity (the default) on the
+    single-device path, where every array already holds all C clients.
+    The mesh backend (``repro.core.mesh_federation``) injects an
+    all-gather along the `clients` axis (pool candidates + probe batches
+    to the global client order) and a dynamic-slice taking the device's
+    own client block back out of the blended heads."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
     bounded = policies.pool.bounded
+    if gather is None:
+        gather = lambda t: t
+    if local_rows is None:
+        local_rows = lambda t: t
 
     def epoch(params, opt_state, pool_heads, pool_age, key, best_val,
               best_params, xs_r, xd_r, y_r, active, val_xs, val_xd, val_y):
@@ -452,10 +478,10 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
                     pool_age = pool_age + 1
                 key, sub = jax.random.split(key)
                 new_heads, pool_heads, pool_age, chosen = _policy_round_body(
-                    params["heads"], pool_heads, pool_age, xd_b, y_b,
-                    active, sub, nf=nf, policies=policies,
-                    use_kernel=use_kernel)
-                params = {**params, "heads": new_heads}
+                    gather(params["heads"]), pool_heads, pool_age,
+                    gather(xd_b), gather(y_b), active, sub, nf=nf,
+                    policies=policies, use_kernel=use_kernel)
+                params = {**params, "heads": local_rows(new_heads)}
             else:
                 chosen = jnp.full((C, nf), -1, jnp.int32)
             return (params, opt_state, pool_heads, pool_age, key), chosen
@@ -464,22 +490,57 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
         (params, opt_state, pool_heads, pool_age, key), chosen = \
             jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
         if do_eval:
-            v = evaluate(params, val_xs, val_xd, val_y)
+            v = evaluate(params, val_xs, val_xd, val_y)  # (local clients,)
             improved = v < best_val
             best_val = jnp.where(improved, v, best_val)
+            n_loc = v.shape[0]
             best_params = jax.tree_util.tree_map(
                 lambda b, p: jnp.where(
-                    improved.reshape((C,) + (1,) * (p.ndim - 1)), p, b),
+                    improved.reshape((n_loc,) + (1,) * (p.ndim - 1)), p, b),
                 best_params, params)
         else:
             v = None
         return (params, opt_state, pool_heads, pool_age, key, best_val,
                 best_params, v, chosen)
 
+    return epoch
+
+
+@functools.lru_cache(maxsize=None)
+def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
+                   use_kernel: bool, do_federate: bool, do_eval: bool):
+    """Compile-cached whole-epoch function: ONE dispatch scans every
+    sub-round of an epoch — the vmapped Adam step on that round's R-slice,
+    then the fused policy round (selection, blend, publish, aging, RNG
+    fold-in) — and, when ``do_eval``, folds the per-epoch validation eval
+    and the save-best ``where``-merge into the same compiled function.
+    The computation itself is :func:`_epoch_body` with identity exchange
+    hooks; the client-sharded twin wraps the same body in ``shard_map``
+    (``mesh_federation._make_mesh_epoch_fn``).
+
+    The whole carried state (stacked params, opt state, pool, ages, PRNG
+    key, best-val, best-params) is DONATED, so XLA reuses the stacked
+    buffers across epochs instead of copying them every dispatch.  The
+    per-round ``chosen`` indices come back stacked ``(n_rounds, C, nf)``
+    as a scan output: selection traces materialize in one device-to-host
+    transfer per epoch, not one per round.
+
+    The cache key is the trace-relevant statics — (lr, nf, policies,
+    use_kernel, do_federate, do_eval); jit itself caches per shape, so one
+    factory entry serves every (C, n_rounds, R) geometry.  The chunked
+    fallback (per-round callbacks) dispatches the same function over
+    1-round slices with ``do_eval`` only on the last chunk."""
+    epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
 def _check_homogeneous(clients: Sequence[FederatedClient]) -> None:
+    """The batched engine's stacking precondition: every client must have
+    the same feature count nf AND identical train/valid/test array shapes
+    (the per-client state is stacked on a leading axis and scanned as one
+    geometry).  Raises ValueError otherwise — truncate ragged populations
+    to common lengths (``experiment.population_task_data`` does) or use
+    the sequential oracle, which handles heterogeneity natively."""
     nf = clients[0].nf
     shapes = [tuple(np.shape(a) for a in c.train) for c in clients]
     if any(c.nf != nf for c in clients) or len(set(shapes)) != 1 or \
@@ -493,6 +554,12 @@ def _check_homogeneous(clients: Sequence[FederatedClient]) -> None:
 
 
 def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
+    """The batched executor: stack the population, scan whole epochs inside
+    one compiled dispatch (see :func:`_make_epoch_fn`), and — when the
+    Federation carries a multi-device mesh — run that same scan client-
+    sharded under ``shard_map`` (see ``repro.core.mesh_federation``).
+    Writes results back into the clients via :func:`sync` and fills
+    ``fed.dispatch_stats``."""
     clients = fed.clients
     C = len(clients)
     names = [c.name for c in clients]
@@ -535,6 +602,27 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     base_rounds = dict(fed.n_rounds)
     key = fed._key
 
+    # client-sharded execution: with a multi-device mesh the stacked state
+    # is partitioned over the `clients` axis once per fit (subsequent
+    # epochs carry the shardings through the donated outputs) and the
+    # epoch function is the shard_map twin of _make_epoch_fn
+    mesh = fed._exec_mesh()
+    if mesh is not None:
+        (params, opt_state, pool_heads, pool_age, key, best_val,
+         best_params, (xs_r, xd_r, y_r), val) = MF.shard_fit_state(
+            mesh, nf, cfg.w, C, params=params, opt_state=opt_state,
+            pool_heads=pool_heads, pool_age=pool_age, key=key,
+            best_val=best_val, best_params=best_params,
+            rounds_data=(xs_r, xd_r, y_r), val_data=val)
+
+    def make_epoch_fn(do_federate: bool, do_eval: bool):
+        if mesh is not None:
+            return MF._make_mesh_epoch_fn(cfg.lr, nf, cfg.w, pol,
+                                          use_kernel, do_federate, do_eval,
+                                          mesh, C)
+        return _make_epoch_fn(cfg.lr, nf, pol, use_kernel, do_federate,
+                              do_eval)
+
     # the fused path runs the whole epoch in ONE dispatch; any callback that
     # needs per-round delivery forces the chunked path (one dispatch per
     # sub-round through the SAME compiled function, on_round after each)
@@ -564,22 +652,21 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
         active = np.asarray(pol.switch.active_mask(histories,
                                                    fed._switch_rng))
         active_dev = jnp.asarray(active)
+        if mesh is not None:
+            active_dev = MF.replicate(mesh, active_dev)
         do_federate = bool(active.any()) and C >= 2
         state = (params, opt_state, pool_heads, pool_age, key, best_val,
                  best_params)
         fed._mid_epoch = True
         if fused:
-            epoch_fn = _make_epoch_fn(cfg.lr, nf, pol, use_kernel,
-                                      do_federate, True)
+            epoch_fn = make_epoch_fn(do_federate, True)
             (*state, v, chosen) = epoch_fn(*state, xs_r, xd_r, y_r,
                                            active_dev, *val)
             n_dispatch += 1
         else:
             chunks = []
             for rnd in range(n_sub):
-                epoch_fn = _make_epoch_fn(cfg.lr, nf, pol, use_kernel,
-                                          do_federate,
-                                          rnd == n_sub - 1)
+                epoch_fn = make_epoch_fn(do_federate, rnd == n_sub - 1)
                 (*state, v, ch) = epoch_fn(
                     *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
                     y_r[rnd:rnd + 1], active_dev, *val)
@@ -595,8 +682,7 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                 for cb in cbs:
                     cb.on_round(fed, epoch, rnd)
             if n_sub == 0:      # no trainable sub-round: eval-only dispatch
-                epoch_fn = _make_epoch_fn(cfg.lr, nf, pol, use_kernel,
-                                          do_federate, True)
+                epoch_fn = make_epoch_fn(do_federate, True)
                 (*state, v, ch) = epoch_fn(*state, xs_r, xd_r, y_r,
                                            active_dev, *val)
                 chunks.append(ch)
@@ -624,6 +710,7 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
 
     fed.dispatch_stats = {"engine": "batched",
                           "path": "fused" if fused else "chunked",
+                          "devices": MF.mesh_devices(mesh),
                           "epochs": n_epochs, "dispatches": n_dispatch,
                           "dispatches_per_epoch": n_dispatch / n_epochs}
     # write the final state back so the clients / pool / rng stay canonical
@@ -650,17 +737,33 @@ class Federation:
     MORE epochs from wherever the federation currently is.  ``save(dir)`` /
     ``restore(dir, clients)`` round-trip the full state through
     ``repro.checkpoint`` (data is NOT checkpointed — rebuild the clients the
-    same way, then restore overlays params/opt/pool/rng/histories)."""
+    same way, then restore overlays params/opt/pool/rng/histories).
+
+    ``mesh`` (batched engine only) opts into client-sharded execution: a
+    1-D :class:`jax.sharding.Mesh` with a ``clients`` axis
+    (:func:`repro.core.mesh_federation.make_mesh`) partitions the stacked
+    population over its devices — device-local Adam steps, explicit
+    all-gather pool exchange per sub-round, selections identical to the
+    single-device engine.  A one-device mesh falls back to the plain
+    single-device fused path automatically."""
 
     def __init__(self, clients: Sequence[FederatedClient],
                  cfg: Optional[HFLConfig] = None, *,
                  policies: Optional[FederationPolicies] = None,
                  schedule: Optional[RoundSchedule] = None,
                  callbacks: Sequence[Callback] = (),
-                 engine: str = "sequential"):
+                 engine: str = "sequential",
+                 mesh=None):
         if engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {engine!r}")
         self.clients = list(clients)
+        if mesh is not None:
+            if engine != "batched":
+                raise ValueError(
+                    "mesh= requires engine='batched' (the sequential "
+                    "oracle is a host-driven reference loop)")
+            MF.validate_mesh(mesh, len(self.clients))
+        self.mesh = mesh
         names = [c.name for c in self.clients]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate client names: {names}")
@@ -684,11 +787,21 @@ class Federation:
         self._key = jax.random.PRNGKey(cfg.seed)
         self._sync = None       # set by the batched executor while it runs
         self._mid_epoch = False  # True inside an epoch: save() would be torn
-        # {engine, path, epochs, dispatches, dispatches_per_epoch} for the
-        # most recent fit: "fused" = one compiled dispatch per epoch,
-        # "chunked" = one per sub-round (per-round callbacks present),
-        # "per-round" = the sequential oracle's per-client dispatch pattern
+        # {engine, path, devices, epochs, dispatches, dispatches_per_epoch}
+        # for the most recent fit: "fused" = one compiled dispatch per
+        # epoch, "chunked" = one per sub-round (per-round callbacks
+        # present), "per-round" = the sequential oracle's per-client
+        # dispatch pattern; devices = mesh devices actually sharded over
+        # (1 on the single-device path)
         self.dispatch_stats: Optional[dict] = None
+
+    def _exec_mesh(self):
+        """The mesh the batched executor actually shards over: None when no
+        mesh was given OR the mesh has one device — the single-device fused
+        path runs then (selection-identical, zero shard_map overhead)."""
+        if self.mesh is not None and MF.mesh_devices(self.mesh) > 1:
+            return self.mesh
+        return None
 
     # -- training ----------------------------------------------------------
 
@@ -795,6 +908,10 @@ class Federation:
             "policies": self.policies.spec(),
             "schedule": {"epochs": self.schedule.epochs,
                          "R": self.schedule.R},
+            # informational: the device count the run sharded over.  The
+            # checkpointed state itself is mesh-agnostic (gathered to host
+            # trees), so a restore may use any mesh — or none.
+            "mesh_devices": MF.mesh_devices(self.mesh),
             "names": [c.name for c in self.clients],
             "nf": [c.nf for c in self.clients],
             "data_shapes": [_client_data_shapes(c) for c in self.clients],
@@ -820,10 +937,14 @@ class Federation:
     @classmethod
     def restore(cls, directory, clients: Sequence[FederatedClient], *,
                 engine: Optional[str] = None,
-                callbacks: Sequence[Callback] = ()) -> "Federation":
+                callbacks: Sequence[Callback] = (),
+                mesh=None) -> "Federation":
         """Rebuild a saved federation over freshly-constructed clients (the
         data pipeline is re-run by the caller; everything learned/random is
-        overlaid from the checkpoint, bit-identically)."""
+        overlaid from the checkpoint, bit-identically).  ``mesh`` re-shards
+        the resumed run over a device mesh — checkpoints are mesh-agnostic,
+        so saving from a 4-device run and restoring onto 1 device (or vice
+        versa) is bit-identical either way."""
         d = Path(directory)
         manifest = json.loads((d / "manifest.json").read_text())
         names = [c.name for c in clients]
@@ -856,7 +977,8 @@ class Federation:
                   policies=FederationPolicies.from_spec(manifest["policies"]),
                   schedule=RoundSchedule(**manifest["schedule"]),
                   callbacks=callbacks,
-                  engine=engine or manifest["engine"])
+                  engine=engine or manifest["engine"],
+                  mesh=mesh)
         state = ckpt.load(d / manifest.get("state_file", "state.msgpack"))
         if state.get("epoch") != manifest["epoch"]:
             raise ValueError(

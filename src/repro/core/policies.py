@@ -92,6 +92,9 @@ class SwitchPolicy(_Spec):
 
     def active(self, val_history: Sequence[float],
                rng: np.random.Generator) -> bool:
+        """One client's switch decision for the coming epoch, given its
+        validation-MSE history (may be empty) and the shared host rng
+        stream (consumed ONLY by stochastic policies, in client order)."""
         raise NotImplementedError
 
     def active_mask(self, histories: Sequence[Sequence[float]],
@@ -184,10 +187,14 @@ class SelectionPolicy(_Spec):
 
     def select_host(self, errs: Optional[np.ndarray], valid: np.ndarray,
                     rng: np.random.Generator) -> int:
+        """Sequential-oracle selection of ONE pool index for one feature
+        (see the class docstring for the argument contract)."""
         raise NotImplementedError
 
     def select_batched(self, errs, excluded, key, *, nf: int, ns: int, i,
                        bounded: bool):
+        """Jittable all-features selection for client ``i`` — traced into
+        the batched engine's fused round scan (see the class docstring)."""
         raise NotImplementedError
 
 
@@ -282,6 +289,8 @@ class TransferRule(_Spec):
     (it is traced inside the batched engine's fused scan)."""
 
     def apply(self, target_heads_stacked, selected_stacked):
+        """Merge the selected ``(nf, ...)`` pool heads into the client's own
+        ``(nf, ...)`` heads; returns the new head tree (jittable, pure)."""
         raise NotImplementedError
 
 
@@ -374,6 +383,8 @@ class FederationPolicies:
                    pool=LastWriteWins())
 
     def spec(self) -> dict:
+        """JSON-serializable description of the whole bundle — what a
+        Federation checkpoint manifest stores."""
         return {"switch": self.switch.spec(),
                 "selection": self.selection.spec(),
                 "transfer": self.transfer.spec(),
@@ -381,6 +392,9 @@ class FederationPolicies:
 
     @classmethod
     def from_spec(cls, spec: dict) -> "FederationPolicies":
+        """Inverse of :meth:`spec` — rebuilds every policy through the
+        registry (third-party policies must have been re-registered via
+        :func:`register_policy` before restoring)."""
         return cls(**{slot: policy_from_spec(spec[slot])
                       for slot in ("switch", "selection", "transfer", "pool")})
 
@@ -401,6 +415,10 @@ def register_policy(cls):
 
 
 def policy_from_spec(spec: dict):
+    """One policy object back from its ``spec()`` dict: the ``kind`` key
+    names the registered class, every other key is a constructor field
+    (JSON-decoded lists are coerced back to tuples so frozen dataclasses
+    stay hashable)."""
     d = dict(spec)
     kind = d.pop("kind")
     if kind not in _REGISTRY:

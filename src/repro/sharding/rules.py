@@ -4,12 +4,32 @@ Single source of truth for how tensors shard onto the production meshes.
 ``pod`` is the federated-client axis: parameters are *replicated* across it
 (each pod is an HFL client with its own replica); only the HFL blend step
 communicates across pods.
+
+The federation engine's client-sharded execution (``FED_RULES``) is the
+small-model dual of the pod axis: the whole stacked-client state of the
+batched HFL engine is *partitioned* over a 1-D ``clients`` mesh axis —
+each device owns a contiguous block of hospitals — while everything inside
+one client (its tiny H/E/P network) stays replicated-per-client, i.e.
+device-local.  See ``repro.core.mesh_federation`` and docs/SCALING.md.
 """
 from __future__ import annotations
 
 from typing import Dict, Mapping, Tuple, Union
 
 Rules = Dict[str, Union[str, Tuple[str, ...]]]
+
+# Name of the federated-client mesh axis AND of the logical leading axis the
+# batched engine stacks per-client state on (repro.sharding.spec.stack with
+# axis_name=CLIENT_AXIS); keeping them equal makes FED_RULES the identity on
+# the one axis that shards.
+CLIENT_AXIS = "clients"
+
+# Federation rules: the stacked per-client leading axis partitions over the
+# mesh's `clients` axis; every other logical axis (head width, feature
+# count, MLP dims) is absent from the mapping and therefore replicated —
+# one hospital's model is a few KB, partitioning *within* a client would be
+# pure collective overhead.
+FED_RULES: Rules = {CLIENT_AXIS: CLIENT_AXIS}
 
 # Parameter rules: tensor-parallel over "model"; experts expert-parallel.
 PARAM_RULES: Rules = {

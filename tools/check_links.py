@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Docs link check: every RELATIVE markdown link in README.md, docs/*.md and
+examples/README.md must resolve to an existing file or directory, so the
+docs can't rot silently as the tree moves.  External (http/mailto) links
+and pure in-page anchors are skipped; `path#anchor` links are checked for
+the path part only.
+
+  python tools/check_links.py        # exits 1 and lists broken links
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_md_files():
+    yield ROOT / "README.md"
+    yield from sorted((ROOT / "docs").glob("*.md"))
+    ex = ROOT / "examples" / "README.md"
+    if ex.exists():
+        yield ex
+
+
+def check(md: Path) -> list:
+    bad = []
+    text = md.read_text()
+    # strip fenced code blocks — command snippets aren't links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            bad.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return bad
+
+
+def main() -> int:
+    broken = [b for md in iter_md_files() for b in check(md)]
+    if broken:
+        print("\n".join(broken))
+        return 1
+    n = len(list(iter_md_files()))
+    print(f"docs link check OK ({n} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
