@@ -27,6 +27,14 @@ to `repro.data.synthetic.make_population` data instead.  ``--profile`` adds
 a per-phase (train / policy / eval) wall-time split of the batched engine's
 building blocks at each client count.
 
+``--hetero`` additionally sweeps a MIXED-nf population (feature counts
+cycling nf-1 / nf / nf+1 — up to three cohorts): the batched engine routes it
+through the cohort subsystem (`repro.core.cohorts` — per-cohort stacks, one
+fused dispatch per epoch, padded union-pool exchange) while the sequential
+oracle remains the only other engine that can run it at all.  Those rows
+are tagged ``hetero: true`` and carry the cohort count, and their
+speedup-vs-sequential column is computed within the hetero pair.
+
 Besides the CSV on stdout, writes a machine-readable ``BENCH_fl_scale.json``
 at the repo root (``--out`` to redirect, ``--out ""`` to disable;
 :func:`validate_payload` pins its schema, and CI smoke-runs a tiny sweep
@@ -85,8 +93,14 @@ from repro.core.mesh_federation import make_mesh, mesh_devices
 
 
 def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
-                  population: bool):
+                  population: bool, hetero: bool = False):
     if population:
+        if hetero:
+            from repro.core.experiment import hetero_population_clients
+            clients, _ = hetero_population_clients(
+                C, cfg, seed=0, n_patients=6, n_events=max(10 * n, 300),
+                nf_choices=(max(1, nf - 1), nf, nf + 1))
+            return clients
         from repro.core.experiment import population_task_data
         # ~1/5 of events are label ticks, so size the streams to give each
         # patient enough packed samples for the requested sub-round count
@@ -96,28 +110,35 @@ def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
                                 p["test"], jax.random.PRNGKey(31 * i))
                 for i, p in enumerate(packs)]
     out = []
+    # --hetero: mixed feature counts cycling (nf-1, nf, nf+1) — 3 cohorts
+    # of ~C/3 clients on the batched engine's cohort path (lengths stay
+    # uniform so the client-round accounting below holds exactly)
+    nfs = [max(1, nf - 1), nf, nf + 1] if hetero else [nf]
     for i in range(C):
+        nf_i = nfs[i % len(nfs)]
         rng = np.random.default_rng(1000 + i)
-        mk = lambda m: (rng.normal(size=(m, nf, w)).astype(np.float32),
-                        rng.normal(size=(m, nf, w)).astype(np.float32),
-                        rng.normal(size=m).astype(np.float32))
-        out.append(FederatedClient(f"h{i:03d}", nf, cfg, mk(n), mk(2 * cfg.R),
-                                   mk(2 * cfg.R), jax.random.PRNGKey(i)))
+        mk = lambda m, nf_i=nf_i: (
+            rng.normal(size=(m, nf_i, w)).astype(np.float32),
+            rng.normal(size=(m, nf_i, w)).astype(np.float32),
+            rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"h{i:03d}", nf_i, cfg, mk(n),
+                                   mk(2 * cfg.R), mk(2 * cfg.R),
+                                   jax.random.PRNGKey(i)))
     return out
 
 
 def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
-              population: bool, mesh=None):
-    clients = _make_clients(C, cfg, nf, n, cfg.w, population)
-    # population data has a data-dependent (truncated) length, so the
-    # sub-round count must come from the actual tensors, not from n
-    n_eff = len(clients[0].train[2])
+              population: bool, mesh=None, hetero: bool = False):
+    clients = _make_clients(C, cfg, nf, n, cfg.w, population, hetero)
+    # population (and hetero) data has data-dependent per-client lengths,
+    # so the expected round counts come from the actual tensors, not n
     sched = RoundSchedule(cfg.epochs, cfg.R)
-    sub_rounds = cfg.epochs * sched.sub_rounds(n_eff)
-    if sub_rounds == 0:
+    per_client = [cfg.epochs * sched.sub_rounds(len(c.train[2]))
+                  for c in clients]
+    if not any(per_client):
         raise SystemExit(
-            f"train split too short for a single sub-round "
-            f"(n={n_eff} < R={cfg.R}); raise --batches or the data sizes")
+            f"train splits too short for a single sub-round "
+            f"(< R={cfg.R} events); raise --batches or the data sizes")
     fed = Federation(clients, cfg, engine=engine, mesh=mesh)
     t0 = time.perf_counter()
     with warnings.catch_warnings():
@@ -125,21 +146,24 @@ def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
         hist = fed.fit()
     elapsed = time.perf_counter() - t0
     total_rounds = sum(h["rounds"] for h in hist.values())
-    assert total_rounds == C * sub_rounds, (total_rounds, C, sub_rounds)
-    return elapsed, sub_rounds, fed.dispatch_stats
+    assert total_rounds == sum(per_client), (total_rounds, per_client)
+    # global sub-rounds executed = the longest client's (epochs x per-epoch)
+    sub_rounds = max(per_client)
+    return elapsed, sub_rounds, total_rounds, fed.dispatch_stats
 
 
 def bench(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
-          population: bool, mesh=None):
-    _run_once(engine, C, cfg, nf, n, population, mesh)    # warmup + compile
-    elapsed, sub_rounds, dispatch = _run_once(engine, C, cfg, nf, n,
-                                              population, mesh)
+          population: bool, mesh=None, hetero: bool = False):
+    _run_once(engine, C, cfg, nf, n, population, mesh, hetero)   # warmup
+    elapsed, sub_rounds, total_rounds, dispatch = _run_once(
+        engine, C, cfg, nf, n, population, mesh, hetero)
     return {
         "round_ms": 1e3 * elapsed / sub_rounds,           # all C clients
-        "client_rounds_per_s": C * sub_rounds / elapsed,
+        "client_rounds_per_s": total_rounds / elapsed,
         "dispatches_per_epoch": dispatch["dispatches_per_epoch"],
         "dispatch_path": dispatch["path"],
         "devices": dispatch.get("devices", 1),
+        "cohorts": dispatch.get("cohorts", 1),
     }
 
 
@@ -234,6 +258,8 @@ def validate_payload(payload: dict) -> None:
         need(r, "clients", int, where)
         need(r, "engine", str, where)
         need(r, "devices", int, where)
+        need(r, "hetero", bool, where)
+        need(r, "cohorts", int, where)
         need(r, "round_ms", (int, float), where)
         need(r, "client_rounds_per_s", (int, float), where)
         need(r, "dispatches_per_epoch", (int, float), where)
@@ -270,6 +296,10 @@ def main():
     ap.add_argument("--mesh", action="store_true",
                     help="add a batched+mesh row: the fused epoch "
                          "client-sharded over all local devices")
+    ap.add_argument("--hetero", action="store_true",
+                    help="also sweep a mixed-nf population (feature counts "
+                         "cycling nf-1/nf/nf+1): the cohorted fast path vs "
+                         "the sequential oracle, rows tagged hetero=true")
     ap.add_argument("--force-devices", type=int, default=None,
                     help="split the host CPU into N virtual devices "
                          "(applied before jax init; see --mesh)")
@@ -281,7 +311,7 @@ def main():
     cfg = HFLConfig(mode="always", epochs=args.epochs, R=args.R)
     n = args.batches * args.R
 
-    runs = [(e, None) for e in engines]
+    runs = [(e, None, False) for e in engines]
     if args.mesh:
         mesh = make_mesh()
         if mesh_devices(mesh) == 1:
@@ -292,34 +322,43 @@ def main():
                   "--force-devices N to split the host CPU)",
                   file=sys.stderr)
         else:
-            runs.append(("batched+mesh", mesh))
+            runs.append(("batched+mesh", mesh, False))
+    if args.hetero:
+        # the cohorted fast path vs the sequential oracle on mixed nf —
+        # same engines, hetero-tagged rows, speedup computed within the
+        # hetero pair (oracle heterogeneity was the old ceiling; the gap
+        # between these rows IS the cohort engine's contribution)
+        runs += [(e, None, True) for e in engines]
 
     records = []
     profiles = {}
-    print("clients,engine,devices,round_ms,client_rounds_per_s,"
-          "dispatches_per_epoch,speedup_vs_sequential")
+    print("clients,engine,hetero,devices,cohorts,round_ms,"
+          "client_rounds_per_s,dispatches_per_epoch,speedup_vs_sequential")
     for C in counts:
         rows = {}
-        for label, mesh_ in runs:
+        for label, mesh_, het in runs:
             if mesh_ is not None and C % mesh_devices(mesh_):
                 print(f"[mesh] skipping C={C}: not divisible by "
                       f"{mesh_devices(mesh_)} devices", file=sys.stderr)
                 continue
             engine = "batched" if mesh_ is not None else label
-            rows[label] = bench(engine, C, cfg, args.nf, n,
-                                args.population, mesh_)
-        for label, _ in runs:
-            if label not in rows:
+            rows[(label, het)] = bench(engine, C, cfg, args.nf, n,
+                                       args.population, mesh_, het)
+        for label, _, het in runs:
+            if (label, het) not in rows:
                 continue
-            r = rows[label]
+            r = rows[(label, het)]
+            base = rows.get(("sequential", het))
             speedup = (r["client_rounds_per_s"]
-                       / rows["sequential"]["client_rounds_per_s"]
-                       if "sequential" in rows else float("nan"))
-            print(f"{C},{label},{r['devices']},{r['round_ms']:.2f},"
-                  f"{r['client_rounds_per_s']:.1f},"
+                       / base["client_rounds_per_s"]
+                       if base else float("nan"))
+            print(f"{C},{label},{int(het)},{r['devices']},{r['cohorts']},"
+                  f"{r['round_ms']:.2f},{r['client_rounds_per_s']:.1f},"
                   f"{r['dispatches_per_epoch']:.1f},{speedup:.2f}",
                   flush=True)
             records.append({"clients": C, "engine": label,
+                            "hetero": het,
+                            "cohorts": r["cohorts"],
                             "devices": r["devices"],
                             "round_ms": r["round_ms"],
                             "client_rounds_per_s": r["client_rounds_per_s"],
@@ -348,6 +387,7 @@ def main():
                        "batches": args.batches, "mode": cfg.mode,
                        "population": bool(args.population),
                        "mesh": bool(args.mesh),
+                       "hetero": bool(args.hetero),
                        "clients": counts, "engines": engines},
             "results": records,
         }

@@ -23,6 +23,13 @@ client-shards the batched engine over every local device (a 1-D
 ``clients`` mesh — see docs/SCALING.md; selections stay identical, and on
 a 1-device host it falls back to the plain path).
 
+``--hetero`` generates a MIXED-nf population (hospitals cycle through
+``--nf-choices`` feature counts): the batched engine partitions it into
+homogeneous cohorts automatically and exchanges heads through a padded
+union pool (`repro.core.cohorts`) — still one fused dispatch per epoch,
+still the oracle's selections.  The summary line reports the cohort
+layout.
+
 ``--save-dir d`` checkpoints the full federation at the end (and ``--resume``
 restarts from such a checkpoint and trains ``--epochs`` MORE epochs —
 bit-identical to never having stopped).
@@ -35,7 +42,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core.experiment import population_clients
+from repro.core.experiment import (hetero_population_clients,
+                                   population_clients)
 from repro.core.federation import Federation, MetricsCapture
 from repro.core.hfl import HFLConfig
 from repro.core.policies import (FederationPolicies, MaxStaleness,
@@ -87,6 +95,14 @@ def main():
                     help="client-shard the batched engine over all local "
                          "devices (docs/SCALING.md; falls back to the "
                          "single-device path on 1 device)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="generate a MIXED-nf population (feature counts "
+                         "cycling --nf-choices): the batched engine "
+                         "cohort-plans it automatically (repro.core."
+                         "cohorts), the sequential oracle loops it")
+    ap.add_argument("--nf-choices", default="3,4,5",
+                    help="comma-separated feature counts cycled across "
+                         "hospitals under --hetero")
     ap.add_argument("--save-dir", default=None,
                     help="checkpoint the federation here after training")
     ap.add_argument("--resume", action="store_true",
@@ -99,9 +115,15 @@ def main():
         from repro.core.mesh_federation import make_mesh
         mesh = make_mesh()
     cfg = HFLConfig(epochs=args.epochs, mode=args.mode, R=20)
-    clients, packs = population_clients(args.clients, cfg,
-                                        n_patients=args.patients,
-                                        n_events=args.events)
+    if args.hetero:
+        nf_choices = tuple(int(x) for x in args.nf_choices.split(","))
+        clients, packs = hetero_population_clients(
+            args.clients, cfg, n_patients=args.patients,
+            n_events=args.events, nf_choices=nf_choices)
+    else:
+        clients, packs = population_clients(args.clients, cfg,
+                                            n_patients=args.patients,
+                                            n_events=args.events)
     scale = {p["name"]: p["label_var"] for p in packs}  # raw-unit MSEs
     metrics = MetricsCapture()
     if args.resume:
@@ -141,10 +163,16 @@ def main():
         print(f"{name:>10} {mse:12.2f} {rounds:10d}")
     if len(tests) > 5:
         print(f"{'...':>10} ({len(tests) - 5} more hospitals)")
+    st = fed.dispatch_stats or {}
+    cohort_note = ""
+    if st.get("cohorts", 1) > 1:
+        sizes = [pc["clients"] for pc in st.get("per_cohort", [])]
+        cohort_note = (f", {st['cohorts']} cohorts {sizes} "
+                       f"@ {st['dispatches_per_epoch']:.0f} dispatch/epoch")
     print(f"=> {new_rounds} federated rounds ({total_rounds} cumulative) "
           f"across {args.clients} hospitals, {len(metrics.epochs)} epochs "
           f"captured, in {wall:.1f}s "
-          f"({max(new_rounds, 1) / wall:.1f} client-rounds/s)")
+          f"({max(new_rounds, 1) / wall:.1f} client-rounds/s){cohort_note}")
     if args.save_dir:
         fed.save(args.save_dir)
         print(f"=> federation checkpointed to {args.save_dir} "

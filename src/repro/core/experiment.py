@@ -208,17 +208,7 @@ def population_task_data(n_clients: int, w: int, seed: int = 0,
     truncated to common split lengths (stackable for the batched engine)."""
     pop = syn.make_population(n_clients, seed=seed, nf=nf,
                               n_patients=n_patients, n_events=n_events)
-    packs = []
-    for data in pop:
-        streams, mu_y, sd_y = _normalize_streams(data)
-        data = syn.HospitalData(data.name, data.feature_names, streams,
-                                data.splits)
-        packed = {"name": data.name}
-        for split in ("train", "valid", "test"):
-            packed[split] = syn.packed_split(data, split, w)
-        packed["label_var"] = sd_y * sd_y
-        packs.append(packed)
-    return _truncate_common(packs)
+    return _truncate_common([_pack_hospital(data, w) for data in pop])
 
 
 def population_clients(n_clients: int, cfg: HFLConfig, seed: int = 0,
@@ -255,6 +245,66 @@ def train_population(n_clients: int, cfg: HFLConfig, engine: str = "batched",
         h["test"] *= p["label_var"]
         h["best_val"] *= p["label_var"]
     return hist
+
+
+def _pack_hospital(data: syn.HospitalData, w: int) -> dict:
+    """Normalize + pack one hospital's splits (shared by the homogeneous
+    and heterogeneous population pipelines)."""
+    streams, mu_y, sd_y = _normalize_streams(data)
+    data = syn.HospitalData(data.name, data.feature_names, streams,
+                           data.splits)
+    packed = {"name": data.name,
+              "nf": len(data.feature_names)}
+    for split in ("train", "valid", "test"):
+        packed[split] = syn.packed_split(data, split, w)
+    packed["label_var"] = sd_y * sd_y
+    return packed
+
+
+def hetero_population_task_data(n_clients: int, w: int, seed: int = 0,
+                                n_patients: int = 10, n_events: int = 300,
+                                nf_choices: Sequence[int] = (3, 4, 5),
+                                group_truncate: bool = True) -> List[dict]:
+    """Packed per-hospital tensors for a MIXED-nf generated population — the
+    cohort engine's workload.  With ``group_truncate`` (default) split
+    lengths are truncated to the minimum *within each nf group*, so each
+    group stacks into one cohort (lengths still differ ACROSS groups —
+    mixed-nf AND ragged).  ``group_truncate=False`` keeps every hospital's
+    natural lengths: fully ragged, the cohort planner degrades gracefully
+    to singleton cohorts."""
+    pop = syn.make_hetero_population(n_clients, seed=seed,
+                                     nf_choices=nf_choices,
+                                     n_patients=n_patients,
+                                     n_events=n_events)
+    packs = [_pack_hospital(data, w) for data in pop]
+    if not group_truncate:
+        return packs
+    groups: Dict[int, List[dict]] = {}
+    for p in packs:
+        groups.setdefault(p["nf"], []).append(p)
+    out_by_name = {}
+    for nf, ps in groups.items():
+        for q in _truncate_common(ps):
+            out_by_name[q["name"]] = q
+    return [out_by_name[p["name"]] for p in packs]
+
+
+def hetero_population_clients(n_clients: int, cfg: HFLConfig, seed: int = 0,
+                              n_patients: int = 10, n_events: int = 300,
+                              nf_choices: Sequence[int] = (3, 4, 5),
+                              group_truncate: bool = True
+                              ) -> Tuple[List[FederatedClient], List[dict]]:
+    """Freshly-constructed mixed-nf clients (plus their packed data dicts)
+    — the heterogeneous twin of :func:`population_clients`.  Feed them to
+    ``Federation(engine="batched")`` and the cohort engine plans/stacks
+    them automatically (see ``repro.core.cohorts``)."""
+    packs = hetero_population_task_data(n_clients, cfg.w, seed, n_patients,
+                                        n_events, nf_choices, group_truncate)
+    clients = [
+        FederatedClient(p["name"], p["nf"], cfg, p["train"], p["valid"],
+                        p["test"], jax.random.PRNGKey(seed + 31 * i))
+        for i, p in enumerate(packs)]
+    return clients, packs
 
 
 def run_task(target: str, label_idx: int, systems: Sequence[str],

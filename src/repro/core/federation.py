@@ -307,7 +307,7 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
 
 def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
                        *, nf: int, policies: FederationPolicies,
-                       use_kernel: bool):
+                       use_kernel: bool, feat_valid=None):
     """One federated opportunity for ALL clients as a traceable scan over
     clients — the body both :func:`fused_policy_round` (standalone jit) and
     the fused-epoch scan (:func:`_make_epoch_fn`) trace.  The policy
@@ -325,11 +325,22 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
     y_R: (C, R); active: (C,) bool; key: PRNG key.  Returns (new_heads,
     new_pool, new_age, chosen) where chosen is (C, nf) int32 flat indices
     into the row-major (client, feature) pool (-1 where the client was
-    inactive or nothing valid was available)."""
+    inactive or nothing valid was available).
+
+    ``feat_valid`` opts into the heterogeneous (cohort-engine) form: a
+    static (C, nf) bool array — here nf is ``max_nf``, the padded feature
+    count — marking which rows of each client's padded head/probe stacks
+    are real features.  Invalid rows are excluded from every selection,
+    their blend results are discarded (padded head rows stay zero), and
+    their ``chosen`` entries are -1.  ``None`` (the homogeneous engines)
+    traces exactly the original body."""
     C = y_R.shape[0]
     ns = C * nf
     sel, transfer, poolp = policies.selection, policies.transfer, policies.pool
     bounded = poolp.bounded
+    if feat_valid is not None:
+        fv = jnp.asarray(np.asarray(feat_valid, bool))          # (C, nf)
+        valid_flat = fv.reshape(ns)
 
     def flat(pool):
         return jax.tree_util.tree_map(
@@ -340,31 +351,49 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
         i, key_i = inp
         fp = flat(pool)
         own = (jnp.arange(ns) // nf) == i
+        if feat_valid is not None:
+            own = own | ~valid_flat          # padded rows are never sources
         if bounded:
             excluded = own | jnp.repeat(age > poolp.max_age, nf)
             any_valid = jnp.any(~excluded)
         else:
             excluded = own
-            any_valid = jnp.bool_(True)      # C >= 2 enforced by the caller
+            # C >= 2 enforced by the caller; with a padded pool every
+            # foreign client still contributes >= 1 valid feature row
+            any_valid = jnp.bool_(True)
         if sel.needs_errors:
             xd_i = jnp.moveaxis(xd_R[i], 1, 0)          # (nf, R, w)
             if use_kernel:
-                errs = _pool_kernel_ops().pool_mlp_errors_features(
-                    fp, xd_i, y_R[i])
+                ops = _pool_kernel_ops()
+                if feat_valid is not None:
+                    errs = ops.pool_mlp_errors_features_masked(
+                        fp, xd_i, y_R[i], valid_flat)
+                else:
+                    errs = ops.pool_mlp_errors_features(fp, xd_i, y_R[i])
             else:
                 errs = jax.vmap(
                     lambda xf: pool_errors(fp, xf, y_R[i]))(xd_i)  # (nf, ns)
             errs = jnp.where(excluded[None, :], jnp.inf, errs)
         else:
             errs = None
-        j = sel.select_batched(errs, excluded, key_i,
-                               nf=nf, ns=ns, i=i, bounded=bounded)
+        # padded pools always pass bounded=True: the exclusion mask is
+        # non-trivial even under last-write-wins, so selection policies must
+        # take their masked path (see SelectionPolicy.select_batched)
+        j = sel.select_batched(errs, excluded, key_i, nf=nf, ns=ns, i=i,
+                               bounded=bounded or feat_valid is not None)
         selected = jax.tree_util.tree_map(lambda p: p[j], fp)      # (nf, ...)
         mine = jax.tree_util.tree_map(lambda h: h[i], heads)
         blended = transfer.apply(mine, selected)
         act = active[i] & any_valid
-        new_mine = jax.tree_util.tree_map(
-            lambda b, m: jnp.where(act, b, m), blended, mine)
+        if feat_valid is not None:
+            mask_i = act & fv[i]                               # (nf,)
+            new_mine = jax.tree_util.tree_map(
+                lambda b, m: jnp.where(
+                    mask_i.reshape((nf,) + (1,) * (m.ndim - 1)), b, m),
+                blended, mine)
+        else:
+            new_mine = jax.tree_util.tree_map(
+                lambda b, m: jnp.where(act, b, m), blended, mine)
         heads = jax.tree_util.tree_map(
             lambda h, m: h.at[i].set(m), heads, new_mine)
         # publication: active clients overwrite their pool row (age resets),
@@ -375,7 +404,10 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
             lambda pl, m: pl.at[i].set(jnp.where(pub, m, pl[i])),
             pool, new_mine)
         age = age.at[i].set(jnp.where(pub, 0, age[i]))
-        chosen = jnp.where(act, j, -1).astype(jnp.int32)
+        if feat_valid is not None:
+            chosen = jnp.where(act & fv[i], j, -1).astype(jnp.int32)
+        else:
+            chosen = jnp.where(act, j, -1).astype(jnp.int32)
         return (heads, pool, age), chosen
 
     keys = jax.random.split(key, C)
@@ -534,23 +566,20 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
-def _check_homogeneous(clients: Sequence[FederatedClient]) -> None:
-    """The batched engine's stacking precondition: every client must have
-    the same feature count nf AND identical train/valid/test array shapes
-    (the per-client state is stacked on a leading axis and scanned as one
-    geometry).  Raises ValueError otherwise — truncate ragged populations
-    to common lengths (``experiment.population_task_data`` does) or use
-    the sequential oracle, which handles heterogeneity natively."""
+def _is_homogeneous(clients: Sequence[FederatedClient]) -> bool:
+    """The single-stack fast path's precondition: every client has the same
+    feature count nf AND identical train/valid/test array shapes (the
+    per-client state is stacked on a leading axis and scanned as one
+    geometry).  Mixed populations no longer error — they route through the
+    cohort engine (``repro.core.cohorts``), which partitions them into
+    homogeneous cohorts and exchanges heads through a padded union pool."""
     nf = clients[0].nf
     shapes = [tuple(np.shape(a) for a in c.train) for c in clients]
-    if any(c.nf != nf for c in clients) or len(set(shapes)) != 1 or \
-            len({tuple(np.shape(a) for a in c.valid) for c in clients}) != 1 or \
-            len({tuple(np.shape(a) for a in c.test) for c in clients}) != 1:
-        raise ValueError(
-            "engine='batched' requires homogeneous clients (same nf and "
-            "identical train/valid/test shapes); truncate to a common length "
-            "(see experiment.population_task_data) or use "
-            "engine='sequential'")
+    return (all(c.nf == nf for c in clients) and len(set(shapes)) == 1
+            and len({tuple(np.shape(a) for a in c.valid)
+                     for c in clients}) == 1
+            and len({tuple(np.shape(a) for a in c.test)
+                     for c in clients}) == 1)
 
 
 def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
@@ -558,13 +587,19 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     one compiled dispatch (see :func:`_make_epoch_fn`), and — when the
     Federation carries a multi-device mesh — run that same scan client-
     sharded under ``shard_map`` (see ``repro.core.mesh_federation``).
-    Writes results back into the clients via :func:`sync` and fills
-    ``fed.dispatch_stats``."""
+    Heterogeneous populations (mixed nf / ragged split lengths) route
+    through the cohort engine (``repro.core.cohorts._fit_cohorted``), which
+    reproduces the same oracle semantics via per-cohort stacks and a padded
+    union pool.  Writes results back into the clients via :func:`sync` and
+    fills ``fed.dispatch_stats``."""
     clients = fed.clients
+    if not _is_homogeneous(clients):
+        from repro.core import cohorts
+        cohorts._fit_cohorted(fed, n_epochs, cbs)
+        return
     C = len(clients)
     names = [c.name for c in clients]
     nf = clients[0].nf
-    _check_homogeneous(clients)
     cfg, pol = fed.cfg, fed.policies
     R = fed.schedule.R
 
@@ -711,6 +746,7 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     fed.dispatch_stats = {"engine": "batched",
                           "path": "fused" if fused else "chunked",
                           "devices": MF.mesh_devices(mesh),
+                          "cohorts": 1,
                           "epochs": n_epochs, "dispatches": n_dispatch,
                           "dispatches_per_epoch": n_dispatch / n_epochs}
     # write the final state back so the clients / pool / rng stay canonical
@@ -739,13 +775,23 @@ class Federation:
     ``repro.checkpoint`` (data is NOT checkpointed — rebuild the clients the
     same way, then restore overlays params/opt/pool/rng/histories).
 
+    ``engine="batched"`` accepts heterogeneous populations transparently:
+    mixed feature counts and ragged split lengths are partitioned into
+    homogeneous cohorts by ``repro.core.cohorts`` (an internal planning
+    step surfaced in ``dispatch_stats["cohorts"]``/``["per_cohort"]``),
+    trained per-cohort at native geometry inside one fused dispatch per
+    epoch, and federated through a padded union head pool — selections
+    identical to the sequential oracle.
+
     ``mesh`` (batched engine only) opts into client-sharded execution: a
     1-D :class:`jax.sharding.Mesh` with a ``clients`` axis
     (:func:`repro.core.mesh_federation.make_mesh`) partitions the stacked
     population over its devices — device-local Adam steps, explicit
     all-gather pool exchange per sub-round, selections identical to the
     single-device engine.  A one-device mesh falls back to the plain
-    single-device fused path automatically."""
+    single-device fused path automatically.  On a heterogeneous
+    population every cohort's size must divide the device count (checked
+    at fit time)."""
 
     def __init__(self, clients: Sequence[FederatedClient],
                  cfg: Optional[HFLConfig] = None, *,
@@ -852,17 +898,26 @@ class Federation:
                 for c in self.clients}
 
     def _test_mses(self) -> Dict[str, float]:
-        """Best-params test MSE per client — ONE vmapped dispatch on the
-        batched engine (matching its training-path batching) instead of C
-        per-client jit calls."""
+        """Best-params test MSE per client — ONE vmapped dispatch per cohort
+        on the batched engine (matching its training-path batching) instead
+        of C per-client jit calls.  A homogeneous population is one cohort;
+        singleton cohorts fall back to the client's own jitted eval."""
         if self.engine == "batched" and len(self.clients) > 1:
-            tst = tuple(jnp.stack([np.asarray(c.test[k])
-                                   for c in self.clients]) for k in range(3))
-            bp = _stack_trees([c.best_params for c in self.clients])
+            from repro.core import cohorts
+            plan = cohorts.plan_cohorts(self.clients, self.schedule.R)
             _, eval_fn = _make_batched_fns(self.cfg.lr)
-            v = np.asarray(eval_fn(bp, *tst), np.float64)
-            return {c.name: float(v[i])
-                    for i, c in enumerate(self.clients)}
+            out: Dict[str, float] = {}
+            for co in plan.cohorts:
+                cl = [self.clients[i] for i in co.members]
+                if len(cl) == 1:
+                    out[cl[0].name] = cl[0].test_mse()
+                    continue
+                tst = tuple(jnp.stack([np.asarray(c.test[k]) for c in cl])
+                            for k in range(3))
+                bp = _stack_trees([c.best_params for c in cl])
+                v = np.asarray(eval_fn(bp, *tst), np.float64)
+                out.update({c.name: float(v[i]) for i, c in enumerate(cl)})
+            return out
         return {c.name: c.test_mse() for c in self.clients}
 
     # -- persistence -------------------------------------------------------

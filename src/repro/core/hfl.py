@@ -273,7 +273,8 @@ def run_federated_training(clients: Sequence[FederatedClient],
     engine="sequential": the reference oracle (Python loop, HeadPool object,
     host-side per-feature argmin); handles heterogeneous nf / ragged data.
     engine="batched": vmapped train steps + one fused selection scan per
-    round; requires homogeneous clients.  Both record the same history:
+    round; heterogeneous populations are cohort-planned automatically
+    (see ``repro.core.cohorts``).  Both record the same history:
     {name: {"val": [...], "test": float, "rounds": int, "best_val": float,
     "selections": [[...], ...]}} — selections are indices into the pool
     sorted by (user, feature) excluding the client itself, identical across

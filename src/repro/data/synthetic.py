@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 import numpy as np
 
@@ -163,6 +163,39 @@ def make_population(n_hospitals: int, seed: int = 0, nf: int = 4,
     out = []
     for h in range(n_hospitals):
         spec = population_spec(rng, nf)
+        out.append(make_hospital_from_spec(
+            f"h{h:03d}", spec, seed=seed + 7919 * (h + 1),
+            n_patients=n_patients, n_events=n_events))
+    return out
+
+
+def make_hetero_population(n_hospitals: int, seed: int = 0,
+                           nf_choices: Sequence[int] = (3, 4, 5),
+                           n_patients: int = None,
+                           n_events: int = 300) -> List[HospitalData]:
+    """Generate a *heterogeneous* N-hospital federated population: every
+    hospital observes the shared OU latent state, but draws its feature
+    COUNT from ``nf_choices`` as well as its observation operator — mixed
+    feature spaces across hospitals, the paper's setting at population
+    scale (the cohort engine's natural workload).
+
+    Hospitals cycle deterministically through ``nf_choices`` (hospital h
+    gets ``nf_choices[h % len(nf_choices)]``) so every nf group is
+    populated evenly — callers that need cohort sizes divisible by a mesh
+    device count can size ``n_hospitals`` as a multiple of
+    ``len(nf_choices) * devices``.  ``n_patients=None`` keeps the skewed
+    per-hospital sizes (fully ragged split lengths); an int forces equal
+    patient counts (split lengths still vary with each hospital's label
+    frequency — group-truncate per nf for stackable cohorts, see
+    ``experiment.hetero_population_task_data``)."""
+    rng = np.random.default_rng(seed)
+    nf_choices = tuple(int(x) for x in nf_choices)
+    if not nf_choices or any(x < 1 for x in nf_choices):
+        raise ValueError(f"nf_choices must be positive ints, "
+                         f"got {nf_choices}")
+    out = []
+    for h in range(n_hospitals):
+        spec = population_spec(rng, nf_choices[h % len(nf_choices)])
         out.append(make_hospital_from_spec(
             f"h{h:03d}", spec, seed=seed + 7919 * (h + 1),
             n_patients=n_patients, n_events=n_events))

@@ -66,6 +66,25 @@ def pool_mlp_errors(pool_stacked, xd, y, *, block_pool: int = 8,
 
 
 @functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
+def pool_mlp_errors_features_masked(pool_stacked, xd_feats, y, valid, *,
+                                    block_pool: int = 8, interpret=None):
+    """The cohort engine's padded union-pool sweep: score a pool whose rows
+    include zero-padded INVALID entries (features beyond a client's native
+    nf, padded to ``max_nf``) and return their errors as ``+inf``.
+
+    The kernel itself sweeps the dense padded rectangle — padded rows cost
+    one extra block at most and keep the grid regular, which is the whole
+    point of padding — and the ``valid`` mask (ns,) is applied inside this
+    jitted wrapper so invalid rows can never win a selection, even if a
+    backend lowers the zero-weight forward to something non-finite.
+    xd_feats: (nf, R, w); y: (R,); valid: (ns,) bool.  Returns (nf, ns)."""
+    errs = pool_mlp_errors_features(pool_stacked, xd_feats, y,
+                                    block_pool=block_pool,
+                                    interpret=interpret)
+    return jnp.where(valid[None, :], errs, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
 def pool_mlp_errors_features(pool_stacked, xd_feats, y, *,
                              block_pool: int = 8, interpret=None):
     """Score the whole pool against EVERY target feature's probe batch.

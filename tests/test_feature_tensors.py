@@ -64,6 +64,52 @@ def test_fast_packing_matches_oracle(nf, w, n, seed):
     np.testing.assert_allclose(y1, y2)
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    nf=st.integers(1, 4),
+    w=st.integers(1, 5),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_packed_tensors_round_trip_stream_values(nf, w, n, seed):
+    """Round-trip invariant: every value the packed tensors carry maps back
+    to the EXACT stream event it came from, and every slot that should be
+    empty is zero.  Values are drawn strictly positive so 0 unambiguously
+    means "no observation" — the packing is then invertible:
+
+      * y[k]           == the k-th label event's value;
+      * xs[k, c, l]    == the value at tick (t_k - 1 - l) iff that tick
+                          carried feature c, else 0 (the raw window);
+      * xd[k, i, :]    == feature i's last-w observed values before t_k,
+                          most-recent-first, zero-padded (the shift
+                          register) — i.e. the stream's per-feature
+                          observation suffix is recoverable from the row.
+    """
+    rng = np.random.default_rng(seed)
+    channels = rng.integers(0, nf + 1, size=n).astype(np.int32)
+    values = (1.0 + rng.random(size=n)).astype(np.float32)   # > 0 always
+    times = np.cumsum(rng.exponential(size=n)).astype(np.float32)
+    s = EventStream(channels=channels, values=values, times=times, nf=nf)
+    xs, xd, y = pack_feature_tensors(s, w)
+    label_ticks = np.nonzero(channels == nf)[0]
+    assert len(y) == len(label_ticks)
+    np.testing.assert_array_equal(y, values[label_ticks])
+    for k, t in enumerate(label_ticks):
+        # sparse: exact tick-by-tick inversion of the raw window
+        for l in range(w):
+            tick = t - 1 - l
+            for c in range(nf):
+                if tick >= 0 and channels[tick] == c:
+                    assert xs[k, c, l] == values[tick]
+                else:
+                    assert xs[k, c, l] == 0.0
+        # dense: the per-feature observation suffix, most-recent-first
+        for i in range(nf):
+            obs = values[(channels[:t] == i).nonzero()[0]]
+            expect = list(obs[::-1][:w]) + [0.0] * (w - min(w, len(obs)))
+            assert xd[k, i].tolist() == expect
+
+
 @settings(max_examples=30, deadline=None)
 @given(nf=st.integers(1, 3), w=st.integers(1, 4), seed=st.integers(0, 10**6))
 def test_dense_rows_are_time_ordered_suffixes(nf, w, seed):

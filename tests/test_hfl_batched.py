@@ -72,12 +72,20 @@ def test_batched_no_mode_never_federates():
         assert h["rounds"] == 0 and h["selections"] == []
 
 
-def test_batched_rejects_heterogeneous_clients():
-    cfg = HFLConfig(mode="always", epochs=1, R=20)
-    clients = _mk_clients(cfg, C=2, nf=3) + _mk_clients(cfg, C=1, nf=2)
-    clients[2].name = "c9"
-    with pytest.raises(ValueError, match="homogeneous"):
-        run_federated_training(clients, cfg, engine="batched")
+def test_batched_accepts_heterogeneous_clients():
+    """Mixed-nf populations no longer error on the batched engine — they
+    route through the cohort engine transparently and still match the
+    sequential oracle's selections (the full parity surface is pinned by
+    tests/test_cohorts.py)."""
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    mk = lambda: (_mk_clients(cfg, C=2, nf=3) + _mk_clients(cfg, C=1, nf=2))
+    cs_b, cs_s = mk(), mk()
+    cs_b[2].name = cs_s[2].name = "c9"
+    h_bat = run_federated_training(cs_b, cfg, engine="batched")
+    h_seq = run_federated_training(cs_s, cfg, engine="sequential")
+    for name in h_seq:
+        assert h_seq[name]["selections"] == h_bat[name]["selections"]
+        assert h_seq[name]["rounds"] == h_bat[name]["rounds"] > 0
 
 
 def test_batched_kernel_path_matches_vmap_path():

@@ -209,7 +209,7 @@ h_oracle = Federation(mk_clients(cfg), cfg, engine="batched").fit()
 fed = Federation(mk_clients(cfg), cfg, engine="batched", mesh=mesh)
 h_mesh = fed.fit()
 assert fed.dispatch_stats == {
-    "engine": "batched", "path": "fused", "devices": 4,
+    "engine": "batched", "path": "fused", "devices": 4, "cohorts": 1,
     "epochs": 3, "dispatches": 3, "dispatches_per_epoch": 1.0,
 }, fed.dispatch_stats
 sel_identical = all(h_oracle[n]["selections"] == h_mesh[n]["selections"]

@@ -75,11 +75,17 @@ print("MULTIDEV_OK")
 
 
 def test_a2a_matches_gather_multidevice():
-    """Real 2x2 device mesh (subprocess: jax locks the device count)."""
+    """Real 2x2 device mesh (subprocess: jax locks the device count).
+
+    JAX_PLATFORMS=cpu is load-bearing: the hand-built env must pin the CPU
+    backend, or on hosts with an accelerator runtime installed (e.g. a
+    baked-in libtpu) the bare subprocess hangs for minutes trying to
+    initialize it and the forced host-device-count flag never applies."""
     proc = subprocess.run(
         [sys.executable, "-c", _MULTIDEV_SCRIPT],
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
-        capture_output=True, text=True, timeout=300)
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=560)
     assert "MULTIDEV_OK" in proc.stdout, proc.stdout + proc.stderr
 
 
