@@ -21,6 +21,15 @@ read straight from argv) to exercise the sharded path without
 accelerators; client counts not divisible by the device count skip the
 mesh row.
 
+``--exchange-every 1,2`` sweeps bounded-staleness cadences
+(``RoundSchedule.exchange_every``): heads are exchanged every k-th
+sub-round, so each row also reports ``exchange_rounds`` and the analytic
+``pool_bytes_gathered`` comms counter from ``dispatch_stats``.  The
+sequential oracle runs only at k=1 (the speedup baseline), and
+``--max-seq-clients`` skips it entirely above a client count (its Python
+loop dominates at large C; speedup becomes null).  Throughput counts TRAIN
+sub-rounds at every cadence, so rows at different k measure the same work.
+
 Uses deterministic random tensors (not the synthetic-hospital generator) so
 the sweep measures the engine, not data generation; ``--population`` switches
 to `repro.data.synthetic.make_population` data instead.  ``--profile`` adds
@@ -128,42 +137,56 @@ def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
 
 
 def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
-              population: bool, mesh=None, hetero: bool = False):
+              population: bool, mesh=None, hetero: bool = False,
+              exchange_every: int = 1):
     clients = _make_clients(C, cfg, nf, n, cfg.w, population, hetero)
     # population (and hetero) data has data-dependent per-client lengths,
     # so the expected round counts come from the actual tensors, not n
-    sched = RoundSchedule(cfg.epochs, cfg.R)
-    per_client = [cfg.epochs * sched.sub_rounds(len(c.train[2]))
-                  for c in clients]
-    if not any(per_client):
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=exchange_every)
+    train_per_client = [cfg.epochs * sched.sub_rounds(len(c.train[2]))
+                        for c in clients]
+    # under a k-cadence a client participates in sub_rounds // k exchanges
+    # per epoch — what the engines' per-client round counters track
+    exch_per_client = [
+        cfg.epochs * (sched.sub_rounds(len(c.train[2])) // exchange_every)
+        for c in clients]
+    if not any(train_per_client):
         raise SystemExit(
             f"train splits too short for a single sub-round "
             f"(< R={cfg.R} events); raise --batches or the data sizes")
-    fed = Federation(clients, cfg, engine=engine, mesh=mesh)
+    fed = Federation(clients, cfg, engine=engine, mesh=mesh, schedule=sched)
     t0 = time.perf_counter()
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", UserWarning)   # ragged-length drop
         hist = fed.fit()
     elapsed = time.perf_counter() - t0
     total_rounds = sum(h["rounds"] for h in hist.values())
-    assert total_rounds == sum(per_client), (total_rounds, per_client)
-    # global sub-rounds executed = the longest client's (epochs x per-epoch)
-    sub_rounds = max(per_client)
-    return elapsed, sub_rounds, total_rounds, fed.dispatch_stats
+    assert total_rounds == sum(exch_per_client), (total_rounds,
+                                                  exch_per_client)
+    # global sub-rounds executed = the longest client's (epochs x per-epoch);
+    # throughput counts TRAIN sub-rounds (k-independent, so rows at
+    # different cadences measure the same work)
+    sub_rounds = max(train_per_client)
+    return elapsed, sub_rounds, sum(train_per_client), fed.dispatch_stats
 
 
 def bench(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
-          population: bool, mesh=None, hetero: bool = False):
-    _run_once(engine, C, cfg, nf, n, population, mesh, hetero)   # warmup
-    elapsed, sub_rounds, total_rounds, dispatch = _run_once(
-        engine, C, cfg, nf, n, population, mesh, hetero)
+          population: bool, mesh=None, hetero: bool = False,
+          exchange_every: int = 1):
+    _run_once(engine, C, cfg, nf, n, population, mesh, hetero,
+              exchange_every)                                     # warmup
+    elapsed, sub_rounds, train_rounds, dispatch = _run_once(
+        engine, C, cfg, nf, n, population, mesh, hetero, exchange_every)
     return {
         "round_ms": 1e3 * elapsed / sub_rounds,           # all C clients
-        "client_rounds_per_s": total_rounds / elapsed,
+        "client_rounds_per_s": train_rounds / elapsed,
         "dispatches_per_epoch": dispatch["dispatches_per_epoch"],
         "dispatch_path": dispatch["path"],
         "devices": dispatch.get("devices", 1),
         "cohorts": dispatch.get("cohorts", 1),
+        "exchange_every": dispatch.get("exchange_every", 1),
+        "exchange_rounds": dispatch.get("exchange_rounds", 0),
+        "pool_bytes_gathered": dispatch.get("pool_bytes_gathered", 0),
     }
 
 
@@ -251,6 +274,11 @@ def validate_payload(payload: dict) -> None:
         need(payload["config"], k, int, "config")
     need(payload["config"], "clients", list, "config")
     need(payload["config"], "engines", list, "config")
+    need(payload["config"], "exchange_every", list, "config")
+    if not all(isinstance(k, int) and k >= 1
+               for k in payload["config"]["exchange_every"]):
+        raise ValueError("config[exchange_every]: expected a list of "
+                         "positive ints")
     if not payload["results"]:
         raise ValueError("results: empty")
     for i, r in enumerate(payload["results"]):
@@ -264,6 +292,12 @@ def validate_payload(payload: dict) -> None:
         need(r, "client_rounds_per_s", (int, float), where)
         need(r, "dispatches_per_epoch", (int, float), where)
         need(r, "dispatch_path", str, where)
+        need(r, "exchange_every", int, where)
+        need(r, "exchange_rounds", int, where)
+        need(r, "pool_bytes_gathered", int, where)
+        if r["exchange_every"] < 1:
+            raise ValueError(f"{where}[exchange_every]: must be >= 1, "
+                             f"got {r['exchange_every']}")
         need(r, "speedup_vs_sequential", (int, float, type(None)), where)
     for key, p in payload.get("profiles", {}).items():
         where = f"profiles[{key!r}]"
@@ -303,11 +337,24 @@ def main():
     ap.add_argument("--force-devices", type=int, default=None,
                     help="split the host CPU into N virtual devices "
                          "(applied before jax init; see --mesh)")
+    ap.add_argument("--exchange-every", default="1",
+                    help="comma list of bounded-staleness cadences k: "
+                         "exchange heads every k-th sub-round "
+                         "(RoundSchedule.exchange_every); sequential rows "
+                         "run only at k=1, the speedup baseline")
+    ap.add_argument("--max-seq-clients", type=int, default=None,
+                    help="skip the sequential oracle above this client "
+                         "count (its per-client Python loop dominates the "
+                         "wall clock at large C; batched rows then report "
+                         "speedup=null)")
     ap.add_argument("--out", default=str(_REPO_ROOT / "BENCH_fl_scale.json"),
                     help="machine-readable results path (empty to disable)")
     args = ap.parse_args()
     counts = [int(x) for x in args.clients.split(",")]
     engines = args.engines.split(",")
+    ks = [int(x) for x in args.exchange_every.split(",")]
+    if any(k < 1 for k in ks):
+        raise SystemExit("--exchange-every entries must be >= 1")
     cfg = HFLConfig(mode="always", epochs=args.epochs, R=args.R)
     n = args.batches * args.R
 
@@ -332,40 +379,59 @@ def main():
 
     records = []
     profiles = {}
-    print("clients,engine,hetero,devices,cohorts,round_ms,"
-          "client_rounds_per_s,dispatches_per_epoch,speedup_vs_sequential")
+    print("clients,engine,hetero,exchange_every,devices,cohorts,round_ms,"
+          "client_rounds_per_s,dispatches_per_epoch,exchange_rounds,"
+          "pool_bytes_gathered,speedup_vs_sequential")
     for C in counts:
         rows = {}
-        for label, mesh_, het in runs:
-            if mesh_ is not None and C % mesh_devices(mesh_):
-                print(f"[mesh] skipping C={C}: not divisible by "
-                      f"{mesh_devices(mesh_)} devices", file=sys.stderr)
-                continue
-            engine = "batched" if mesh_ is not None else label
-            rows[(label, het)] = bench(engine, C, cfg, args.nf, n,
-                                       args.population, mesh_, het)
-        for label, _, het in runs:
-            if (label, het) not in rows:
-                continue
-            r = rows[(label, het)]
-            base = rows.get(("sequential", het))
-            speedup = (r["client_rounds_per_s"]
-                       / base["client_rounds_per_s"]
-                       if base else float("nan"))
-            print(f"{C},{label},{int(het)},{r['devices']},{r['cohorts']},"
-                  f"{r['round_ms']:.2f},{r['client_rounds_per_s']:.1f},"
-                  f"{r['dispatches_per_epoch']:.1f},{speedup:.2f}",
-                  flush=True)
-            records.append({"clients": C, "engine": label,
-                            "hetero": het,
-                            "cohorts": r["cohorts"],
-                            "devices": r["devices"],
-                            "round_ms": r["round_ms"],
-                            "client_rounds_per_s": r["client_rounds_per_s"],
-                            "dispatches_per_epoch": r["dispatches_per_epoch"],
-                            "dispatch_path": r["dispatch_path"],
-                            "speedup_vs_sequential":
-                                None if speedup != speedup else speedup})
+        for k in ks:
+            for label, mesh_, het in runs:
+                if label == "sequential":
+                    if k != 1:       # the oracle baseline runs at k=1 only
+                        continue
+                    if args.max_seq_clients is not None \
+                            and C > args.max_seq_clients:
+                        print(f"[seq] skipping C={C}: above "
+                              f"--max-seq-clients={args.max_seq_clients}",
+                              file=sys.stderr)
+                        continue
+                if mesh_ is not None and C % mesh_devices(mesh_):
+                    print(f"[mesh] skipping C={C}: not divisible by "
+                          f"{mesh_devices(mesh_)} devices", file=sys.stderr)
+                    continue
+                engine = "batched" if mesh_ is not None else label
+                rows[(label, het, k)] = bench(engine, C, cfg, args.nf, n,
+                                              args.population, mesh_, het,
+                                              k)
+        for k in ks:
+            for label, _, het in runs:
+                if (label, het, k) not in rows:
+                    continue
+                r = rows[(label, het, k)]
+                base = rows.get(("sequential", het, 1))
+                speedup = (r["client_rounds_per_s"]
+                           / base["client_rounds_per_s"]
+                           if base else float("nan"))
+                print(f"{C},{label},{int(het)},{k},{r['devices']},"
+                      f"{r['cohorts']},{r['round_ms']:.2f},"
+                      f"{r['client_rounds_per_s']:.1f},"
+                      f"{r['dispatches_per_epoch']:.1f},"
+                      f"{r['exchange_rounds']},{r['pool_bytes_gathered']},"
+                      f"{speedup:.2f}", flush=True)
+                records.append({
+                    "clients": C, "engine": label,
+                    "hetero": het,
+                    "cohorts": r["cohorts"],
+                    "devices": r["devices"],
+                    "exchange_every": r["exchange_every"],
+                    "exchange_rounds": r["exchange_rounds"],
+                    "pool_bytes_gathered": r["pool_bytes_gathered"],
+                    "round_ms": r["round_ms"],
+                    "client_rounds_per_s": r["client_rounds_per_s"],
+                    "dispatches_per_epoch": r["dispatches_per_epoch"],
+                    "dispatch_path": r["dispatch_path"],
+                    "speedup_vs_sequential":
+                        None if speedup != speedup else speedup})
         if args.profile:
             p = profile_phases(C, cfg, args.nf, n, args.population)
             profiles[str(C)] = p
@@ -388,7 +454,8 @@ def main():
                        "population": bool(args.population),
                        "mesh": bool(args.mesh),
                        "hetero": bool(args.hetero),
-                       "clients": counts, "engines": engines},
+                       "clients": counts, "engines": engines,
+                       "exchange_every": ks},
             "results": records,
         }
         if profiles:

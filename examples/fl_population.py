@@ -14,6 +14,7 @@ the command line:
   --selection topk --k 3                    # uniform over the 3 best heads
   --max-staleness 4                         # hide pool entries older than 4
   --participation 0.5                       # Bernoulli partial participation
+  --exchange-every 2                        # pool exchange every 2 sub-rounds
 
 With ``--engine batched`` (default) every Adam step is vmapped across
 hospitals and each federated opportunity runs as ONE fused selection+blend
@@ -44,7 +45,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core.experiment import (hetero_population_clients,
                                    population_clients)
-from repro.core.federation import Federation, MetricsCapture
+from repro.core.federation import (Federation, MetricsCapture,
+                                   RoundSchedule)
 from repro.core.hfl import HFLConfig
 from repro.core.policies import (FederationPolicies, MaxStaleness,
                                  ProbSwitch, SoftmaxSelection, TopKSelection)
@@ -103,6 +105,9 @@ def main():
     ap.add_argument("--nf-choices", default="3,4,5",
                     help="comma-separated feature counts cycled across "
                          "hospitals under --hetero")
+    ap.add_argument("--exchange-every", type=int, default=1,
+                    help="bounded-staleness cadence: run the pool exchange "
+                         "only on every k-th sub-round (docs/SCALING.md)")
     ap.add_argument("--save-dir", default=None,
                     help="checkpoint the federation here after training")
     ap.add_argument("--resume", action="store_true",
@@ -142,8 +147,10 @@ def main():
         t0 = time.time()
         hist = fed.fit(epochs=args.epochs, verbose=args.verbose)
     else:
+        sched = RoundSchedule(cfg.epochs, cfg.R,
+                              exchange_every=args.exchange_every)
         fed = Federation(clients, cfg, policies=build_policies(args, cfg),
-                         engine=args.engine or "batched",
+                         schedule=sched, engine=args.engine or "batched",
                          callbacks=[metrics], mesh=mesh)
         print(f"== {args.clients}-hospital population, engine={fed.engine}, "
               f"mode={args.mode}, selection={args.selection}"

@@ -56,8 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mesh_federation as MF
-from repro.core.federation import (_policy_round_body, _stack_trees,
-                                   _tree_row, _wants_per_round)
+from repro.core.federation import (_exchange_round_bytes, _policy_round_body,
+                                   _stack_trees, _tree_bytes, _tree_row,
+                                   _wants_per_round)
 from repro.core.hfl import (FederatedClient, _eval_mse, _train_step,
                             pool_kernel_available)
 from repro.core.policies import FederationPolicies
@@ -225,7 +226,8 @@ def _tree_select(cond, new, old):
 def _hetero_epoch_body(lr: float, plan: CohortPlan,
                        policies: FederationPolicies, use_kernel: bool,
                        do_federate: bool, do_eval: bool, *,
-                       gather=None, local_rows=None):
+                       exchange_every: int = 1, gather=None,
+                       local_rows=None, shard=None):
     """The fused whole-epoch computation for a cohorted population, shared by
     the single-device and mesh backends: one ``lax.scan`` over the epoch's
     global sub-rounds.  Each step trains every cohort at its native
@@ -239,7 +241,15 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
     ``gather(tree)`` / ``local_rows(tree, k)`` are the mesh hooks: identity
     on the single-device path; the mesh backend injects a client-axis
     all-gather (per-cohort full view for the replicated policy round) and a
-    dynamic-slice taking cohort k's device-local block back out."""
+    dynamic-slice taking cohort k's device-local block back out.  ``shard``
+    is forwarded to :func:`~repro.core.federation._policy_round_body`
+    (client-sharded Eq.-7 scoring over the padded union pool's ``C *
+    max_nf`` rows).  ``exchange_every`` = k > 1 segments the scan exactly
+    like ``federation._epoch_body``: groups of k sub-rounds run k-1
+    train-only steps plus one train+exchange step on the group's last
+    round, leftover ``n_sub % k`` rounds never exchange — static cadence,
+    so the mesh path traces the identical collective schedule on every
+    device; k=1 is the historical flat scan, bit-identical."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
@@ -248,6 +258,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
     feat_valid = plan.feat_valid()
     members = [np.asarray(co.members, np.int32) for co in plan.cohorts]
     bounded = policies.pool.bounded
+    k_ex = int(exchange_every)
     if gather is None:
         gather = lambda t: t
     if local_rows is None:
@@ -257,9 +268,9 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
               best_params_t, xs_t, xd_t, y_t, part, tick, live,
               val_xs_t, val_xd_t, val_y_t):
 
-        def body(carry, inp):
-            params_t, opt_t, pool_heads, pool_age, key = carry
-            (bx, bd, by), part_r, tick_r, live_r = inp
+        def train(params_t, opt_t, bx, bd, by, live_r):
+            """Every cohort's masked native-geometry step for one
+            sub-round (shared by exchange and train-only rounds)."""
             params_t, opt_t = list(params_t), list(opt_t)
             for k, co in enumerate(plan.cohorts):
                 p2, o2, _ = step(params_t[k], opt_t[k], bx[k], bd[k], by[k])
@@ -268,6 +279,12 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                 else:
                     params_t[k] = _tree_select(live_r[k], p2, params_t[k])
                     opt_t[k] = _tree_select(live_r[k], o2, opt_t[k])
+            return params_t, opt_t
+
+        def body(carry, inp):
+            params_t, opt_t, pool_heads, pool_age, key = carry
+            (bx, bd, by), part_r, tick_r, live_r = inp
+            params_t, opt_t = train(params_t, opt_t, bx, bd, by, live_r)
             if do_federate:
                 if bounded:
                     pool_age = pool_age + tick_r
@@ -294,7 +311,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                 new_heads, pool_heads, pool_age, chosen = _policy_round_body(
                     heads_g, pool_heads, pool_age, xd_g, y_g, part_r, sub,
                     nf=max_nf, policies=policies, use_kernel=use_kernel,
-                    feat_valid=feat_valid)
+                    feat_valid=feat_valid, shard=shard)
                 for k, co in enumerate(plan.cohorts):
                     rows = jax.tree_util.tree_map(
                         lambda g: g[members[k], :co.nf], new_heads)
@@ -305,9 +322,41 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
             return ((tuple(params_t), tuple(opt_t), pool_heads, pool_age,
                      key), chosen)
 
+        def train_only(carry, inp):
+            params_t, opt_t, pool_heads, pool_age, key = carry
+            (bx, bd, by), part_r, tick_r, live_r = inp
+            params_t, opt_t = train(params_t, opt_t, bx, bd, by, live_r)
+            return ((tuple(params_t), tuple(opt_t), pool_heads, pool_age,
+                     key), None)
+
+        xs_all = ((xs_t, xd_t, y_t), part, tick, live)
         carry = (params_t, opt_t, pool_heads, pool_age, key)
-        (params_t, opt_t, pool_heads, pool_age, key), chosen = jax.lax.scan(
-            body, carry, ((xs_t, xd_t, y_t), part, tick, live))
+        if not do_federate or k_ex == 1:
+            # the historical flat scan; exchange_every=1 stays bit-identical
+            carry, chosen = jax.lax.scan(body, carry, xs_all)
+        else:
+            n_sub = part.shape[0]
+            n_grp, rem = divmod(n_sub, k_ex)
+            grouped = jax.tree_util.tree_map(
+                lambda t: t[:n_grp * k_ex].reshape(
+                    (n_grp, k_ex) + t.shape[1:]), xs_all)
+
+            def group(carry, inp_k):
+                # k-1 train-only rounds, then train + exchange on the
+                # group's LAST round (probes = that round's own R-batches)
+                carry, _ = jax.lax.scan(
+                    train_only, carry,
+                    jax.tree_util.tree_map(lambda t: t[:k_ex - 1], inp_k))
+                return body(carry, jax.tree_util.tree_map(
+                    lambda t: t[k_ex - 1], inp_k))
+
+            carry, chosen = jax.lax.scan(group, carry, grouped)
+            if rem:                       # leftover rounds never exchange
+                carry, _ = jax.lax.scan(
+                    train_only, carry,
+                    jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
+                                           xs_all))
+        (params_t, opt_t, pool_heads, pool_age, key) = carry
         if do_eval:
             vs, new_bv, new_bp = [], [], []
             for k in range(K):
@@ -335,7 +384,8 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
 @functools.lru_cache(maxsize=None)
 def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
                           policies: FederationPolicies, use_kernel: bool,
-                          do_federate: bool, do_eval: bool):
+                          do_federate: bool, do_eval: bool,
+                          exchange_every: int = 1):
     """Compile-cached fused heterogeneous epoch (single-device): one
     dispatch scans every global sub-round of a mixed-cohort epoch, with the
     whole carried state donated — the cohort twin of
@@ -343,7 +393,7 @@ def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
     :class:`CohortPlan`, so every distinct population LAYOUT compiles once
     and every cohort inside it shares that single program."""
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
-                               do_eval)
+                               do_eval, exchange_every=exchange_every)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -351,13 +401,18 @@ def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
 def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
                                policies: FederationPolicies,
                                use_kernel: bool, do_federate: bool,
-                               do_eval: bool, mesh):
+                               do_eval: bool, mesh,
+                               exchange_every: int = 1):
     """The client-sharded twin of :func:`_make_hetero_epoch_fn`: the same
     epoch body under ``shard_map``, with every cohort's stack partitioned
     over the mesh's ``clients`` axis (each cohort size must divide the
-    device count — :func:`validate_cohort_mesh`) and the padded union pool
-    assembled from per-cohort all-gathers, replicated-deterministic on
-    every device exactly like ``mesh_federation._make_mesh_epoch_fn``."""
+    device count — :func:`validate_cohort_mesh`), the padded union pool
+    assembled from per-cohort all-gathers, and the Eq.-7 sweep over the
+    padded union sharded per device (``shard=(axis, D)`` — each device
+    scores its contiguous ``C * max_nf / D`` chunk, argminima merged
+    through a tiny (D, max_nf) gather), everything downstream
+    replicated-deterministic exactly like
+    ``mesh_federation._make_mesh_epoch_fn``."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -379,7 +434,9 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
             tree)
 
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
-                               do_eval, gather=gather, local_rows=local_rows)
+                               do_eval, exchange_every=exchange_every,
+                               gather=gather, local_rows=local_rows,
+                               shard=(axis, D))
     tup = lambda spec: tuple(spec for _ in range(K))
     sharded = shard_map(
         epoch, mesh=mesh,
@@ -503,6 +560,22 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
     live_np = np.asarray([[k < co.n_sub for co in plan.cohorts]
                           for k in range(n_sub_max)], bool)
 
+    k_ex = fed.schedule.exchange_every
+    exch = fed.schedule.exchange_mask(n_sub_max)
+    n_exch_epoch = fed.schedule.exchanges(n_sub_max)
+    exchange_rounds = 0
+    pool_bytes = 0
+    # per-device bytes one mesh exchange round moves (0 on one device):
+    # padded-union pool heads + per-cohort probe gathers at native nf,
+    # reduce sized by the padded union (ns = C * max_nf)
+    heads_bytes = _tree_bytes(pool_heads)
+    probe_bytes = sum(co.size * R * (co.nf * cfg.w + 1) * 4
+                      for co in plan.cohorts)
+    exch_bytes = _exchange_round_bytes(
+        MF.mesh_devices(fed._exec_mesh()), heads_bytes, probe_bytes,
+        C, plan.max_nf, C * plan.max_nf,
+        pol.selection) if fed._exec_mesh() is not None else 0
+
     histories = [list(c.val_history) for c in clients]
     n_rounds = np.zeros(C, np.int64)
     base_rounds = dict(fed.n_rounds)
@@ -517,13 +590,14 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
             best_val_t=best_val_t, best_params_t=best_params_t,
             rounds_t=rounds_t, val_t=val_t)
 
-    def make_epoch_fn(do_federate: bool, do_eval: bool):
+    def make_epoch_fn(do_federate: bool, do_eval: bool,
+                      exchange_every: int = 1):
         if mesh is not None:
             return _make_mesh_hetero_epoch_fn(cfg.lr, plan, cfg.w, pol,
                                               use_kernel, do_federate,
-                                              do_eval, mesh)
+                                              do_eval, mesh, exchange_every)
         return _make_hetero_epoch_fn(cfg.lr, plan, pol, use_kernel,
-                                     do_federate, do_eval)
+                                     do_federate, do_eval, exchange_every)
 
     fused = not any(_wants_per_round(cb) for cb in cbs)
     n_dispatch = 0
@@ -578,7 +652,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                  best_params_t)
         fed._mid_epoch = True
         if fused:
-            epoch_fn = make_epoch_fn(do_federate, True)
+            epoch_fn = make_epoch_fn(do_federate, True, k_ex)
             (*state, v_t, chosen) = epoch_fn(*state,
                                              tuple(r[0] for r in rounds_t),
                                              tuple(r[1] for r in rounds_t),
@@ -591,7 +665,10 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         else:
             chunks = []
             for rnd in range(n_sub_max):
-                epoch_fn = make_epoch_fn(do_federate, rnd == n_sub_max - 1)
+                # cadence on the chunked path: a non-exchange sub-round is
+                # exactly a do_federate=False dispatch (train-only)
+                epoch_fn = make_epoch_fn(do_federate and bool(exch[rnd]),
+                                         rnd == n_sub_max - 1)
                 sl = slice(rnd, rnd + 1)
                 (*state, v_t, ch) = epoch_fn(
                     *state,
@@ -606,7 +683,8 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                 n_dispatch += 1
                 (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
                  best_params_t) = state
-                n_rounds += part_np[rnd]
+                if exch[rnd]:
+                    n_rounds += part_np[rnd]
                 for cb in cbs:
                     cb.on_round(fed, epoch, rnd)
             if n_sub_max == 0:   # no trainable sub-round: eval-only dispatch
@@ -634,7 +712,10 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                         fed.selections[names[i]].append(
                             lut[i, ch[i][:nf_i]].tolist())
         if fused:
-            n_rounds += part_np.sum(axis=0)
+            n_rounds += part_np[exch].sum(axis=0)
+        if do_federate:
+            exchange_rounds += n_exch_epoch
+            pool_bytes += n_exch_epoch * exch_bytes
         v_all = np.empty(C, np.float64)
         for k, co in enumerate(plan.cohorts):
             v_all[np.asarray(co.members)] = np.asarray(v_t[k], np.float64)
@@ -656,6 +737,9 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                         "sub_rounds": co.n_sub, "dispatches": n_dispatch}
                        for co in plan.cohorts],
         "epochs": n_epochs, "dispatches": n_dispatch,
-        "dispatches_per_epoch": n_dispatch / n_epochs}
+        "dispatches_per_epoch": n_dispatch / n_epochs,
+        "exchange_every": k_ex,
+        "exchange_rounds": exchange_rounds,
+        "pool_bytes_gathered": pool_bytes}
     sync()
     fed._sync = None

@@ -62,9 +62,38 @@ from repro.optim import adam
 class RoundSchedule:
     """The paper's training protocol skeleton, shared by every executor and
     by the non-federated benchmark loop: `epochs` epochs, one gradient step
-    (and one federated opportunity) per R consecutive periods."""
+    per R consecutive periods.
+
+    ``exchange_every`` relaxes the pool-exchange cadence (bounded-staleness
+    federation): a federated opportunity runs only on every k-th executed
+    sub-round — sub-round ``r`` (0-based, counted within the epoch)
+    exchanges iff ``(r + 1) % k == 0``, always on the sub-round's OWN probe
+    batch.  The default k=1 is the paper's per-sub-round exchange,
+    bit-identical to the historical behaviour.  The cadence resets at epoch
+    boundaries, so an epoch with fewer than k sub-rounds never exchanges
+    (the schedule tells you: ``exchanges(n_sub) == 0``).  Everything
+    counted "per federated opportunity" follows the cadence: staleness ages
+    (:class:`~repro.core.policies.MaxStaleness` ``max_age`` bounds exchange
+    opportunities, not train sub-rounds), ``Federation.n_rounds``, and the
+    selection log.  Semantics contract: docs/SCALING.md."""
     epochs: int
     R: int
+    exchange_every: int = 1
+
+    def __post_init__(self):
+        if self.exchange_every < 1:
+            raise ValueError(
+                f"exchange_every must be >= 1 (1 = exchange every "
+                f"sub-round, the paper's cadence), got {self.exchange_every}")
+
+    def exchange_mask(self, n_sub: int) -> np.ndarray:
+        """(n_sub,) bool: which within-epoch sub-rounds run a federated
+        opportunity — ``(r + 1) % exchange_every == 0``."""
+        return (np.arange(1, n_sub + 1) % self.exchange_every) == 0
+
+    def exchanges(self, n_sub: int) -> int:
+        """Federated opportunities per epoch of ``n_sub`` sub-rounds."""
+        return n_sub // self.exchange_every
 
     def slices(self, n: int):
         """Sub-round batch slices over an n-sample train split.
@@ -243,6 +272,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
     pol = fed.policies
     C = len(fed.clients)
     use_kernel = fed.cfg.use_pool_kernel
+    k_ex = fed.schedule.exchange_every
+    n_exchange = 0            # executed sub-rounds that ran an exchange
     n_dispatch = 0            # jitted calls: train steps + Eq.-7 scorings +
                               # per-epoch evals (eager tree ops not counted)
     for _ in range(n_epochs):
@@ -256,10 +287,15 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
         fed._mid_epoch = True
         rnd = 0
         while live:
-            # staleness clock: tick once per executed sub-round in which
+            # bounded-staleness cadence: only every k-th executed sub-round
+            # (within the epoch) is a federated opportunity — on the other
+            # rounds clients just train, and the staleness clock stands
+            # still (ages count exchange opportunities, not sub-rounds)
+            exchange = (rnd + 1) % k_ex == 0
+            # staleness clock: tick once per exchange round in which
             # federation can run (mirrors the batched engine's age array)
-            ticked = not (pol.pool.bounded and C >= 2
-                          and any(active[n] for n in live))
+            ticked = not exchange or not (pol.pool.bounded and C >= 2
+                                          and any(active[n] for n in live))
             progressed = False
             for c in fed.clients:
                 if c.name not in live:
@@ -271,6 +307,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                     continue
                 progressed = True
                 n_dispatch += 1
+                if not exchange:
+                    continue
                 if not ticked:
                     fed.pool.tick()
                     ticked = True
@@ -284,6 +322,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                     fed.n_rounds[c.name] += 1
                     fed.pool.publish(c.name, c.params["heads"], c.nf)
             if progressed:
+                if exchange and any(active.values()):
+                    n_exchange += 1
                 for cb in cbs:
                     cb.on_round(fed, epoch, rnd)
                 rnd += 1
@@ -298,16 +338,48 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
     fed.dispatch_stats = {"engine": "sequential", "path": "per-round",
                           "devices": 1,
                           "epochs": n_epochs, "dispatches": n_dispatch,
-                          "dispatches_per_epoch": n_dispatch / n_epochs}
+                          "dispatches_per_epoch": n_dispatch / n_epochs,
+                          "exchange_every": k_ex,
+                          "exchange_rounds": n_exchange,
+                          "pool_bytes_gathered": 0}
 
 
 # ---------------------------------------------------------------------------
 # Batched executor: fused multi-client selection + transfer
 # ---------------------------------------------------------------------------
 
+def shard_argmin(errs_loc, offset):
+    """One device's contribution to a sharded Eq.-7 argmin: per-feature
+    ``(min error, GLOBAL flat index)`` over its contiguous pool chunk.
+    ``jnp.argmin`` returns the first occurrence, so within the chunk ties
+    already resolve to the lowest local index; adding the chunk ``offset``
+    keeps global indices monotone in device order.  errs_loc: (nf, chunk);
+    returns ((nf,) float values, (nf,) int32 global indices)."""
+    li = jnp.argmin(errs_loc, axis=1)                              # (nf,)
+    lv = jnp.take_along_axis(errs_loc, li[:, None], axis=1)[:, 0]
+    return lv, (offset + li).astype(jnp.int32)
+
+
+def merge_sharded_argmin(vals, gidx, ns: int):
+    """Merge per-device :func:`shard_argmin` pairs into the GLOBAL argmin,
+    reproducing ``jnp.argmin(errs, axis=1)`` on the full (nf, ns) matrix
+    exactly — including its tie-break.
+
+    The pinned tie-break rule (tests/test_sharded_policy.py): among tied
+    minima the LOWEST flat pool index wins — ``argmin``'s first-occurrence
+    semantics.  Chunks are contiguous and offsets monotone in device order,
+    so taking the minimum global index among the devices achieving the
+    minimum value reproduces it; a fully-stale pool (every error ``inf``,
+    which ``inf == inf`` keeps comparable) resolves to index 0 on both
+    paths.  vals/gidx: (D, nf); returns (nf,) int32."""
+    m = jnp.min(vals, axis=0)                                      # (nf,)
+    achieves = vals == m[None, :]
+    return jnp.min(jnp.where(achieves, gidx, ns), axis=0).astype(jnp.int32)
+
+
 def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
                        *, nf: int, policies: FederationPolicies,
-                       use_kernel: bool, feat_valid=None):
+                       use_kernel: bool, feat_valid=None, shard=None):
     """One federated opportunity for ALL clients as a traceable scan over
     clients — the body both :func:`fused_policy_round` (standalone jit) and
     the fused-epoch scan (:func:`_make_epoch_fn`) trace.  The policy
@@ -333,7 +405,19 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
     are real features.  Invalid rows are excluded from every selection,
     their blend results are discarded (padded head rows stay zero), and
     their ``chosen`` entries are -1.  ``None`` (the homogeneous engines)
-    traces exactly the original body."""
+    traces exactly the original body.
+
+    ``shard`` opts into client-sharded Eq.-7 scoring (the mesh engines):
+    an ``(axis_name, n_devices)`` pair naming the mesh axis this body runs
+    under (via ``shard_map``).  Each device then scores only its contiguous
+    ``ns / D`` chunk of the flattened pool per scan step — the pool itself
+    stays replicated and is updated in lockstep, so the oracle's
+    fresh-head visibility (client i sees clients < i's republications) is
+    preserved exactly.  Selection policies with ``local_argmin`` reduce via
+    per-device minima + :func:`merge_sharded_argmin` (two (D, nf)
+    all-gathers per client); other error-based policies all-gather the
+    full (nf, ns) error matrix and select replicated.  ``None`` (the
+    single-device engines) traces exactly the unsharded body."""
     C = y_R.shape[0]
     ns = C * nf
     sel, transfer, poolp = policies.selection, policies.transfer, policies.pool
@@ -361,26 +445,59 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
             # C >= 2 enforced by the caller; with a padded pool every
             # foreign client still contributes >= 1 valid feature row
             any_valid = jnp.bool_(True)
-        if sel.needs_errors:
+        def score(pool_rows, valid_rows):
+            """Eq.-7 errors of ``pool_rows`` (full pool or a device chunk)
+            against client i's probe batch — row-independent, so a chunk
+            sweep equals the corresponding slice of the full sweep."""
             xd_i = jnp.moveaxis(xd_R[i], 1, 0)          # (nf, R, w)
             if use_kernel:
                 ops = _pool_kernel_ops()
-                if feat_valid is not None:
-                    errs = ops.pool_mlp_errors_features_masked(
-                        fp, xd_i, y_R[i], valid_flat)
-                else:
-                    errs = ops.pool_mlp_errors_features(fp, xd_i, y_R[i])
+                if valid_rows is not None:
+                    return ops.pool_mlp_errors_shard(pool_rows, xd_i,
+                                                     y_R[i], valid_rows)
+                return ops.pool_mlp_errors_features(pool_rows, xd_i, y_R[i])
+            return jax.vmap(
+                lambda xf: pool_errors(pool_rows, xf, y_R[i]))(xd_i)
+
+        valid_arg = valid_flat if feat_valid is not None else None
+        if sel.needs_errors:
+            if shard is None:
+                errs = jnp.where(excluded[None, :], jnp.inf,
+                                 score(fp, valid_arg))          # (nf, ns)
             else:
-                errs = jax.vmap(
-                    lambda xf: pool_errors(fp, xf, y_R[i]))(xd_i)  # (nf, ns)
-            errs = jnp.where(excluded[None, :], jnp.inf, errs)
+                # client-sharded scoring: this device's contiguous chunk of
+                # the flattened pool (C % D == 0 so ns % D == 0)
+                axis, D = shard
+                chunk = ns // D
+                off = jax.lax.axis_index(axis) * chunk
+                take = lambda v: jax.lax.dynamic_slice_in_dim(v, off,
+                                                              chunk, 0)
+                fp_loc = jax.tree_util.tree_map(take, fp)
+                errs_loc = score(
+                    fp_loc, take(valid_arg) if valid_arg is not None
+                    else None)
+                errs_loc = jnp.where(take(excluded)[None, :], jnp.inf,
+                                     errs_loc)                  # (nf, chunk)
+                if sel.local_argmin:
+                    # small reduce: per-device (min, global index) pairs
+                    lv, gi = shard_argmin(errs_loc, off)
+                    j = merge_sharded_argmin(jax.lax.all_gather(lv, axis),
+                                             jax.lax.all_gather(gi, axis),
+                                             ns)
+                    errs = None
+                else:
+                    # the policy needs the full error distribution: gather
+                    # the chunks back to (nf, ns) and select replicated
+                    errs = jax.lax.all_gather(errs_loc, axis, axis=1,
+                                              tiled=True)
         else:
             errs = None
         # padded pools always pass bounded=True: the exclusion mask is
         # non-trivial even under last-write-wins, so selection policies must
         # take their masked path (see SelectionPolicy.select_batched)
-        j = sel.select_batched(errs, excluded, key_i, nf=nf, ns=ns, i=i,
-                               bounded=bounded or feat_valid is not None)
+        if shard is None or not (sel.needs_errors and sel.local_argmin):
+            j = sel.select_batched(errs, excluded, key_i, nf=nf, ns=ns, i=i,
+                                   bounded=bounded or feat_valid is not None)
         selected = jax.tree_util.tree_map(lambda p: p[j], fp)      # (nf, ...)
         mine = jax.tree_util.tree_map(lambda h: h[i], heads)
         blended = transfer.apply(mine, selected)
@@ -435,6 +552,30 @@ def _stack_trees(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _tree_bytes(tree) -> int:
+    """Total payload bytes of a pytree's leaves (comms accounting)."""
+    return int(sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(tree)))
+
+
+def _exchange_round_bytes(D: int, heads_bytes: int, probe_bytes: int,
+                          C: int, nf: int, ns: int, selection) -> int:
+    """Analytic per-device bytes one mesh exchange round moves — what
+    ``dispatch_stats["pool_bytes_gathered"]`` accumulates: the pool-
+    candidate heads + probe-batch all-gathers, plus the per-client score
+    reduce (two tiny (D, nf) pairs under ``local_argmin`` selection, the
+    full (nf, ns) float32 error matrix otherwise, nothing for policies
+    that skip Eq.-7 scoring)."""
+    if selection.needs_errors:
+        if selection.local_argmin:
+            reduce_b = C * D * nf * 8       # f32 minima + int32 indices
+        else:
+            reduce_b = C * nf * ns * 4      # gathered (nf, ns) errors
+    else:
+        reduce_b = 0
+    return heads_bytes + probe_bytes + reduce_b
+
+
 def stack_pool(pool: HeadPool, names: Sequence[str], nf: int):
     """A HeadPool's entries as the batched engine's stacked ``(C, nf, ...)``
     tree — the one place that defines the stacked pool layout, shared by
@@ -475,7 +616,8 @@ def _make_batched_fns(lr: float):
 
 def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 use_kernel: bool, do_federate: bool, do_eval: bool, *,
-                gather=None, local_rows=None):
+                exchange_every: int = 1, gather=None, local_rows=None,
+                shard=None):
     """The fused whole-epoch computation shared by BOTH batched backends:
     a scan over the epoch's sub-rounds (vmapped Adam step on that round's
     R-slice, then the fused policy round), with the per-epoch validation
@@ -487,11 +629,25 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
     The mesh backend (``repro.core.mesh_federation``) injects an
     all-gather along the `clients` axis (pool candidates + probe batches
     to the global client order) and a dynamic-slice taking the device's
-    own client block back out of the blended heads."""
+    own client block back out of the blended heads; the probe gathers are
+    issued BEFORE the train step, which has no data dependency on them, so
+    XLA's scheduler may overlap the collective with the step's compute.
+    ``shard`` is forwarded to :func:`_policy_round_body` (client-sharded
+    Eq.-7 scoring).
+
+    ``exchange_every`` = k > 1 (with ``do_federate``) restructures the scan
+    into SEGMENTS: an outer scan over groups of k sub-rounds whose body
+    runs k-1 train-only steps plus one train+exchange step on the group's
+    last sub-round (its own R-batch is the probe batch, exactly the
+    oracle's ``_recent``), then a train-only scan over the ``n_sub % k``
+    leftover rounds.  No ``lax.cond`` around collectives — the cadence is
+    static, so the mesh path segments identically on every device.  k=1
+    traces the historical flat scan unchanged (the bit-identity pin)."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
     bounded = policies.pool.bounded
+    k_ex = int(exchange_every)
     if gather is None:
         gather = lambda t: t
     if local_rows is None:
@@ -500,10 +656,13 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
     def epoch(params, opt_state, pool_heads, pool_age, key, best_val,
               best_params, xs_r, xd_r, y_r, active, val_xs, val_xd, val_y):
         C = active.shape[0]
+        n_sub = y_r.shape[0]
 
         def body(carry, batch):
             params, opt_state, pool_heads, pool_age, key = carry
             xs_b, xd_b, y_b = batch
+            if do_federate:
+                xd_g, y_g = gather(xd_b), gather(y_b)   # overlaps the step
             params, opt_state, _ = step(params, opt_state, xs_b, xd_b, y_b)
             if do_federate:
                 if bounded:
@@ -511,16 +670,47 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 key, sub = jax.random.split(key)
                 new_heads, pool_heads, pool_age, chosen = _policy_round_body(
                     gather(params["heads"]), pool_heads, pool_age,
-                    gather(xd_b), gather(y_b), active, sub, nf=nf,
-                    policies=policies, use_kernel=use_kernel)
+                    xd_g, y_g, active, sub, nf=nf,
+                    policies=policies, use_kernel=use_kernel, shard=shard)
                 params = {**params, "heads": local_rows(new_heads)}
             else:
                 chosen = jnp.full((C, nf), -1, jnp.int32)
             return (params, opt_state, pool_heads, pool_age, key), chosen
 
+        def train_only(carry, batch):
+            params, opt_state, pool_heads, pool_age, key = carry
+            xs_b, xd_b, y_b = batch
+            params, opt_state, _ = step(params, opt_state, xs_b, xd_b, y_b)
+            return (params, opt_state, pool_heads, pool_age, key), None
+
         carry = (params, opt_state, pool_heads, pool_age, key)
-        (params, opt_state, pool_heads, pool_age, key), chosen = \
-            jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
+        if not do_federate or k_ex == 1:
+            # the historical flat scan — one (train, exchange?) step per
+            # sub-round; exchange_every=1 must stay bit-identical to it
+            carry, chosen = jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
+        else:
+            n_grp, rem = divmod(n_sub, k_ex)
+            grouped = jax.tree_util.tree_map(
+                lambda t: t[:n_grp * k_ex].reshape(
+                    (n_grp, k_ex) + t.shape[1:]),
+                (xs_r, xd_r, y_r))
+
+            def group(carry, batch_k):
+                # k-1 train-only rounds, then train + exchange on the
+                # group's LAST round (probes = that round's own R-batch)
+                carry, _ = jax.lax.scan(
+                    train_only, carry,
+                    jax.tree_util.tree_map(lambda t: t[:k_ex - 1], batch_k))
+                return body(carry, jax.tree_util.tree_map(
+                    lambda t: t[k_ex - 1], batch_k))
+
+            carry, chosen = jax.lax.scan(group, carry, grouped)
+            if rem:                       # leftover rounds never exchange
+                carry, _ = jax.lax.scan(
+                    train_only, carry,
+                    jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
+                                           (xs_r, xd_r, y_r)))
+        (params, opt_state, pool_heads, pool_age, key) = carry
         if do_eval:
             v = evaluate(params, val_xs, val_xd, val_y)  # (local clients,)
             improved = v < best_val
@@ -540,7 +730,8 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
 
 @functools.lru_cache(maxsize=None)
 def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
-                   use_kernel: bool, do_federate: bool, do_eval: bool):
+                   use_kernel: bool, do_federate: bool, do_eval: bool,
+                   exchange_every: int = 1):
     """Compile-cached whole-epoch function: ONE dispatch scans every
     sub-round of an epoch — the vmapped Adam step on that round's R-slice,
     then the fused policy round (selection, blend, publish, aging, RNG
@@ -558,11 +749,15 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
     transfer per epoch, not one per round.
 
     The cache key is the trace-relevant statics — (lr, nf, policies,
-    use_kernel, do_federate, do_eval); jit itself caches per shape, so one
-    factory entry serves every (C, n_rounds, R) geometry.  The chunked
-    fallback (per-round callbacks) dispatches the same function over
-    1-round slices with ``do_eval`` only on the last chunk."""
-    epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval)
+    use_kernel, do_federate, do_eval, exchange_every); jit itself caches
+    per shape, so one factory entry serves every (C, n_rounds, R)
+    geometry.  The chunked fallback (per-round callbacks) dispatches the
+    same function over 1-round slices with ``do_eval`` only on the last
+    chunk and the exchange cadence applied through per-round
+    ``do_federate`` gating (a non-exchange round IS a ``do_federate=False``
+    round)."""
+    epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval,
+                        exchange_every=exchange_every)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -629,6 +824,17 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     pool_age = jnp.asarray([fed.pool.age_of(n_) for n_ in names], jnp.int32)
     use_kernel = cfg.use_pool_kernel and pool_kernel_available()
     lut = _selection_lut(names, nf)
+    k_ex = fed.schedule.exchange_every
+    exch_mask = fed.schedule.exchange_mask(n_sub)
+    n_exch_epoch = fed.schedule.exchanges(n_sub)
+    exchange_rounds = 0
+    pool_bytes = 0
+    # per-device bytes one mesh exchange round moves (0 on a single device)
+    heads_bytes = _tree_bytes(pool_heads)
+    probe_bytes = C * R * (nf * cfg.w + 1) * 4
+    exch_bytes = _exchange_round_bytes(
+        MF.mesh_devices(fed._exec_mesh()), heads_bytes, probe_bytes,
+        C, nf, C * nf, pol.selection) if fed._exec_mesh() is not None else 0
 
     histories = [list(c.val_history) for c in clients]
     best_val = jnp.asarray([c.best_val for c in clients], jnp.float32)
@@ -650,13 +856,14 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
             best_val=best_val, best_params=best_params,
             rounds_data=(xs_r, xd_r, y_r), val_data=val)
 
-    def make_epoch_fn(do_federate: bool, do_eval: bool):
+    def make_epoch_fn(do_federate: bool, do_eval: bool,
+                      exchange_every: int = 1):
         if mesh is not None:
             return MF._make_mesh_epoch_fn(cfg.lr, nf, cfg.w, pol,
                                           use_kernel, do_federate, do_eval,
-                                          mesh, C)
+                                          mesh, C, exchange_every)
         return _make_epoch_fn(cfg.lr, nf, pol, use_kernel, do_federate,
-                              do_eval)
+                              do_eval, exchange_every)
 
     # the fused path runs the whole epoch in ONE dispatch; any callback that
     # needs per-round delivery forces the chunked path (one dispatch per
@@ -694,14 +901,17 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                  best_params)
         fed._mid_epoch = True
         if fused:
-            epoch_fn = make_epoch_fn(do_federate, True)
+            epoch_fn = make_epoch_fn(do_federate, True, k_ex)
             (*state, v, chosen) = epoch_fn(*state, xs_r, xd_r, y_r,
                                            active_dev, *val)
             n_dispatch += 1
         else:
             chunks = []
             for rnd in range(n_sub):
-                epoch_fn = make_epoch_fn(do_federate, rnd == n_sub - 1)
+                # cadence on the chunked path: a non-exchange sub-round is
+                # exactly a do_federate=False dispatch (train + eval only)
+                epoch_fn = make_epoch_fn(do_federate and bool(exch_mask[rnd]),
+                                         rnd == n_sub - 1)
                 (*state, v, ch) = epoch_fn(
                     *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
                     y_r[rnd:rnd + 1], active_dev, *val)
@@ -712,7 +922,7 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                 # reader sees current state, as on the sequential engine
                 (params, opt_state, pool_heads, pool_age, key, best_val,
                  best_params) = state
-                if active.any():
+                if active.any() and exch_mask[rnd]:
                     n_rounds += active
                 for cb in cbs:
                     cb.on_round(fed, epoch, rnd)
@@ -732,7 +942,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                     if active[i] and ch[i][0] >= 0:
                         fed.selections[names[i]].append(lut[i, ch[i]].tolist())
         if fused and active.any():   # chunked path counted per round above
-            n_rounds += active * n_sub
+            n_rounds += active * n_exch_epoch
+        if do_federate:
+            exchange_rounds += n_exch_epoch
+            pool_bytes += n_exch_epoch * exch_bytes
         v = np.asarray(v, np.float64)
         for i in range(C):
             histories[i].append(float(v[i]))
@@ -748,7 +961,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                           "devices": MF.mesh_devices(mesh),
                           "cohorts": 1,
                           "epochs": n_epochs, "dispatches": n_dispatch,
-                          "dispatches_per_epoch": n_dispatch / n_epochs}
+                          "dispatches_per_epoch": n_dispatch / n_epochs,
+                          "exchange_every": k_ex,
+                          "exchange_rounds": exchange_rounds,
+                          "pool_bytes_gathered": pool_bytes}
     # write the final state back so the clients / pool / rng stay canonical
     sync()
     fed._sync = None
@@ -962,7 +1178,8 @@ class Federation:
             "cfg": dataclasses.asdict(self.cfg),
             "policies": self.policies.spec(),
             "schedule": {"epochs": self.schedule.epochs,
-                         "R": self.schedule.R},
+                         "R": self.schedule.R,
+                         "exchange_every": self.schedule.exchange_every},
             # informational: the device count the run sharded over.  The
             # checkpointed state itself is mesh-agnostic (gathered to host
             # trees), so a restore may use any mesh — or none.

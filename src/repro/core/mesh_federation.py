@@ -15,21 +15,43 @@ dispatch.  This module runs that SAME epoch body under
   path.  The vmapped Adam step and the per-epoch eval then run on each
   device's C/D-client block with no communication at all.
 
-* **Explicit pool exchange.**  The Eq.-7/Eq.-8 policy round is inherently
-  sequential in the global client order (client i scores the heads already
-  republished by clients < i in the same sub-round — the property that
-  makes the batched engine selection-identical to the sequential oracle).
-  Each sub-round therefore ALL-GATHERS the pool candidates — the freshly
-  trained heads plus that round's probe batches — along the ``clients``
-  axis and replays :func:`~repro.core.federation._policy_round_body`, the
-  exact single-device scan, on the gathered view.  Every device runs the
-  identical deterministic computation (same replicated PRNG key, same
-  gathered operands), so the pool, its staleness ages, and the selection
-  trace end each sub-round REPLICATED without a reduction — deterministic
-  replication plays the role of a psum — and each device slices its own
-  clients' blended heads back out of the result.  See docs/SCALING.md for
-  why this replicated policy round is the right trade (the scoring is
-  O(C^2) but tiny; the Adam steps dominate and shard perfectly).
+* **Explicit pool exchange, sharded scoring.**  The Eq.-7/Eq.-8 policy
+  round is inherently sequential in the global client order (client i
+  scores the heads already republished by clients < i in the same
+  sub-round — the property that makes the batched engine
+  selection-identical to the sequential oracle).  Each exchange round
+  therefore ALL-GATHERS the pool candidates — the freshly trained heads
+  plus that round's probe batches — along the ``clients`` axis (the probe
+  gathers are issued before the train step so XLA may overlap them with
+  its compute) and replays :func:`~repro.core.federation._policy_round_body`
+  on the gathered view.  The sequential dependency lives in the pool
+  CARRY, not in the scoring, so the expensive part — the Eq.-7 error
+  matrix — is sharded: each device scores only its contiguous ``ns/D``
+  chunk of the flattened pool against the scoring client's probes, takes
+  a per-chunk argmin, and a tiny ``(D, nf)`` all-gather of (value, global
+  index) pairs reduces to the global argmin
+  (:func:`~repro.core.federation.merge_sharded_argmin` — ties to the
+  LOWEST flat pool index, exactly ``jnp.argmin``'s first occurrence, the
+  pinned tie-break rule).  Everything downstream of the argmin (blend,
+  publish, aging, RNG fold-in) is O(pool) and runs replicated — same
+  replicated PRNG key, same reduced index on every device — so the pool,
+  its staleness ages, and the selection trace still end each round
+  REPLICATED without a psum, and each device slices its own clients'
+  blended heads back out.  Selection policies that need the full error
+  matrix (not a pure argmin) all-gather their sharded chunks instead;
+  policies that never score run replicated as before.  See docs/SCALING.md
+  for the cost model (per-device O(C/D · pool) scoring + O(pool) gather
+  replaces the old replicated O(C · pool) = O(C²) wall).
+
+* **Bounded-staleness cadence.**  ``RoundSchedule(exchange_every=k)``
+  exchanges on every k-th sub-round of an epoch (the segmented scan in
+  ``federation._epoch_body``); intermediate rounds are pure local
+  training — no gathers, no policy round, no pool aging.  k=1 is
+  bit-identical to the historical per-sub-round exchange; k>1 rides the
+  ``MaxStaleness`` PoolPolicy's bounded ages, which tick per EXCHANGE so
+  ``max_age`` keeps its meaning in exchange rounds.  Per-epoch comms are
+  accounted analytically in ``dispatch_stats["pool_bytes_gathered"]`` /
+  ``["exchange_rounds"]``.
 
 The mesh path is bit-compatible with the single-device engine: same scan
 body, same key sequence, same selections (pinned by
@@ -155,7 +177,7 @@ def replicate(mesh: Mesh, x):
 def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
                         policies: FederationPolicies, use_kernel: bool,
                         do_federate: bool, do_eval: bool, mesh: Mesh,
-                        n_clients: int):
+                        n_clients: int, exchange_every: int = 1):
     """Compile-cached client-sharded whole-epoch function — the mesh twin of
     ``federation._make_epoch_fn``: the SAME shared epoch computation
     (``federation._epoch_body``), same signature, same donation contract,
@@ -163,17 +185,22 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
 
     * train step + eval run on each device's local C/D-client block,
     * ``gather`` all-gathers (heads, probe batch) along the client axis so
-      each sub-round replays the single-device policy round on the global
-      view (replicated PRNG key → identical computation on every device →
-      the pool/ages/selections end the round replicated with no
-      reduction), and ``local_rows`` slices the local clients' blended
-      heads back out,
+      each exchange round replays the policy round on the global view
+      (replicated PRNG key → identical computation on every device →
+      the pool/ages/selections end the round replicated with no psum),
+      ``shard=(axis, D)`` makes ``_policy_round_body`` score only each
+      device's contiguous pool chunk and merge per-chunk argminima
+      through a tiny (D, nf) gather, and ``local_rows`` slices the local
+      clients' blended heads back out,
+    * ``exchange_every`` segments the scan into k-round groups (see
+      ``_epoch_body``) — the cadence is static, so every device traces the
+      identical collective schedule (no ``lax.cond`` around collectives),
     * outputs: per-client values partitioned, pool/key/selections
       replicated.
 
-    Cache key adds (w, mesh, n_clients) to the single-device key — the
-    PartitionSpecs depend on both, and jit's per-shape cache sits
-    underneath as before."""
+    Cache key adds (w, mesh, n_clients, exchange_every) to the
+    single-device key — the PartitionSpecs depend on the first three, and
+    jit's per-shape cache sits underneath as before."""
     from repro.core.federation import _epoch_body
 
     axis = client_axis(mesh)
@@ -193,7 +220,9 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
             lambda g: jax.lax.dynamic_slice_in_dim(g, i0, c_loc, 0), tree)
 
     epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval,
-                        gather=gather, local_rows=local_rows)
+                        exchange_every=exchange_every, gather=gather,
+                        local_rows=local_rows,
+                        shard=(axis, mesh_devices(mesh)))
     sharded = shard_map(
         epoch, mesh=mesh,
         in_specs=(pspecs, cl, rep, rep, rep, cl, pspecs,

@@ -181,9 +181,19 @@ class SelectionPolicy(_Spec):
     Batched path: :meth:`select_batched` is traced inside the fused round
     scan; gets errors ``(nf, ns)`` (already ``inf``-masked) or ``None``, the
     per-entry exclusion mask ``(ns,)``, a per-client PRNG key, and static
-    geometry — returns ``(nf,)`` int32 flat pool indices."""
+    geometry — returns ``(nf,)`` int32 flat pool indices.
+
+    ``local_argmin`` declares that the policy's selection is a pure argmin
+    over the error row, so a client-sharded engine may score pool CHUNKS
+    per device and merge per-chunk ``(min, index)`` pairs instead of
+    all-gathering the full ``(nf, ns)`` error matrix (see
+    ``federation.merge_sharded_argmin`` — the merge reproduces
+    ``jnp.argmin``'s lowest-flat-index tie-break exactly).  Policies that
+    need the full error distribution (softmax, top-k) leave it False and
+    get the gathered matrix."""
 
     needs_errors = True
+    local_argmin = False
 
     def select_host(self, errs: Optional[np.ndarray], valid: np.ndarray,
                     rng: np.random.Generator) -> int:
@@ -201,7 +211,11 @@ class SelectionPolicy(_Spec):
 @dataclasses.dataclass(frozen=True)
 class ArgminSelection(SelectionPolicy):
     """Eq. 7: the pool head with the smallest preliminary-prediction squared
-    error on the client's last-R probe batch."""
+    error on the client's last-R probe batch.  Ties resolve to the LOWEST
+    flat pool index (``argmin``'s first occurrence) on every engine — the
+    pinned tie-break rule the sharded reduce preserves."""
+
+    local_argmin = True
 
     def select_host(self, errs, valid, rng):
         return int(np.argmin(errs))

@@ -84,6 +84,33 @@ def pool_mlp_errors_features_masked(pool_stacked, xd_feats, y, valid, *,
     return jnp.where(valid[None, :], errs, jnp.inf)
 
 
+def pool_mlp_errors_shard(pool_chunk, xd_feats, y, valid=None, *,
+                          block_pool: int = 8, interpret=None):
+    """Score one device's contiguous CHUNK of the flattened pool — the
+    client-sharded engine's per-device Eq.-7 sweep (each device scores
+    ``ns / D`` rows; `federation.merge_sharded_argmin` reduces the
+    per-chunk minima).
+
+    The Eq.-7 error of a pool row depends on nothing but that row's params
+    and the probe batch, so sweeping a chunk is BITWISE equal to slicing
+    the corresponding columns out of the full sweep — the property the
+    sharded/replicated parity tests pin.  The chunk is padded to the block
+    size independently of the full pool (``_padded_weights`` keys on the
+    chunk's own leading dim), which costs at most one extra block.
+
+    pool_chunk: stacked param dict with a ``chunk``-sized leading dim;
+    xd_feats: (nf, R, w); y: (R,); valid: optional (chunk,) bool mask of
+    real (non-padded-feature) rows — invalid rows come back ``+inf``.
+    Returns (nf, chunk)."""
+    if valid is None:
+        return pool_mlp_errors_features(pool_chunk, xd_feats, y,
+                                        block_pool=block_pool,
+                                        interpret=interpret)
+    return pool_mlp_errors_features_masked(pool_chunk, xd_feats, y, valid,
+                                           block_pool=block_pool,
+                                           interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block_pool", "interpret"))
 def pool_mlp_errors_features(pool_stacked, xd_feats, y, *,
                              block_pool: int = 8, interpret=None):

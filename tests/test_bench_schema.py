@@ -1,0 +1,137 @@
+"""Schema pin for BENCH_fl_scale.json: ``fl_scale_bench.validate_payload``
+must accept a well-formed payload — including the exchange-cadence and
+comms-accounting fields — and reject each malformed mutation with a
+pointed error.  Tier-1, so the schema cannot drift silently; CI
+additionally smoke-runs the real bench through the same validator."""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+from fl_scale_bench import validate_payload  # noqa: E402
+
+
+def _payload():
+    """A minimal well-formed payload (the shape main() writes)."""
+    row = {
+        "clients": 8, "engine": "batched", "hetero": False, "cohorts": 1,
+        "devices": 4, "exchange_every": 2, "exchange_rounds": 2,
+        "pool_bytes_gathered": 123456, "round_ms": 1.5,
+        "client_rounds_per_s": 100.0, "dispatches_per_epoch": 1.0,
+        "dispatch_path": "fused", "speedup_vs_sequential": 2.5,
+    }
+    seq = dict(row, engine="sequential", devices=1, exchange_every=1,
+               pool_bytes_gathered=0, speedup_vs_sequential=1.0)
+    return {
+        "benchmark": "fl_scale",
+        "unix_time": 1700000000,
+        "backend": "cpu",
+        "device_count": 4,
+        "platform": "linux",
+        "config": {"epochs": 2, "R": 20, "nf": 4, "batches": 3,
+                   "mode": "always", "population": False, "mesh": True,
+                   "hetero": False, "clients": [8],
+                   "engines": ["sequential", "batched"],
+                   "exchange_every": [1, 2]},
+        "results": [seq, row],
+        "profiles": {"8": {"train_us_per_round": 10.0,
+                           "policy_us_per_round": 20.0,
+                           "eval_us_per_epoch": 5.0,
+                           "sub_rounds_per_epoch": 3,
+                           "phase_split": {"train": 0.3, "policy": 0.65,
+                                           "eval": 0.05}}},
+    }
+
+
+def test_accepts_well_formed_payload():
+    validate_payload(_payload())
+
+
+def test_accepts_null_speedup():
+    """Sequential skipped at large C (--max-seq-clients): speedup is null."""
+    p = _payload()
+    p["results"][1]["speedup_vs_sequential"] = None
+    validate_payload(p)
+
+
+def test_round_trips_through_json():
+    p = json.loads(json.dumps(_payload()))
+    validate_payload(p)
+
+
+@pytest.mark.parametrize("key", ("exchange_every", "exchange_rounds",
+                                 "pool_bytes_gathered", "clients", "engine",
+                                 "devices", "hetero", "cohorts", "round_ms",
+                                 "client_rounds_per_s", "dispatch_path"))
+def test_rejects_row_with_missing_key(key):
+    p = _payload()
+    del p["results"][1][key]
+    with pytest.raises(ValueError, match=key):
+        validate_payload(p)
+
+
+@pytest.mark.parametrize("key,bad", (
+    ("exchange_every", "2"),           # stringified int
+    ("exchange_rounds", 2.5),          # non-int count
+    ("pool_bytes_gathered", None),     # null bytes counter
+    ("round_ms", "fast"),
+    ("speedup_vs_sequential", "2x"),
+))
+def test_rejects_row_with_wrong_type(key, bad):
+    p = _payload()
+    p["results"][1][key] = bad
+    with pytest.raises(ValueError, match=key):
+        validate_payload(p)
+
+
+def test_rejects_non_positive_cadence():
+    p = _payload()
+    p["results"][1]["exchange_every"] = 0
+    with pytest.raises(ValueError, match="exchange_every"):
+        validate_payload(p)
+
+
+def test_rejects_config_without_cadence_list():
+    p = _payload()
+    del p["config"]["exchange_every"]
+    with pytest.raises(ValueError, match="exchange_every"):
+        validate_payload(p)
+    p = _payload()
+    p["config"]["exchange_every"] = [1, "2"]
+    with pytest.raises(ValueError, match="positive ints"):
+        validate_payload(p)
+    p = _payload()
+    p["config"]["exchange_every"] = [0]
+    with pytest.raises(ValueError, match="positive ints"):
+        validate_payload(p)
+
+
+def test_rejects_empty_results_and_bad_benchmark():
+    p = _payload()
+    p["results"] = []
+    with pytest.raises(ValueError, match="empty"):
+        validate_payload(p)
+    p = _payload()
+    p["benchmark"] = "other"
+    with pytest.raises(ValueError):
+        validate_payload(p)
+
+
+def test_current_bench_file_validates_if_present():
+    """The committed BENCH_fl_scale.json must always satisfy the schema."""
+    path = ROOT / "BENCH_fl_scale.json"
+    if not path.exists():
+        pytest.skip("no committed bench file")
+    validate_payload(json.loads(path.read_text()))
+
+
+def test_rejects_malformed_profile():
+    p = _payload()
+    del p["profiles"]["8"]["phase_split"]["policy"]
+    with pytest.raises(ValueError, match="policy"):
+        validate_payload(p)

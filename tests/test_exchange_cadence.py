@@ -1,0 +1,228 @@
+"""Bounded-staleness exchange cadence (``RoundSchedule.exchange_every=k``):
+the batched/fused/mesh engines under a k-sub-round cadence must match a
+sequential-oracle run with the SAME cadence — selections and per-client
+round counts identical, validation histories to float precision — for
+k ∈ {1, 2, 5}, on homogeneous AND cohort populations, and k=1 must stay
+bit-identical to today's per-sub-round exchange (the default schedule).
+
+The mesh-built runs fall back to the single-device path under plain
+tier-1 (1 local device) and exercise genuine sharded cadence under the CI
+mesh-parity step's forced 4-device host; the subprocess tests in
+test_mesh_federation.py additionally pin an 8-device mesh.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import mesh_federation as MF
+from repro.core.federation import Callback, Federation, RoundSchedule
+from repro.core.hfl import FederatedClient, HFLConfig
+from repro.core.policies import (AlphaBlend, AlwaysSwitch, ArgminSelection,
+                                 FederationPolicies, MaxStaleness)
+
+KS = (1, 2, 5)
+
+
+def _mk_clients(cfg, C=8, nf=2, n=60, seed0=100):
+    out = []
+    for i in range(C):
+        rng = np.random.default_rng(seed0 + i)
+        mk = lambda m: (rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"c{i}", nf, cfg, mk(n), mk(40), mk(40),
+                                   jax.random.PRNGKey(i)))
+    return out
+
+
+def _mk_hetero(cfg, seed0=100):
+    """Two cohorts (sizes 4 + 4 — divisible by the CI step's 4-device
+    mesh): nf=2 with 3 sub-rounds and nf=3 with 4 sub-rounds per epoch."""
+    out = []
+    spec = [(2, 60)] * 4 + [(3, 80)] * 4
+    for i, (nf, n) in enumerate(spec):
+        rng = np.random.default_rng(seed0 + i)
+        mk = lambda m, nf=nf: (
+            rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+            rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+            rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"c{i}", nf, cfg, mk(n), mk(40), mk(40),
+                                   jax.random.PRNGKey(i)))
+    return out
+
+
+def _assert_oracle_parity(h_seq, h_eng, *, exact_val=False):
+    assert set(h_seq) == set(h_eng)
+    for n in h_seq:
+        assert h_seq[n]["selections"] == h_eng[n]["selections"]
+        assert h_seq[n]["rounds"] == h_eng[n]["rounds"]
+        if exact_val:
+            np.testing.assert_array_equal(h_seq[n]["val"], h_eng[n]["val"])
+        else:
+            np.testing.assert_allclose(h_seq[n]["val"], h_eng[n]["val"],
+                                       rtol=1e-6, atol=1e-7)
+
+
+class _RoundCounter(Callback):
+    def __init__(self):
+        self.rounds = []
+
+    def on_round(self, fed, epoch, rnd):
+        self.rounds.append((epoch, rnd))
+
+
+# ---------------------------------------------------------------------------
+# RoundSchedule surface
+# ---------------------------------------------------------------------------
+
+def test_round_schedule_validates_cadence():
+    with pytest.raises(ValueError, match="exchange_every"):
+        RoundSchedule(2, 20, exchange_every=0)
+    s = RoundSchedule(2, 20, exchange_every=2)
+    np.testing.assert_array_equal(s.exchange_mask(5),
+                                  [False, True, False, True, False])
+    assert s.exchanges(5) == 2
+    assert RoundSchedule(2, 20).exchange_every == 1          # the default
+    assert RoundSchedule(2, 20).exchange_mask(3).all()
+
+
+# ---------------------------------------------------------------------------
+# Oracle parity, k ∈ {1, 2, 5}, homogeneous and cohort populations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", KS)
+@pytest.mark.parametrize("hetero", (False, True), ids=("homog", "cohort"))
+def test_cadence_matches_sequential_oracle(k, hetero):
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=k)
+    mk = _mk_hetero if hetero else _mk_clients
+    fs = Federation(mk(cfg), cfg, engine="sequential", schedule=sched)
+    h_seq = fs.fit()
+    fb = Federation(mk(cfg), cfg, engine="batched", schedule=sched)
+    h_bat = fb.fit()
+    _assert_oracle_parity(h_seq, h_bat)
+    for fed in (fs, fb):
+        assert fed.dispatch_stats["exchange_every"] == k
+    assert fb.dispatch_stats["exchange_rounds"] == \
+        fs.dispatch_stats["exchange_rounds"]
+
+
+@pytest.mark.parametrize("k", KS)
+@pytest.mark.parametrize("hetero", (False, True), ids=("homog", "cohort"))
+def test_cadence_on_mesh_matches_oracle(k, hetero):
+    """The mesh engine under cadence vs the sequential oracle — genuine
+    sharded execution when the host exposes >1 device (the CI mesh step),
+    the single-device fallback otherwise; identical assertions either
+    way."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=k)
+    mk = _mk_hetero if hetero else _mk_clients
+    h_seq = Federation(mk(cfg), cfg, engine="sequential",
+                       schedule=sched).fit()
+    fm = Federation(mk(cfg), cfg, engine="batched", schedule=sched,
+                    mesh=MF.make_mesh())
+    h_mesh = fm.fit()
+    _assert_oracle_parity(h_seq, h_mesh)
+    assert fm.dispatch_stats["exchange_every"] == k
+    if MF.mesh_devices(fm._exec_mesh()) == 1:
+        assert fm.dispatch_stats["pool_bytes_gathered"] == 0
+    elif k == 1 and cfg.epochs > 0:
+        assert fm.dispatch_stats["pool_bytes_gathered"] > 0
+
+
+def test_k1_is_bit_identical_to_default_schedule():
+    """exchange_every=1 must trace the historical flat scan: bit-identical
+    validation histories and identical selections vs a run that never
+    mentions the cadence."""
+    cfg = HFLConfig(mode="hfl", epochs=4, R=20, patience=2)
+    h_default = Federation(_mk_clients(cfg), cfg, engine="batched").fit()
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=1)
+    h_k1 = Federation(_mk_clients(cfg), cfg, engine="batched",
+                      schedule=sched).fit()
+    _assert_oracle_parity(h_default, h_k1, exact_val=True)
+
+
+def test_k1_bit_identical_on_cohorts():
+    cfg = HFLConfig(mode="always", epochs=2, R=20)
+    h_default = Federation(_mk_hetero(cfg), cfg, engine="batched").fit()
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=1)
+    h_k1 = Federation(_mk_hetero(cfg), cfg, engine="batched",
+                      schedule=sched).fit()
+    _assert_oracle_parity(h_default, h_k1, exact_val=True)
+
+
+# ---------------------------------------------------------------------------
+# MaxStaleness interplay: ages tick per EXCHANGE round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", (1, 2))
+def test_cadence_rides_max_staleness(k):
+    """The cadence's defining interaction: under a bounded pool, ages count
+    exchange opportunities (not sub-rounds), so max_age keeps its meaning
+    at every k.  Oracle parity pins it."""
+    cfg = HFLConfig(mode="always", epochs=4, R=20)
+    pol = FederationPolicies(switch=AlwaysSwitch(),
+                             selection=ArgminSelection(),
+                             transfer=AlphaBlend(alpha=cfg.alpha),
+                             pool=MaxStaleness(max_age=1))
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=k)
+    h_seq = Federation(_mk_clients(cfg, C=4), cfg, engine="sequential",
+                       schedule=sched, policies=pol).fit()
+    h_bat = Federation(_mk_clients(cfg, C=4), cfg, engine="batched",
+                       schedule=sched, policies=pol).fit()
+    _assert_oracle_parity(h_seq, h_bat)
+
+
+# ---------------------------------------------------------------------------
+# Chunked path, accounting, checkpointing
+# ---------------------------------------------------------------------------
+
+def test_chunked_path_applies_cadence():
+    """Per-round callbacks force the chunked path; the cadence must gate
+    each sub-round's dispatch identically (a non-exchange round is a
+    do_federate=False dispatch) — same results as the fused run, every
+    on_round still fired."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=2)
+    h_fused = Federation(_mk_clients(cfg), cfg, engine="batched",
+                         schedule=sched).fit()
+    counter = _RoundCounter()
+    fed = Federation(_mk_clients(cfg), cfg, engine="batched",
+                     schedule=sched, callbacks=[counter])
+    h_chunk = fed.fit()
+    assert fed.dispatch_stats["path"] == "chunked"
+    assert counter.rounds == [(e, r) for e in range(3) for r in range(3)]
+    _assert_oracle_parity(h_fused, h_chunk)
+    assert fed.dispatch_stats["exchange_rounds"] == 3   # 1 of 3 rounds/epoch
+
+
+def test_exchange_accounting():
+    """dispatch_stats arithmetic: n=60/R=20 gives 3 sub-rounds per epoch, so
+    k=2 exchanges once per epoch, k=5 never; per-client round counts track
+    exchange participations; a single-device run gathers zero bytes."""
+    cfg = HFLConfig(mode="always", epochs=3, R=20)
+    for k, per_epoch in ((1, 3), (2, 1), (5, 0)):
+        sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=k)
+        fed = Federation(_mk_clients(cfg, C=4), cfg, engine="batched",
+                         schedule=sched)
+        h = fed.fit()
+        assert fed.dispatch_stats["exchange_rounds"] == 3 * per_epoch
+        assert fed.dispatch_stats["pool_bytes_gathered"] == 0
+        for n in h:
+            assert h[n]["rounds"] == 3 * per_epoch
+
+
+def test_exchange_every_round_trips_through_checkpoint(tmp_path):
+    cfg = HFLConfig(mode="always", epochs=4, R=20)
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=2)
+    h_straight = Federation(_mk_clients(cfg, C=4), cfg, engine="batched",
+                            schedule=sched).fit()
+    fed = Federation(_mk_clients(cfg, C=4), cfg, engine="batched",
+                     schedule=sched)
+    fed.fit(epochs=2)
+    fed.save(tmp_path / "ck")
+    restored = Federation.restore(tmp_path / "ck", _mk_clients(cfg, C=4))
+    assert restored.schedule.exchange_every == 2
+    h_resumed = restored.fit()
+    _assert_oracle_parity(h_straight, h_resumed, exact_val=True)

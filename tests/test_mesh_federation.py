@@ -208,10 +208,14 @@ mesh = MF.make_mesh()
 h_oracle = Federation(mk_clients(cfg), cfg, engine="batched").fit()
 fed = Federation(mk_clients(cfg), cfg, engine="batched", mesh=mesh)
 h_mesh = fed.fit()
-assert fed.dispatch_stats == {
+expect = {
     "engine": "batched", "path": "fused", "devices": 4, "cohorts": 1,
     "epochs": 3, "dispatches": 3, "dispatches_per_epoch": 1.0,
-}, fed.dispatch_stats
+    "exchange_every": 1,
+}
+assert {k: fed.dispatch_stats[k] for k in expect} == expect, \
+    fed.dispatch_stats
+assert fed.dispatch_stats["pool_bytes_gathered"] > 0, fed.dispatch_stats
 sel_identical = all(h_oracle[n]["selections"] == h_mesh[n]["selections"]
                     for n in h_oracle)
 val_identical = all(h_oracle[n]["val"] == h_mesh[n]["val"]
@@ -237,22 +241,129 @@ print("RESULT " + json.dumps({"sel_identical": sel_identical,
 """
 
 
+def _run_forced_devices(script: str, n_devices: int) -> dict:
+    """Run ``script`` in a subprocess with a forced n-device CPU host (jax
+    locks the host platform device count at first init) and return its
+    RESULT json."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    return json.loads(line[-1][len("RESULT "):])
+
+
 def test_32_clients_on_forced_4_device_mesh():
     """ISSUE 4 acceptance: with XLA_FLAGS=--xla_force_host_platform_device_
     count=4, a 32-client population runs the fused epoch on a 4-device
     `clients` mesh with selections identical to the single-device oracle,
     and Federation.save/restore round-trips the sharded state bit-exactly."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=4").strip()
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
-        + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-c", _SUBPROCESS], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-4000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
-    assert line, out.stdout
-    res = json.loads(line[-1][len("RESULT "):])
+    res = _run_forced_devices(_SUBPROCESS, 4)
     assert res == {"sel_identical": True, "val_identical": True,
                    "ck_identical": True}
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin: bounded-staleness cadence on a forced 8-device mesh —
+# comms counters shrink with exchange_every, and a checkpoint written from
+# the 8-device mesh restores bit-identically onto one device
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_8 = r"""
+import json, os, sys, tempfile
+import numpy as np
+import jax
+assert jax.device_count() == 8, jax.devices()
+from repro.core import mesh_federation as MF
+from repro.core.federation import Federation, RoundSchedule
+from repro.core.hfl import FederatedClient, HFLConfig
+
+def mk_clients(cfg, C=16, nf=2, n=60, seed0=100):
+    out = []
+    for i in range(C):
+        rng = np.random.default_rng(seed0 + i)
+        mk = lambda m: (rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=(m, nf, cfg.w)).astype(np.float32),
+                        rng.normal(size=m).astype(np.float32))
+        out.append(FederatedClient(f"h{i:03d}", nf, cfg, mk(n), mk(40),
+                                   mk(40), jax.random.PRNGKey(i)))
+    return out
+
+cfg = HFLConfig(mode="always", epochs=2, R=20)   # n=60 -> 3 sub-rounds
+mesh = MF.make_mesh()
+res, stats = {}, {}
+for k in (1, 2):
+    sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=k)
+    fed = Federation(mk_clients(cfg), cfg, engine="batched",
+                     schedule=sched, mesh=mesh)
+    h_mesh = fed.fit()
+    stats[k] = fed.dispatch_stats
+    h_or = Federation(mk_clients(cfg), cfg, engine="batched",
+                      schedule=sched).fit()
+    res[f"sel_identical_k{k}"] = all(
+        h_or[n]["selections"] == h_mesh[n]["selections"] for n in h_or)
+    res[f"rounds_identical_k{k}"] = all(
+        h_or[n]["rounds"] == h_mesh[n]["rounds"] for n in h_or)
+    res[f"val_close_k{k}"] = all(
+        np.allclose(h_or[n]["val"], h_mesh[n]["val"], rtol=1e-6, atol=1e-7)
+        for n in h_or)
+res["devices_8"] = stats[1]["devices"] == 8
+# comms counters: k=2 exchanges 1 of 3 sub-rounds per epoch (vs 3) and
+# gathers proportionally fewer bytes
+res["exchange_rounds"] = [stats[1]["exchange_rounds"],
+                          stats[2]["exchange_rounds"]]
+res["counters_shrink"] = (
+    stats[2]["exchange_rounds"] < stats[1]["exchange_rounds"]
+    and 0 < stats[2]["pool_bytes_gathered"] < stats[1]["pool_bytes_gathered"]
+    and stats[1]["exchange_rounds"] == cfg.epochs * 3
+    and stats[2]["exchange_rounds"] == cfg.epochs * 1)
+
+# 8-device save -> 1-device (no-mesh) restore, bit-identical continuation
+sched = RoundSchedule(cfg.epochs, cfg.R, exchange_every=2)
+with tempfile.TemporaryDirectory() as d:
+    ck = os.path.join(d, "ck")
+    h_straight = Federation(mk_clients(cfg), cfg, engine="batched",
+                            schedule=sched, mesh=mesh).fit()
+    fed2 = Federation(mk_clients(cfg), cfg, engine="batched",
+                      schedule=sched, mesh=mesh)
+    fed2.fit(epochs=1)
+    fed2.save(ck)
+    manifest = json.load(open(os.path.join(ck, "manifest.json")))
+    restored = Federation.restore(ck, mk_clients(cfg))   # no mesh: 1 device
+    h_resumed = restored.fit()
+    res["manifest_cadence"] = (
+        manifest["schedule"]["exchange_every"] == 2
+        and manifest["mesh_devices"] == 8
+        and restored.schedule.exchange_every == 2)
+    res["ck_identical"] = all(
+        h_straight[n]["val"] == h_resumed[n]["val"]
+        and h_straight[n]["selections"] == h_resumed[n]["selections"]
+        and h_straight[n]["best_val"] == h_resumed[n]["best_val"]
+        for n in h_straight)
+
+print("RESULT " + json.dumps(res))
+"""
+
+
+def test_cadence_comms_and_restore_on_forced_8_device_mesh():
+    """ISSUE 6 acceptance: on a forced 8-virtual-device mesh, dispatch_stats
+    comms counters shrink as exchange_every grows (fewer exchange rounds,
+    fewer pool bytes gathered), selections stay identical to the 1-device
+    oracle at every cadence, and a checkpoint saved from the 8-device mesh
+    restores bit-identically onto a single device."""
+    res = _run_forced_devices(_SUBPROCESS_8, 8)
+    assert res["devices_8"], res
+    assert res["counters_shrink"], res
+    assert res["manifest_cadence"], res
+    assert res["ck_identical"], res
+    for k in (1, 2):
+        assert res[f"sel_identical_k{k}"], res
+        assert res[f"rounds_identical_k{k}"], res
+        assert res[f"val_close_k{k}"], res

@@ -1,0 +1,185 @@
+"""Sharded-vs-replicated Eq.-7 selection: the client-sharded engine's
+per-device argmin + merge must equal ``jnp.argmin`` on the full error
+matrix — including exact score ties and fully-stale (all-``inf``) pools.
+
+THE PINNED TIE-BREAK RULE: ties resolve to the LOWEST flat pool index —
+``jnp.argmin``'s first occurrence.  The sharded reduce preserves it by
+construction: each device's local argmin is the first occurrence within
+its contiguous chunk, chunk offsets grow with device index, and
+``merge_sharded_argmin`` takes the smallest global index among the chunks
+achieving the global minimum.  A fully-``inf`` row (every candidate
+excluded or stale) reduces to index 0 on both paths; the engine masks
+those selections to -1 via ``any_valid`` before they are ever logged, so
+the index is never observable — but the reduce must still agree, because
+it runs unconditionally inside the scan.
+
+These tests exercise the reduce as pure functions (chunking a host matrix
+exactly the way ``_policy_round_body`` slices the flattened pool), so they
+pin the semantics on every device count without needing a mesh; the
+subprocess tests in test_mesh_federation.py pin the same rule end-to-end
+on genuine 4- and 8-device meshes.  Hypothesis broadens the sweep when
+installed; the seeded sweeps below always run.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.federation import merge_sharded_argmin, shard_argmin
+
+
+def _sharded_select(errs: np.ndarray, D: int) -> np.ndarray:
+    """Reference driver: split (nf, ns) column-wise into D contiguous
+    chunks — exactly `_policy_round_body`'s dynamic slices — reduce each
+    with shard_argmin, merge with merge_sharded_argmin."""
+    nf, ns = errs.shape
+    assert ns % D == 0
+    chunk = ns // D
+    vals, gidx = [], []
+    for d in range(D):
+        lv, gi = shard_argmin(jnp.asarray(errs[:, d * chunk:(d + 1) * chunk]),
+                              d * chunk)
+        vals.append(lv)
+        gidx.append(gi)
+    return np.asarray(merge_sharded_argmin(jnp.stack(vals), jnp.stack(gidx),
+                                           ns))
+
+
+def _assert_matches_replicated(errs: np.ndarray, D: int):
+    expect = np.argmin(errs, axis=1)
+    got = _sharded_select(errs, D)
+    np.testing.assert_array_equal(got, expect, err_msg=f"D={D}")
+
+
+@pytest.mark.parametrize("D", (1, 2, 4, 8))
+def test_random_matrices_match_replicated_argmin(D):
+    rng = np.random.default_rng(0)
+    for nf, ns in ((1, 8), (2, 16), (3, 24), (4, 64)):
+        for _ in range(20):
+            errs = rng.normal(size=(nf, ns)).astype(np.float32)
+            _assert_matches_replicated(errs, D)
+
+
+@pytest.mark.parametrize("D", (2, 4))
+def test_exact_ties_resolve_to_lowest_flat_index(D):
+    """Duplicated minima — within a chunk, straddling chunk boundaries, and
+    on every position — must select the lowest flat index, like argmin."""
+    rng = np.random.default_rng(1)
+    nf, ns = 2, 16
+    for _ in range(50):
+        errs = rng.normal(size=(nf, ns)).astype(np.float32)
+        # plant an exact duplicate of the row minimum at 2 extra positions
+        for f in range(nf):
+            j = int(np.argmin(errs[f]))
+            dup = rng.choice(ns, size=2, replace=False)
+            errs[f, dup] = errs[f, j]
+        _assert_matches_replicated(errs, D)
+    # exhaustive two-way ties across every position pair
+    for a in range(ns):
+        for b in range(a + 1, ns):
+            errs = np.ones((1, ns), np.float32)
+            errs[0, [a, b]] = -1.0
+            got = _sharded_select(errs, D)
+            assert got[0] == a
+
+
+@pytest.mark.parametrize("D", (1, 2, 4))
+def test_fully_stale_pool_reduces_to_index_zero(D):
+    """An all-inf row (everything excluded/stale) is degenerate on both
+    paths: jnp.argmin gives 0, and the merge must too (inf == inf, so the
+    achieves-mask is all-True and the min global index is 0).  The engine
+    never logs this index — any_valid masks the selection to -1."""
+    errs = np.full((3, 8), np.inf, np.float32)
+    _assert_matches_replicated(errs, D)
+    # one finite entry among inf: that entry wins on every device count
+    errs[1, 5] = 0.0
+    got = _sharded_select(errs, D)
+    assert got[1] == 5 and got[0] == 0 and got[2] == 0
+
+
+def test_constant_rows_tie_everywhere():
+    errs = np.zeros((2, 12), np.float32)
+    for D in (1, 2, 3, 4, 6):
+        np.testing.assert_array_equal(_sharded_select(errs, D), [0, 0])
+
+
+def test_chunk_scoring_equals_full_sweep_slice():
+    """The kernel-level guarantee the sharded path leans on: scoring a
+    contiguous pool chunk is BITWISE the corresponding column slice of the
+    full Eq.-7 sweep (row independence)."""
+    from repro.core import networks as N
+    from repro.kernels.pool_mlp import ops
+    from repro.sharding import spec as S
+    import jax
+
+    rng = np.random.default_rng(2)
+    nf, C, R, w = 2, 4, 10, 5
+    ns = C * nf
+    heads = [S.materialize(N.hfl_schema(nf, w), jax.random.PRNGKey(i))["heads"]
+             for i in range(C)]
+    # flatten per-client (nf, ...) head trees into one (ns, ...) pool tree
+    pool = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *heads)
+    xd = jnp.asarray(rng.normal(size=(nf, R, w)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=R).astype(np.float32))
+    full = np.asarray(ops.pool_mlp_errors_features(pool, xd, y))
+    for D in (2, 4):
+        chunk = ns // D
+        for d in range(D):
+            piece = jax.tree_util.tree_map(
+                lambda p: p[d * chunk:(d + 1) * chunk], pool)
+            got = np.asarray(ops.pool_mlp_errors_shard(piece, xd, y))
+            np.testing.assert_array_equal(
+                got, full[:, d * chunk:(d + 1) * chunk])
+    # masked variant: invalid rows come back +inf, valid rows bit-equal
+    valid = np.ones(ns, bool)
+    valid[3] = valid[6] = False
+    masked_full = np.asarray(ops.pool_mlp_errors_features_masked(
+        pool, xd, y, jnp.asarray(valid)))
+    for d in range(2):
+        chunk = ns // 2
+        piece = jax.tree_util.tree_map(
+            lambda p: p[d * chunk:(d + 1) * chunk], pool)
+        got = np.asarray(ops.pool_mlp_errors_shard(
+            piece, xd, y, jnp.asarray(valid[d * chunk:(d + 1) * chunk])))
+        np.testing.assert_array_equal(
+            got, masked_full[:, d * chunk:(d + 1) * chunk])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: the same property over generated matrices (skip offline)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @st.composite
+    def _err_matrices(draw):
+        nf = draw(st.integers(1, 3))
+        chunk = draw(st.integers(1, 6))
+        D = draw(st.sampled_from([1, 2, 4]))
+        ns = chunk * D
+        vals = draw(st.lists(
+            st.floats(-10, 10, allow_nan=False, width=32)
+            | st.just(float("inf")),
+            min_size=nf * ns, max_size=nf * ns))
+        errs = np.asarray(vals, np.float32).reshape(nf, ns)
+        # force ties: copy each row's min to a drawn set of positions
+        for f in range(nf):
+            if np.isfinite(errs[f]).any():
+                j = int(np.nanargmin(errs[f]))
+                n_dup = draw(st.integers(0, ns - 1))
+                dups = draw(st.permutations(range(ns)))[:n_dup]
+                errs[f, list(dups)] = errs[f, j]
+        return errs, D
+
+    @settings(max_examples=200, deadline=None)
+    @given(_err_matrices())
+    def test_property_sharded_equals_replicated(case):
+        errs, D = case
+        _assert_matches_replicated(errs, D)
