@@ -44,6 +44,18 @@ oracle remains the only other engine that can run it at all.  Those rows
 are tagged ``hetero: true`` and carry the cohort count, and their
 speedup-vs-sequential column is computed within the hetero pair.
 
+``--population-size N`` adds a SAMPLED-PARTICIPATION row per cadence: a
+lazy ``tensor_population`` of N clients (declared in O(N) metadata — no
+tensors materialize until sampled) trained through
+`repro.core.participation.ParticipatingFederation`, with ``--fraction`` /
+``--participation {uniform,weighted,stratified}`` / ``--waves`` shaping
+the policy.  Those rows report the POPULATION columns every row now
+carries: ``population`` (total declared clients), ``participation_fraction``,
+``resident_clients`` and ``resident_state_bytes`` (the peak device-resident
+learnable state — the bounded-working-set meter; full-population rows
+report their own C / 1.0 / C / state_bytes).  This is how the 100k-client
+row in BENCH_fl_scale.json is produced.
+
 Besides the CSV on stdout, writes a machine-readable ``BENCH_fl_scale.json``
 at the repo root (``--out`` to redirect, ``--out ""`` to disable;
 :func:`validate_payload` pins its schema, and CI smoke-runs a tiny sweep
@@ -187,6 +199,65 @@ def bench(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
         "exchange_every": dispatch.get("exchange_every", 1),
         "exchange_rounds": dispatch.get("exchange_rounds", 0),
         "pool_bytes_gathered": dispatch.get("pool_bytes_gathered", 0),
+        # full-population run: everyone is resident every round
+        "population": C,
+        "participation_fraction": 1.0,
+        "resident_clients": C,
+        "resident_state_bytes": int(dispatch.get("state_bytes", 0)),
+    }
+
+
+_PARTICIPATIONS = {"uniform": "UniformParticipation",
+                   "weighted": "WeightedParticipation",
+                   "stratified": "StratifiedParticipation"}
+
+
+def _run_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
+    from repro.core import participation as PT
+    from repro.core.experiment import tensor_population
+
+    pop = tensor_population(args.population_size, cfg, seed=0,
+                            nf_choices=(args.nf,), n_train=n,
+                            n_eval=2 * cfg.R,
+                            weighted_sizes=args.participation == "weighted")
+    policy_cls = getattr(PT, _PARTICIPATIONS[args.participation])
+    pf = PT.ParticipatingFederation(
+        pop, cfg,
+        participation=policy_cls(fraction=args.fraction, min_clients=2),
+        schedule=RoundSchedule(args.waves, cfg.R,
+                               exchange_every=exchange_every))
+    t0 = time.perf_counter()
+    pf.fit()
+    elapsed = time.perf_counter() - t0
+    st = pf.dispatch_stats
+    # throughput counts TRAIN sub-rounds (k-independent), same as bench():
+    # each resident client trains sub_rounds-per-epoch rounds per wave
+    sub = RoundSchedule(1, cfg.R).sub_rounds(n)
+    train_rounds = sum(len(w["active"]) * sub for w in pf.wave_log)
+    return elapsed, args.waves * sub, train_rounds, st
+
+
+def bench_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
+    """One sampled-participation row: warmup run (compile — the stratified
+    sampler keeps every wave's cohort geometry identical, so one warmup
+    covers all waves), then the measured run."""
+    _run_sampled(args, cfg, n, exchange_every)                    # warmup
+    elapsed, sub_rounds, train_rounds, st = _run_sampled(
+        args, cfg, n, exchange_every)
+    return {
+        "round_ms": 1e3 * elapsed / sub_rounds,
+        "client_rounds_per_s": train_rounds / elapsed,
+        "dispatches_per_epoch": st["dispatches_per_epoch"],
+        "dispatch_path": st["path"],
+        "devices": st["devices"],
+        "cohorts": st["cohorts"],
+        "exchange_every": st["exchange_every"],
+        "exchange_rounds": st["exchange_rounds"],
+        "pool_bytes_gathered": st["pool_bytes_gathered"],
+        "population": st["population"],
+        "participation_fraction": st["participation_fraction"],
+        "resident_clients": st["resident_clients"],
+        "resident_state_bytes": st["resident_state_bytes"],
     }
 
 
@@ -275,6 +346,10 @@ def validate_payload(payload: dict) -> None:
     need(payload["config"], "clients", list, "config")
     need(payload["config"], "engines", list, "config")
     need(payload["config"], "exchange_every", list, "config")
+    need(payload["config"], "population_size", (int, type(None)), "config")
+    need(payload["config"], "fraction", (int, float, type(None)), "config")
+    need(payload["config"], "participation", (str, type(None)), "config")
+    need(payload["config"], "waves", (int, type(None)), "config")
     if not all(isinstance(k, int) and k >= 1
                for k in payload["config"]["exchange_every"]):
         raise ValueError("config[exchange_every]: expected a list of "
@@ -295,9 +370,20 @@ def validate_payload(payload: dict) -> None:
         need(r, "exchange_every", int, where)
         need(r, "exchange_rounds", int, where)
         need(r, "pool_bytes_gathered", int, where)
+        need(r, "population", int, where)
+        need(r, "participation_fraction", (int, float), where)
+        need(r, "resident_clients", int, where)
+        need(r, "resident_state_bytes", int, where)
         if r["exchange_every"] < 1:
             raise ValueError(f"{where}[exchange_every]: must be >= 1, "
                              f"got {r['exchange_every']}")
+        if not 0 < r["participation_fraction"] <= 1:
+            raise ValueError(f"{where}[participation_fraction]: must be in "
+                             f"(0, 1], got {r['participation_fraction']}")
+        if r["resident_clients"] > r["population"]:
+            raise ValueError(f"{where}: resident_clients "
+                             f"{r['resident_clients']} exceeds population "
+                             f"{r['population']}")
         need(r, "speedup_vs_sequential", (int, float, type(None)), where)
     for key, p in payload.get("profiles", {}).items():
         where = f"profiles[{key!r}]"
@@ -310,6 +396,27 @@ def validate_payload(payload: dict) -> None:
         need(p, "phase_split", dict, where)
         for k in ("train", "policy", "eval"):
             need(p["phase_split"], k, (int, float), f"{where}[phase_split]")
+
+
+def _record(C, label, het, r, speedup):
+    return {
+        "clients": C, "engine": label,
+        "hetero": het,
+        "cohorts": r["cohorts"],
+        "devices": r["devices"],
+        "exchange_every": r["exchange_every"],
+        "exchange_rounds": r["exchange_rounds"],
+        "pool_bytes_gathered": r["pool_bytes_gathered"],
+        "population": r["population"],
+        "participation_fraction": r["participation_fraction"],
+        "resident_clients": r["resident_clients"],
+        "resident_state_bytes": r["resident_state_bytes"],
+        "round_ms": r["round_ms"],
+        "client_rounds_per_s": r["client_rounds_per_s"],
+        "dispatches_per_epoch": r["dispatches_per_epoch"],
+        "dispatch_path": r["dispatch_path"],
+        "speedup_vs_sequential":
+            None if speedup != speedup else speedup}
 
 
 def main():
@@ -342,6 +449,19 @@ def main():
                          "exchange heads every k-th sub-round "
                          "(RoundSchedule.exchange_every); sequential rows "
                          "run only at k=1, the speedup baseline")
+    ap.add_argument("--population-size", type=int, default=None,
+                    help="also bench a sampled-participation row: a lazy "
+                         "N-client tensor population trained through "
+                         "ParticipatingFederation (see --fraction / "
+                         "--participation / --waves)")
+    ap.add_argument("--fraction", type=float, default=0.001,
+                    help="participation fraction per wave for "
+                         "--population-size rows")
+    ap.add_argument("--participation", default="stratified",
+                    choices=sorted(_PARTICIPATIONS),
+                    help="sampling policy for --population-size rows")
+    ap.add_argument("--waves", type=int, default=2,
+                    help="participation waves for --population-size rows")
     ap.add_argument("--max-seq-clients", type=int, default=None,
                     help="skip the sequential oracle above this client "
                          "count (its per-client Python loop dominates the "
@@ -381,7 +501,8 @@ def main():
     profiles = {}
     print("clients,engine,hetero,exchange_every,devices,cohorts,round_ms,"
           "client_rounds_per_s,dispatches_per_epoch,exchange_rounds,"
-          "pool_bytes_gathered,speedup_vs_sequential")
+          "pool_bytes_gathered,population,participation_fraction,"
+          "resident_clients,speedup_vs_sequential")
     for C in counts:
         rows = {}
         for k in ks:
@@ -417,21 +538,10 @@ def main():
                       f"{r['client_rounds_per_s']:.1f},"
                       f"{r['dispatches_per_epoch']:.1f},"
                       f"{r['exchange_rounds']},{r['pool_bytes_gathered']},"
+                      f"{r['population']},{r['participation_fraction']},"
+                      f"{r['resident_clients']},"
                       f"{speedup:.2f}", flush=True)
-                records.append({
-                    "clients": C, "engine": label,
-                    "hetero": het,
-                    "cohorts": r["cohorts"],
-                    "devices": r["devices"],
-                    "exchange_every": r["exchange_every"],
-                    "exchange_rounds": r["exchange_rounds"],
-                    "pool_bytes_gathered": r["pool_bytes_gathered"],
-                    "round_ms": r["round_ms"],
-                    "client_rounds_per_s": r["client_rounds_per_s"],
-                    "dispatches_per_epoch": r["dispatches_per_epoch"],
-                    "dispatch_path": r["dispatch_path"],
-                    "speedup_vs_sequential":
-                        None if speedup != speedup else speedup})
+                records.append(_record(C, label, het, r, speedup))
         if args.profile:
             p = profile_phases(C, cfg, args.nf, n, args.population)
             profiles[str(C)] = p
@@ -442,6 +552,21 @@ def main():
                   f"split train {100 * s['train']:.0f}% / "
                   f"policy {100 * s['policy']:.0f}% / "
                   f"eval {100 * s['eval']:.0f}%", file=sys.stderr)
+    if args.population_size:
+        # sampled-participation rows: population >> resident working set;
+        # engine label comes from dispatch_stats ("participating+batched")
+        for k in ks:
+            r = bench_sampled(args, cfg, n, k)
+            label = f"participating+{args.participation}"
+            print(f"{r['resident_clients']},{label},0,{k},{r['devices']},"
+                  f"{r['cohorts']},{r['round_ms']:.2f},"
+                  f"{r['client_rounds_per_s']:.1f},"
+                  f"{r['dispatches_per_epoch']:.1f},"
+                  f"{r['exchange_rounds']},{r['pool_bytes_gathered']},"
+                  f"{r['population']},{r['participation_fraction']},"
+                  f"{r['resident_clients']},nan", flush=True)
+            records.append(_record(r["resident_clients"], label, False, r,
+                                   float("nan")))
     if args.out:
         payload = {
             "benchmark": "fl_scale",
@@ -455,7 +580,14 @@ def main():
                        "mesh": bool(args.mesh),
                        "hetero": bool(args.hetero),
                        "clients": counts, "engines": engines,
-                       "exchange_every": ks},
+                       "exchange_every": ks,
+                       "population_size": args.population_size,
+                       "fraction": args.fraction if args.population_size
+                       else None,
+                       "participation": args.participation
+                       if args.population_size else None,
+                       "waves": args.waves if args.population_size
+                       else None},
             "results": records,
         }
         if profiles:

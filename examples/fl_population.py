@@ -13,8 +13,19 @@ the command line:
   --selection softmax --temperature 0.5     # softmax-weighted selection
   --selection topk --k 3                    # uniform over the 3 best heads
   --max-staleness 4                         # hide pool entries older than 4
-  --participation 0.5                       # Bernoulli partial participation
+  --switch-prob 0.5                         # Bernoulli per-epoch switching
   --exchange-every 2                        # pool exchange every 2 sub-rounds
+
+``--population N`` switches to SAMPLED PARTICIPATION over a lazily
+declared N-hospital population (`repro.core.participation`): only each
+wave's sampled clients ever materialize or occupy the device, everyone
+else lives in the host-side ClientStore, and the head pool carries
+knowledge across waves.  ``--fraction`` sets the per-wave sample and
+``--participation {uniform,weighted,stratified}`` picks the sampling
+policy (stratified keeps each wave's cohort geometry identical, so wave
+2+ reuses wave 1's compiled epoch).  ``--epochs`` then counts WAVES:
+
+  --population 100000 --fraction 0.0003 --participation stratified
 
 With ``--engine batched`` (default) every Adam step is vmapped across
 hospitals and each federated opportunity runs as ONE fused selection+blend
@@ -61,15 +72,69 @@ def build_policies(args, cfg) -> FederationPolicies:
         pol = dataclasses.replace(pol, selection=TopKSelection(args.k))
     if args.max_staleness is not None:
         pol = dataclasses.replace(pol, pool=MaxStaleness(args.max_staleness))
-    if args.participation is not None:
-        pol = dataclasses.replace(pol, switch=ProbSwitch(args.participation))
+    if args.switch_prob is not None:
+        pol = dataclasses.replace(pol, switch=ProbSwitch(args.switch_prob))
     return pol
 
 
 def _policy_flags_customized(args) -> bool:
     return (args.selection != "mode" or args.mode != "hfl"
             or args.max_staleness is not None
-            or args.participation is not None)
+            or args.switch_prob is not None)
+
+
+_PARTICIPATIONS = {"uniform": "UniformParticipation",
+                   "weighted": "WeightedParticipation",
+                   "stratified": "StratifiedParticipation"}
+
+
+def run_sampled(args, mesh):
+    """--population N: sampled partial participation over a lazy population
+    (repro.core.participation) — the resident working set is the WAVE, not
+    the population."""
+    from repro.core import participation as PT
+    from repro.core.experiment import lazy_hetero_population
+
+    cfg = HFLConfig(epochs=args.epochs, mode=args.mode, R=20)
+    nf_choices = tuple(int(x) for x in args.nf_choices.split(","))
+    pop = lazy_hetero_population(
+        args.population, cfg, n_patients=args.patients,
+        n_events=args.events, nf_choices=nf_choices,
+        weighted_sizes=args.participation == "weighted")
+    if args.resume:
+        if not args.save_dir:
+            raise SystemExit("--resume requires --save-dir")
+        pf = PT.ParticipatingFederation.restore(args.save_dir, pop,
+                                                mesh=mesh)
+        print(f"== resumed {args.population}-hospital sampled federation "
+              f"at wave {pf.wave} ==")
+        t0 = time.time()
+        pf.fit(waves=pf.wave + args.epochs, verbose=args.verbose)
+    else:
+        policy_cls = getattr(PT, _PARTICIPATIONS[args.participation])
+        pf = PT.ParticipatingFederation(
+            pop, cfg, policies=build_policies(args, cfg),
+            participation=policy_cls(fraction=args.fraction, min_clients=2),
+            schedule=RoundSchedule(args.epochs, cfg.R,
+                                   exchange_every=args.exchange_every),
+            mesh=mesh)
+        print(f"== {args.population}-hospital population, "
+              f"{args.participation} participation "
+              f"(fraction={args.fraction}), {args.epochs} waves ==")
+        t0 = time.time()
+        pf.fit(verbose=args.verbose)
+    wall = time.time() - t0
+    st = pf.dispatch_stats
+    print(f"=> {st['waves']} waves x {st['resident_clients']} resident "
+          f"clients of {st['population']:,} declared; device working set "
+          f"{st['resident_state_bytes'] / 1e6:.1f}MB, store "
+          f"{st['store_clients']} clients / {st['store_bytes'] / 1e6:.1f}MB "
+          f"host-side, gathered {st['gather_bytes'] / 1e6:.1f}MB in "
+          f"{wall:.1f}s")
+    if args.save_dir:
+        pf.save(args.save_dir)
+        print(f"=> sampled federation checkpointed to {args.save_dir} "
+              f"(restore with --resume)")
 
 
 def main():
@@ -91,8 +156,19 @@ def main():
     ap.add_argument("--k", type=int, default=3)
     ap.add_argument("--max-staleness", type=int, default=None,
                     help="hide pool entries unrefreshed for this many rounds")
-    ap.add_argument("--participation", type=float, default=None,
-                    help="Bernoulli(p) per-epoch participation switch")
+    ap.add_argument("--switch-prob", type=float, default=None,
+                    help="Bernoulli(p) per-epoch switching policy "
+                         "(ProbSwitch; previously spelled --participation)")
+    ap.add_argument("--population", type=int, default=None,
+                    help="declare this many hospitals LAZILY and train by "
+                         "sampled participation (repro.core.participation) "
+                         "— --epochs counts waves; see --fraction / "
+                         "--participation")
+    ap.add_argument("--fraction", type=float, default=0.1,
+                    help="participation fraction per wave (--population)")
+    ap.add_argument("--participation", default="stratified",
+                    choices=sorted(_PARTICIPATIONS),
+                    help="wave sampling policy for --population runs")
     ap.add_argument("--mesh", action="store_true",
                     help="client-shard the batched engine over all local "
                          "devices (docs/SCALING.md; falls back to the "
@@ -119,6 +195,9 @@ def main():
     if args.mesh:
         from repro.core.mesh_federation import make_mesh
         mesh = make_mesh()
+    if args.population:
+        run_sampled(args, mesh)
+        return
     cfg = HFLConfig(epochs=args.epochs, mode=args.mode, R=20)
     if args.hetero:
         nf_choices = tuple(int(x) for x in args.nf_choices.split(","))
@@ -137,7 +216,7 @@ def main():
         if _policy_flags_customized(args):
             print("note: --resume continues with the CHECKPOINTED policy "
                   "bundle; --mode/--selection/--max-staleness/"
-                  "--participation are ignored", file=sys.stderr)
+                  "--switch-prob are ignored", file=sys.stderr)
         fed = Federation.restore(args.save_dir, clients,
                                  engine=args.engine, callbacks=[metrics],
                                  mesh=mesh)

@@ -153,6 +153,23 @@ def plan_cohorts(clients: Sequence[FederatedClient], R: int) -> CohortPlan:
                       nfs=nfs, n_subs=tuple(n_subs))
 
 
+def nf_strata(nfs: Sequence[int]) -> "OrderedDict[int, np.ndarray]":
+    """Group population indices by feature count, in ascending-nf order —
+    the stratification key the participation sampler uses.
+
+    nf is a cheap METADATA proxy for the full cohort key (which also folds
+    in split shapes that only exist once clients are materialized): every
+    cohort of a sampled wave lies inside one nf stratum, so per-stratum
+    sample counts sized to a mesh multiple keep every wave cohort
+    mesh-divisible, and fixed per-stratum counts keep the per-wave
+    ``CohortPlan`` geometry static across waves (compile-cache hits
+    instead of a recompile per wave)."""
+    from collections import OrderedDict
+    nfs = np.asarray(nfs)
+    return OrderedDict((int(nf), np.flatnonzero(nfs == nf))
+                       for nf in np.unique(nfs))
+
+
 # ---------------------------------------------------------------------------
 # Padded union pool
 # ---------------------------------------------------------------------------
@@ -577,6 +594,10 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         pol.selection) if fed._exec_mesh() is not None else 0
 
     histories = [list(c.val_history) for c in clients]
+    # device-resident learnable state across all cohorts (the participation
+    # orchestrator's gather/scatter unit and bounded-working-set meter)
+    state_bytes = sum(_tree_bytes((p, o, bp)) for p, o, bp in
+                      zip(params_t, opt_t, best_params_t))
     n_rounds = np.zeros(C, np.int64)
     base_rounds = dict(fed.n_rounds)
     key = fed._key
@@ -740,6 +761,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         "dispatches_per_epoch": n_dispatch / n_epochs,
         "exchange_every": k_ex,
         "exchange_rounds": exchange_rounds,
-        "pool_bytes_gathered": pool_bytes}
+        "pool_bytes_gathered": pool_bytes,
+        "state_bytes": state_bytes}
     sync()
     fed._sync = None

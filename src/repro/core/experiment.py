@@ -307,6 +307,103 @@ def hetero_population_clients(n_clients: int, cfg: HFLConfig, seed: int = 0,
     return clients, packs
 
 
+def lazy_hetero_population(n_clients: int, cfg: HFLConfig, seed: int = 0,
+                           n_patients: int = 8, n_events: int = 400,
+                           nf_choices: Sequence[int] = (3, 4, 5),
+                           split_caps: Tuple[int, int, int] = (160, 40, 40),
+                           weighted_sizes: bool = False):
+    """A (possibly huge) mixed-nf population as a lazy
+    :class:`repro.core.participation.ClientPopulation` — nothing is
+    generated up front except the O(N) nf layout; each participation wave
+    materializes exactly its sampled hospitals through
+    :func:`repro.data.synthetic.make_hospital_at` (index-addressable, so
+    hospital 73 041 never requires hospitals 0..73 040).
+
+    Feature counts cycle ``nf_choices`` (hospital i gets
+    ``nf_choices[i % len(nf_choices)]``), giving deterministic equal-size
+    nf strata.  Splits are truncated to ``split_caps`` events so every
+    same-nf client in a wave shares one geometry (one cohort per stratum,
+    and a compile-cache hit when per-stratum sample counts repeat — use
+    ``StratifiedParticipation``); a hospital whose natural split is
+    shorter than its cap keeps its own length and degrades to a singleton
+    cohort, still correct.  Rebuilding an index in a later wave yields the
+    same data and the same fresh init key (``PRNGKey(seed + 31*i)``), the
+    :class:`~repro.core.participation.ClientStore` contract.
+
+    ``weighted_sizes`` declares per-hospital ``n_patients`` draws as
+    sampling weights for ``WeightedParticipation`` — an O(N) spec sweep at
+    declaration time, so leave it off for 10⁵-client uniform/stratified
+    runs."""
+    from repro.core.participation import ClientPopulation
+    nf_choices = tuple(int(x) for x in nf_choices)
+    nfs = np.array([nf_choices[i % len(nf_choices)]
+                    for i in range(n_clients)], np.int64)
+    caps = tuple(int(c) for c in split_caps)
+
+    def build(indices):
+        out = []
+        for i in indices:
+            data = syn.make_hospital_at(seed, int(i), int(nfs[i]),
+                                        n_patients=n_patients,
+                                        n_events=n_events)
+            p = _pack_hospital(data, cfg.w)
+            splits = tuple(tuple(a[:c] for a in p[s])
+                           for s, c in zip(("train", "valid", "test"), caps))
+            out.append(FederatedClient(p["name"], p["nf"], cfg, *splits,
+                                       jax.random.PRNGKey(seed + 31 * i)))
+        return out
+
+    sizes = syn.population_sizes_at(seed, range(n_clients), nfs) \
+        if weighted_sizes else None
+    return ClientPopulation(size=n_clients, nfs=nfs, build=build,
+                            sizes=sizes,
+                            name_of=lambda i: f"h{i:06d}")
+
+
+def tensor_population(n_clients: int, cfg: HFLConfig, seed: int = 0,
+                      nf_choices: Sequence[int] = (4,),
+                      n_train: int = 120, n_eval: int = 40,
+                      weighted_sizes: bool = False):
+    """A lazy population of deterministic random-tensor clients — the
+    synthetic-physiology-free twin of :func:`lazy_hetero_population` for
+    benchmarks and mesh runs.
+
+    Every client of one nf shares EXACTLY one geometry (no ragged splits,
+    unlike packed event streams whose lengths follow each hospital's label
+    frequency), so any stratified sample shards over a mesh whose device
+    count divides the per-stratum counts, and wave cohort plans are
+    geometry-stable.  Client i's tensors and init key depend only on
+    ``(seed, i)`` (``default_rng(seed*1000003 + i)`` /
+    ``PRNGKey(seed + 31*i)``) — the same lazy-rebuild contract as the
+    synthetic builder.  ``weighted_sizes`` declares deterministic per-client
+    weights (for ``WeightedParticipation``) without building anything."""
+    from repro.core.participation import ClientPopulation
+    nf_choices = tuple(int(x) for x in nf_choices)
+    nfs = np.array([nf_choices[i % len(nf_choices)]
+                    for i in range(n_clients)], np.int64)
+
+    def build(indices):
+        out = []
+        for i in indices:
+            nf = int(nfs[i])
+            rng = np.random.default_rng(seed * 1000003 + int(i))
+            mk = lambda m: (rng.normal(size=(m, nf, cfg.w))
+                            .astype(np.float32),
+                            rng.normal(size=(m, nf, cfg.w))
+                            .astype(np.float32),
+                            rng.normal(size=m).astype(np.float32))
+            out.append(FederatedClient(f"h{int(i):06d}", nf, cfg,
+                                       mk(n_train), mk(n_eval), mk(n_eval),
+                                       jax.random.PRNGKey(seed + 31 * i)))
+        return out
+
+    sizes = 1.0 + (np.arange(n_clients) * 2654435761 % 97) \
+        if weighted_sizes else None
+    return ClientPopulation(size=n_clients, nfs=nfs, build=build,
+                            sizes=sizes,
+                            name_of=lambda i: f"h{i:06d}")
+
+
 def run_task(target: str, label_idx: int, systems: Sequence[str],
              cfg: HFLConfig, seed: int = 0, n_patients=None,
              n_events: int = 400) -> Dict[str, Dict[str, float]]:

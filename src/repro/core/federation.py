@@ -341,7 +341,11 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                           "dispatches_per_epoch": n_dispatch / n_epochs,
                           "exchange_every": k_ex,
                           "exchange_rounds": n_exchange,
-                          "pool_bytes_gathered": 0}
+                          "pool_bytes_gathered": 0,
+                          "state_bytes": sum(
+                              _tree_bytes((c.params, c.opt_state,
+                                           c.best_params))
+                              for c in fed.clients)}
 
 
 # ---------------------------------------------------------------------------
@@ -839,6 +843,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     histories = [list(c.val_history) for c in clients]
     best_val = jnp.asarray([c.best_val for c in clients], jnp.float32)
     best_params = _stack_trees([c.best_params for c in clients])
+    # device-resident learnable state for this fit (the participation
+    # orchestrator's gather/scatter unit and its bounded-working-set meter)
+    state_bytes = (_tree_bytes(params) + _tree_bytes(opt_state)
+                   + _tree_bytes(best_params))
     n_rounds = np.zeros(C, np.int64)
     base_rounds = dict(fed.n_rounds)
     key = fed._key
@@ -964,7 +972,8 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                           "dispatches_per_epoch": n_dispatch / n_epochs,
                           "exchange_every": k_ex,
                           "exchange_rounds": exchange_rounds,
-                          "pool_bytes_gathered": pool_bytes}
+                          "pool_bytes_gathered": pool_bytes,
+                          "state_bytes": state_bytes}
     # write the final state back so the clients / pool / rng stay canonical
     sync()
     fed._sync = None

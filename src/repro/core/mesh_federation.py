@@ -124,6 +124,20 @@ def validate_mesh(mesh: Mesh, n_clients: int) -> None:
             f"divisor-sized mesh")
 
 
+def participation_multiple(mesh: Optional[Mesh]) -> int:
+    """The granularity a sampled active set must respect on this mesh: the
+    device count of a multi-device 1-D ``clients`` mesh, else 1.  The
+    participation sampler rounds its per-wave counts to this multiple —
+    and under a heterogeneous population the STRATIFIED sampler rounds
+    each nf stratum to it, since every wave cohort must itself divide the
+    device count (see :func:`validate_mesh` /
+    ``cohorts.validate_cohort_mesh``)."""
+    if mesh is None:
+        return 1
+    client_axis(mesh)
+    return mesh_devices(mesh)
+
+
 def param_pspecs(nf: int, w: int, n_clients: int, mesh: Mesh):
     """PartitionSpec tree for the stacked ``(C, ...)`` HFL parameter tree,
     derived from the ParamSpec schema: the per-client H/E/P schema is

@@ -17,6 +17,13 @@ protocol with interchangeable implementations:
     max-staleness variant that hides entries older than ``max_age``
     federated opportunities.
 
+A fifth protocol lives in :mod:`repro.core.participation`:
+``ParticipationPolicy`` — WHO is even present.  It samples the per-wave
+active subset of a (possibly huge) population before any engine runs, so
+it is host-side-only and never enters the jitted bundle below; its
+implementations register through the same :func:`register_policy` hook and
+round-trip through checkpoints like the four here.
+
 Every policy is a **frozen dataclass**: hashable, so the whole bundle can be
 a static argument to the batched engine's fused jitted round — selection /
 transfer expose *jittable* ``*_batched`` methods traced straight into the

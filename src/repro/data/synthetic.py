@@ -202,6 +202,48 @@ def make_hetero_population(n_hospitals: int, seed: int = 0,
     return out
 
 
+def population_spec_at(seed: int, h: int, nf: int = 4) -> dict:
+    """Index-addressable population spec: hospital ``h``'s observation
+    operator as a pure function of ``(seed, h)``.
+
+    ``make_population`` draws specs *sequentially* from one generator, so
+    materializing hospital h requires replaying draws 0..h-1 — fine for
+    dozens of hospitals, disqualifying for the 10⁴–10⁶-client populations
+    the participation subsystem samples from.  Here each index gets its own
+    ``SeedSequence([seed, h])``-derived stream, so any subset of a
+    100k-hospital population can be built without touching the rest.  The
+    two families draw from the same channel bank but are NOT bit-equal for
+    a given (seed, h)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, h]))
+    return population_spec(rng, nf)
+
+
+def make_hospital_at(seed: int, h: int, nf: int = 4,
+                     n_patients: int = None,
+                     n_events: int = 300) -> HospitalData:
+    """Materialize ONE hospital of the index-addressable population —
+    deterministic in ``(seed, h, nf, n_patients, n_events)`` alone, so a
+    participation wave can build exactly its sampled subset.  Names carry
+    six digits (``h000042``) to keep 100k-client populations sortable."""
+    spec = population_spec_at(seed, h, nf)
+    return make_hospital_from_spec(f"h{h:06d}", spec,
+                                   seed=seed + 7919 * (h + 1),
+                                   n_patients=n_patients, n_events=n_events)
+
+
+def population_sizes_at(seed: int, indices: Sequence[int],
+                        nfs: Sequence[int] = None) -> np.ndarray:
+    """Declared patient counts for the given population indices (the
+    ``n_patients`` field of each ``population_spec_at``) without packing any
+    data — the weighted participation sampler's size metadata.  ``nfs``
+    gives each index's feature count (the spec stream consumes nf+1 channel
+    draws before the size draw, so size depends on nf); defaults to 4."""
+    if nfs is None:
+        nfs = [4] * len(indices)
+    return np.array([population_spec_at(seed, int(h), int(nf))["n_patients"]
+                     for h, nf in zip(indices, nfs)], dtype=np.int64)
+
+
 def packed_split(data: HospitalData, split: str, w: int):
     """Concatenate packed tensors over a patient split.
     Returns (X_sparse, X_dense, y) float32 arrays."""

@@ -24,9 +24,15 @@ def _payload():
         "pool_bytes_gathered": 123456, "round_ms": 1.5,
         "client_rounds_per_s": 100.0, "dispatches_per_epoch": 1.0,
         "dispatch_path": "fused", "speedup_vs_sequential": 2.5,
+        "population": 8, "participation_fraction": 1.0,
+        "resident_clients": 8, "resident_state_bytes": 262144,
     }
     seq = dict(row, engine="sequential", devices=1, exchange_every=1,
                pool_bytes_gathered=0, speedup_vs_sequential=1.0)
+    sampled = dict(row, clients=30, engine="participating+stratified",
+                   population=100000, participation_fraction=0.0003,
+                   resident_clients=30, resident_state_bytes=58900000,
+                   speedup_vs_sequential=None)
     return {
         "benchmark": "fl_scale",
         "unix_time": 1700000000,
@@ -37,8 +43,10 @@ def _payload():
                    "mode": "always", "population": False, "mesh": True,
                    "hetero": False, "clients": [8],
                    "engines": ["sequential", "batched"],
-                   "exchange_every": [1, 2]},
-        "results": [seq, row],
+                   "exchange_every": [1, 2],
+                   "population_size": 100000, "fraction": 0.0003,
+                   "participation": "stratified", "waves": 2},
+        "results": [seq, row, sampled],
         "profiles": {"8": {"train_us_per_round": 10.0,
                            "policy_us_per_round": 20.0,
                            "eval_us_per_epoch": 5.0,
@@ -67,7 +75,10 @@ def test_round_trips_through_json():
 @pytest.mark.parametrize("key", ("exchange_every", "exchange_rounds",
                                  "pool_bytes_gathered", "clients", "engine",
                                  "devices", "hetero", "cohorts", "round_ms",
-                                 "client_rounds_per_s", "dispatch_path"))
+                                 "client_rounds_per_s", "dispatch_path",
+                                 "population", "participation_fraction",
+                                 "resident_clients",
+                                 "resident_state_bytes"))
 def test_rejects_row_with_missing_key(key):
     p = _payload()
     del p["results"][1][key]
@@ -93,6 +104,25 @@ def test_rejects_non_positive_cadence():
     p = _payload()
     p["results"][1]["exchange_every"] = 0
     with pytest.raises(ValueError, match="exchange_every"):
+        validate_payload(p)
+
+
+def test_rejects_bad_participation_fields():
+    p = _payload()
+    p["results"][2]["participation_fraction"] = 0.0
+    with pytest.raises(ValueError, match="participation_fraction"):
+        validate_payload(p)
+    p = _payload()
+    p["results"][2]["participation_fraction"] = 1.5
+    with pytest.raises(ValueError, match="participation_fraction"):
+        validate_payload(p)
+    p = _payload()
+    p["results"][2]["resident_clients"] = p["results"][2]["population"] + 1
+    with pytest.raises(ValueError, match="resident_clients"):
+        validate_payload(p)
+    p = _payload()
+    del p["config"]["population_size"]
+    with pytest.raises(ValueError, match="population_size"):
         validate_payload(p)
 
 

@@ -1,0 +1,514 @@
+"""Participation subsystem: sampled partial participation over the
+host-resident ClientStore (repro.core.participation).
+
+Pins the ISSUE-7 acceptance surface: seeded replayability (same seed ⇒
+identical participation schedule, bit-identical histories across
+save/restore), sampled-subset selections identical to the sequential
+oracle on that same subset — on the batched AND (forced-4-device
+subprocess) mesh engines, at exchange cadence k ∈ {1, 2} — and the
+bounded device working set (resident bytes scale with the sample, never
+the population)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import warnings
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cohorts
+from repro.core import mesh_federation as MF
+from repro.core.experiment import lazy_hetero_population, tensor_population
+from repro.core.federation import RoundSchedule
+from repro.core.hfl import HFLConfig
+from repro.core.participation import (ClientPopulation, ClientStore,
+                                      ParticipatingFederation,
+                                      StratifiedParticipation,
+                                      UniformParticipation,
+                                      WeightedParticipation, host_tree)
+from repro.core.policies import policy_from_spec
+from repro.data import synthetic as syn
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _cfg(**kw):
+    kw.setdefault("epochs", 3)
+    kw.setdefault("R", 10)
+    kw.setdefault("mode", "always")
+    kw.setdefault("seed", 3)
+    return HFLConfig(**kw)
+
+
+def _pop(cfg, n=12, nf_choices=(2, 3), seed=1):
+    return tensor_population(n, cfg, seed=seed, nf_choices=nf_choices,
+                             n_train=20, n_eval=10)
+
+
+def _fit(engine="batched", *, waves=3, k=1, participation=None, mesh=None,
+         sm=None, n=12, cfg=None, pop=None):
+    cfg = cfg or _cfg(epochs=waves)
+    pop = pop or _pop(cfg, n=n)
+    pf = ParticipatingFederation(
+        pop, cfg,
+        participation=participation
+        or UniformParticipation(fraction=0.5, min_clients=4),
+        schedule=RoundSchedule(waves, cfg.R, exchange_every=k),
+        engine=engine, mesh=mesh, sample_multiple=sm)
+    pf.fit()
+    return pf
+
+
+def _schedule(pf):
+    return [w["active"] for w in pf.wave_log]
+
+
+# ---------------------------------------------------------------------------
+# ParticipationPolicy units
+# ---------------------------------------------------------------------------
+
+def test_n_active_rounding():
+    p = UniformParticipation(fraction=0.1, min_clients=2)
+    assert p.n_active(100) == 10
+    assert p.n_active(10) == 2          # min_clients floor
+    assert p.n_active(1) == 1           # capped at N
+    assert p.n_active(100, multiple_of=4) == 12   # 10 rounds UP to 12
+    assert p.n_active(10, multiple_of=4) == 4
+    assert p.n_active(6, multiple_of=4) == 4      # largest multiple <= N
+    with pytest.raises(ValueError, match="shard"):
+        p.n_active(3, multiple_of=4)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="fraction"):
+        UniformParticipation(fraction=0.0)
+    with pytest.raises(ValueError, match="fraction"):
+        UniformParticipation(fraction=1.5)
+    with pytest.raises(ValueError, match="min_clients"):
+        UniformParticipation(min_clients=0)
+
+
+def test_uniform_sample_is_sorted_unique_and_seeded():
+    pop = _pop(_cfg(), n=40)
+    p = UniformParticipation(fraction=0.25, min_clients=2)
+    idx = p.sample(pop, np.random.default_rng(7))
+    assert len(idx) == 10 and len(set(idx.tolist())) == 10
+    assert idx.tolist() == sorted(idx.tolist())
+    assert (idx < 40).all() and (idx >= 0).all()
+    # deterministic in the rng state
+    again = p.sample(pop, np.random.default_rng(7))
+    np.testing.assert_array_equal(idx, again)
+
+
+def test_weighted_requires_and_uses_sizes():
+    cfg = _cfg()
+    p = WeightedParticipation(fraction=0.2, min_clients=2)
+    with pytest.raises(ValueError, match="sizes"):
+        p.sample(_pop(cfg, n=20), np.random.default_rng(0))
+    pop = tensor_population(20, cfg, nf_choices=(2,), n_train=20,
+                            n_eval=10, weighted_sizes=True)
+    rng = np.random.default_rng(0)
+    counts = np.zeros(20)
+    for _ in range(200):
+        counts[p.sample(pop, rng)] += 1
+    heavy, light = np.argmax(pop.sizes), np.argmin(pop.sizes)
+    assert counts[heavy] > counts[light]    # weights actually bias draws
+
+
+def test_stratified_counts_and_membership():
+    cfg = _cfg()
+    pop = _pop(cfg, n=30, nf_choices=(2, 3, 4))    # three 10-client strata
+    p = StratifiedParticipation(fraction=0.3, min_clients=3)
+    idx = p.sample(pop, np.random.default_rng(1))
+    assert len(idx) == 9
+    strata = cohorts.nf_strata(pop.nfs)
+    per = {nf: np.isin(idx, ix).sum() for nf, ix in strata.items()}
+    assert per == {2: 3, 3: 3, 4: 3}    # largest-remainder, equal strata
+    # mesh rounding: every stratum count becomes a multiple of 4
+    idx4 = p.sample(pop, np.random.default_rng(1), multiple_of=4)
+    per4 = {nf: int(np.isin(idx4, ix).sum()) for nf, ix in strata.items()}
+    assert all(c % 4 == 0 for c in per4.values()) and sum(per4.values()) > 0
+
+
+def test_stratified_counts_are_wave_static():
+    """Per-stratum counts depend on the population alone — the geometry of
+    every wave's CohortPlan repeats, so wave 2+ hits the compile cache."""
+    cfg = _cfg()
+    pop = _pop(cfg, n=30, nf_choices=(2, 3, 4))
+    p = StratifiedParticipation(fraction=0.3, min_clients=3)
+    rng = np.random.default_rng(5)
+    strata = cohorts.nf_strata(pop.nfs)
+    per_wave = [sorted(int(np.isin(p.sample(pop, rng), ix).sum())
+                       for ix in strata.values()) for _ in range(5)]
+    assert all(w == per_wave[0] for w in per_wave)
+
+
+def test_participation_spec_roundtrip():
+    for p in (UniformParticipation(fraction=0.25, min_clients=3),
+              WeightedParticipation(fraction=0.5),
+              StratifiedParticipation(min_clients=8)):
+        q = policy_from_spec(json.loads(json.dumps(p.spec())))
+        assert q == p
+
+
+def test_nf_strata_orders_and_partitions():
+    strata = cohorts.nf_strata([5, 2, 3, 2, 5, 2])
+    assert list(strata) == [2, 3, 5]
+    assert strata[2].tolist() == [1, 3, 5]
+    assert sorted(np.concatenate(list(strata.values())).tolist()) \
+        == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# ClientStore / ClientPopulation
+# ---------------------------------------------------------------------------
+
+def test_client_store_roundtrip_is_bit_exact():
+    store = ClientStore()
+    tree = {"w": jax.numpy.arange(6, dtype=jax.numpy.float32).reshape(2, 3),
+            "b": (jax.numpy.float32(0.25), np.arange(4, dtype=np.int32))}
+    store.put("c0", params=tree, opt_state=tree, best_params=tree,
+              best_val=1.5, val_history=[2.0, 1.5])
+    st = store.get("c0")
+    for leaf, orig in zip(jax.tree_util.tree_leaves(st["params"]),
+                          jax.tree_util.tree_leaves(tree)):
+        assert isinstance(leaf, np.ndarray) or np.isscalar(leaf)
+        np.testing.assert_array_equal(leaf, np.asarray(orig))
+        assert np.asarray(leaf).dtype == np.asarray(orig).dtype
+    assert "c0" in store and len(store) == 1
+    assert store.nbytes() == 3 * (6 * 4 + 4 + 4 * 4)
+
+
+def test_population_validation():
+    with pytest.raises(ValueError, match="nfs"):
+        ClientPopulation(size=3, nfs=[2, 2], build=lambda ix: [])
+    with pytest.raises(ValueError, match="sizes"):
+        ClientPopulation(size=2, nfs=[2, 2], build=lambda ix: [],
+                         sizes=[1.0, 0.0])
+
+
+def test_build_is_deterministic_per_index():
+    """Rebuilding an index in a later wave must yield the same data and the
+    same fresh init — the ClientStore contract."""
+    cfg = _cfg()
+    for pop in (_pop(cfg, n=8),
+                lazy_hetero_population(8, cfg, seed=2, n_patients=6,
+                                       n_events=150, nf_choices=(2, 3),
+                                       split_caps=(30, 10, 10))):
+        a, = pop.build([5])
+        b, = pop.build([5])
+        assert a.name == b.name == pop.name_of(5)
+        for x, y in zip(jax.tree_util.tree_leaves((a.params, a.train)),
+                        jax.tree_util.tree_leaves((b.params, b.train))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_lazy_synthetic_is_index_addressable():
+    """make_hospital_at(h) never materializes hospitals != h and is stable
+    whatever else was generated before."""
+    a = syn.make_hospital_at(0, 7, nf=3, n_patients=4, n_events=100)
+    syn.make_hospital_at(0, 3, nf=2, n_patients=4, n_events=100)
+    b = syn.make_hospital_at(0, 7, nf=3, n_patients=4, n_events=100)
+    assert a.name == b.name == "h000007"
+    assert len(a.feature_names) == 3
+    np.testing.assert_array_equal(a.streams[0].values, b.streams[0].values)
+    sizes = syn.population_sizes_at(0, [7, 9], nfs=[3, 3])
+    assert sizes[0] == syn.population_spec_at(0, 7, 3)["n_patients"]
+
+
+# ---------------------------------------------------------------------------
+# Seeded replayability
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_schedule():
+    a, b = _fit(), _fit()
+    assert _schedule(a) == _schedule(b)
+    assert a.selections == b.selections
+    ha = {n: a.store.get(n)["val_history"] for n in a.store.names()}
+    hb = {n: b.store.get(n)["val_history"] for n in b.store.names()}
+    assert ha == hb
+
+
+def test_different_seed_different_schedule():
+    a = _fit(cfg=_cfg(seed=3))
+    b = _fit(cfg=_cfg(seed=4))
+    assert _schedule(a) != _schedule(b)
+
+
+def test_save_restore_replays_bit_identically():
+    """Resume mid-schedule ⇒ the exact waves, selections, histories and
+    params an uninterrupted run would have produced."""
+    full = _fit(waves=4)
+    with tempfile.TemporaryDirectory() as d:
+        cfg = _cfg(epochs=4)
+        pop = _pop(cfg)
+        pf = ParticipatingFederation(
+            pop, cfg,
+            participation=UniformParticipation(fraction=0.5, min_clients=4),
+            schedule=RoundSchedule(4, cfg.R))
+        pf.fit(waves=2)
+        pf.save(d)
+        res = ParticipatingFederation.restore(d, pop)
+        assert res.wave == 2
+        res.fit()
+    # the wave log round-trips through the manifest, so the restored run's
+    # full schedule (saved waves + resumed waves) is the uninterrupted one
+    assert _schedule(res) == _schedule(full)
+    assert res.selections == full.selections
+    assert res.n_rounds == full.n_rounds
+    for n in full.store.names():
+        assert res.store.get(n)["val_history"] \
+            == full.store.get(n)["val_history"]
+        for x, y in zip(
+                jax.tree_util.tree_leaves(res.store.get(n)["params"]),
+                jax.tree_util.tree_leaves(full.store.get(n)["params"])):
+            np.testing.assert_array_equal(x, y)
+    # pool carry round-trips too
+    assert set(res.pool_entries) == set(full.pool_entries)
+    assert res.pool_ages == full.pool_ages
+
+
+def test_restore_rejects_mismatched_population():
+    cfg = _cfg()
+    pop = _pop(cfg)
+    pf = ParticipatingFederation(pop, cfg)
+    pf.fit(waves=1)
+    with tempfile.TemporaryDirectory() as d:
+        pf.save(d)
+        with pytest.raises(ValueError, match="population mismatch"):
+            ParticipatingFederation.restore(
+                d, _pop(cfg, n=16))
+        with pytest.raises(ValueError, match="population mismatch"):
+            ParticipatingFederation.restore(
+                d, _pop(cfg, nf_choices=(3, 2)))
+
+
+def test_restore_pins_sample_multiple():
+    """A run that rounded its samples to D keeps doing so after a meshless
+    restore — the schedule replays regardless of restore-time devices."""
+    cfg = _cfg()
+    pop = _pop(cfg)
+    pf = ParticipatingFederation(pop, cfg, sample_multiple=4,
+                                 schedule=RoundSchedule(3, cfg.R))
+    pf.fit(waves=1)
+    with tempfile.TemporaryDirectory() as d:
+        pf.save(d)
+        res = ParticipatingFederation.restore(d, pop)
+    assert res.sample_multiple == 4
+    assert res._wave_multiple() == 4
+
+
+# ---------------------------------------------------------------------------
+# Oracle parity: sampled-subset selections == sequential oracle on that
+# same subset (the inner sequential engine IS the oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_sampled_selections_match_sequential_oracle(k):
+    b = _fit("batched", k=k)
+    s = _fit("sequential", k=k)
+    assert _schedule(b) == _schedule(s)
+    assert b.selections == s.selections
+    assert b.n_rounds == s.n_rounds
+    assert sum(len(v) for v in b.selections.values()) > 0
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_hetero_synthetic_oracle_parity(k):
+    """Mixed-nf synthetic-physiology population through the cohort engine:
+    still the oracle's selections, wave after wave."""
+    cfg = _cfg(epochs=3)
+    runs = []
+    for engine in ("batched", "sequential"):
+        pop = lazy_hetero_population(12, cfg, seed=2, n_patients=6,
+                                     n_events=150, nf_choices=(2, 3),
+                                     split_caps=(30, 10, 10))
+        pf = ParticipatingFederation(
+            pop, cfg,
+            participation=StratifiedParticipation(fraction=0.4,
+                                                  min_clients=4),
+            schedule=RoundSchedule(3, cfg.R, exchange_every=k),
+            engine=engine)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            pf.fit()
+        runs.append(pf)
+    b, s = runs
+    assert _schedule(b) == _schedule(s)
+    assert b.selections == s.selections
+    assert b.n_rounds == s.n_rounds
+
+
+def test_mesh_participation_in_process():
+    """Over whatever devices the host exposes (1 in plain tier-1, 4 under
+    the CI step): mesh run == 1-device batched == sequential oracle on the
+    same schedule (sample_multiple pinned to the device count)."""
+    D = jax.device_count()
+    mesh = MF.make_mesh()
+    n = 16
+    part = StratifiedParticipation(fraction=0.5, min_clients=2 * D)
+    m = _fit("batched", mesh=mesh, participation=part, n=n)
+    b = _fit("batched", sm=D, participation=part, n=n)
+    s = _fit("sequential", sm=D, participation=part, n=n)
+    assert _schedule(m) == _schedule(b) == _schedule(s)
+    assert m.selections == b.selections == s.selections
+    assert m.n_rounds == s.n_rounds
+    assert m.dispatch_stats["devices"] == (D if D > 1 else 1)
+
+
+# ---------------------------------------------------------------------------
+# Bounded working set + pool carry
+# ---------------------------------------------------------------------------
+
+def test_resident_working_set_is_bounded_by_sample():
+    cfg = _cfg(epochs=2)
+    pop = _pop(cfg, n=40, nf_choices=(2,))
+    pf = ParticipatingFederation(
+        pop, cfg,
+        participation=UniformParticipation(fraction=0.1, min_clients=4),
+        schedule=RoundSchedule(2, cfg.R))
+    pf.fit()
+    st = pf.dispatch_stats
+    assert st["population"] == 40
+    assert st["resident_clients"] == 4
+    assert st["participation"] == "UniformParticipation"
+    assert st["participation_fraction"] == 0.1
+    # resident bytes = 4 clients of state, NOT 40: a full-population fit of
+    # the same geometry would be 10x
+    per_client = st["resident_state_bytes"] / 4
+    assert st["resident_state_bytes"] < 0.2 * per_client * 40
+    # the store only holds clients that were actually sampled
+    touched = {i for w in pf.wave_log for i in w["active"]}
+    assert len(pf.store) == len(touched) <= 8
+    assert st["store_clients"] == len(touched)
+    assert st["gather_bytes"] == st["scatter_bytes"] \
+        == sum(w["state_bytes"] for w in pf.wave_log)
+
+
+def test_pool_carries_across_waves():
+    """A client's published head (and its age) persists between the waves
+    it sits out — the always-resident structure."""
+    pf = _fit(waves=4)
+    touched = {pf.population.name_of(i)
+               for w in pf.wave_log for i in w["active"]}
+    assert {u for (u, _) in pf.pool_entries} == touched
+    assert all(isinstance(a, int) and a >= 0
+               for a in pf.pool_ages.values())
+    # host-resident: every carried entry is numpy, not a device array
+    for e in pf.pool_entries.values():
+        assert all(isinstance(leaf, np.ndarray)
+                   for leaf in jax.tree_util.tree_leaves(e))
+    # results() reports every touched client exactly once
+    res = pf.results()
+    assert set(res) == touched
+    assert all(res[n]["rounds"] == pf.n_rounds[n] for n in res)
+
+
+def test_full_participation_wave_matches_plain_federation():
+    """fraction=1 degenerates to the ordinary Federation: same selections,
+    same histories — participation is a strict generalization."""
+    from repro.core.federation import Federation
+    cfg = _cfg(epochs=2)
+    pop = _pop(cfg, n=8, nf_choices=(2,))
+    pf = ParticipatingFederation(
+        pop, cfg, participation=UniformParticipation(fraction=1.0),
+        schedule=RoundSchedule(2, cfg.R))
+    pf.fit()
+    clients = pop.build(range(8))
+    fed = Federation(clients, cfg, engine="batched",
+                     schedule=RoundSchedule(2, cfg.R))
+    hist = fed.fit()
+    assert pf.selections == {n: hist[n]["selections"] for n in hist}
+    assert {n: pf.store.get(n)["val_history"] for n in pf.store.names()} \
+        == {n: hist[n]["val"] for n in hist}
+
+
+def test_host_tree_is_numpy_and_bit_exact():
+    t = {"a": jax.numpy.linspace(0, 1, 7), "b": np.float32(3.5)}
+    h = host_tree(t)
+    assert isinstance(h["a"], np.ndarray)
+    np.testing.assert_array_equal(h["a"], np.asarray(t["a"]))
+    assert h["a"].dtype == np.asarray(t["a"]).dtype
+
+
+def test_participation_multiple():
+    assert MF.participation_multiple(None) == 1
+    assert MF.participation_multiple(MF.make_mesh()) == jax.device_count()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin: forced 4-device mesh — sampled-participation selections
+# identical to the sequential oracle on the same subsets, k in {1, 2}
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS = r"""
+import json
+import jax
+assert jax.device_count() == 4, jax.devices()
+import numpy as np
+from repro.core.experiment import tensor_population
+from repro.core.federation import RoundSchedule
+from repro.core.hfl import HFLConfig
+from repro.core.mesh_federation import make_mesh
+from repro.core.participation import (ParticipatingFederation,
+                                      StratifiedParticipation)
+
+def run(engine, mesh=None, k=1, sm=None):
+    cfg = HFLConfig(epochs=2, R=10, mode="always", seed=3)
+    pop = tensor_population(24, cfg, seed=1, nf_choices=(2, 3),
+                            n_train=40, n_eval=20)
+    pf = ParticipatingFederation(
+        pop, cfg,
+        participation=StratifiedParticipation(fraction=0.5, min_clients=8),
+        schedule=RoundSchedule(2, 10, exchange_every=k),
+        engine=engine, mesh=mesh, sample_multiple=sm)
+    pf.fit()
+    return pf
+
+res = {}
+mesh = make_mesh()
+for k in (1, 2):
+    m = run("batched", mesh=mesh, k=k)
+    s = run("sequential", k=k, sm=4)
+    res[f"schedule_identical_k{k}"] = (
+        [w["active"] for w in m.wave_log]
+        == [w["active"] for w in s.wave_log])
+    res[f"sel_identical_k{k}"] = m.selections == s.selections
+    res[f"rounds_identical_k{k}"] = m.n_rounds == s.n_rounds
+    res[f"devices_k{k}"] = m.dispatch_stats["devices"]
+    res[f"resident_k{k}"] = m.dispatch_stats["resident_clients"]
+print("RESULT " + json.dumps(res))
+"""
+
+
+def _run_forced_devices(script: str, n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_sampled_participation_on_forced_4_device_mesh():
+    """ISSUE 7 acceptance: a stratified sample sharded over a genuine
+    4-device mesh selects exactly what the sequential oracle selects on
+    the same subsets, at cadence k=1 and k=2."""
+    res = _run_forced_devices(_SUBPROCESS, 4)
+    for k in (1, 2):
+        assert res[f"schedule_identical_k{k}"] is True
+        assert res[f"sel_identical_k{k}"] is True
+        assert res[f"rounds_identical_k{k}"] is True
+        assert res[f"devices_k{k}"] == 4
+        assert res[f"resident_k{k}"] == 16
