@@ -56,6 +56,15 @@ learnable state — the bounded-working-set meter; full-population rows
 report their own C / 1.0 / C / state_bytes).  This is how the 100k-client
 row in BENCH_fl_scale.json is produced.
 
+``--fault-rate 0,0.2,0.4`` (with ``--population-size``) adds one
+fault-injected participation row per rate — a seeded
+`repro.core.faults.FaultPlan` with that per-wave dropout probability and
+``--byzantine-frac`` NaN-head corruption — emitting the
+graceful-degradation curve: every row carries ``fault_rate`` /
+``byzantine_frac`` / ``heads_rejected`` / ``waves_degraded`` / ``mean_val``
+(final-wave mean validation MSE over finite clients), 0 / 0 / 0 / 0 / null
+on faultless rows.
+
 Besides the CSV on stdout, writes a machine-readable ``BENCH_fl_scale.json``
 at the repo root (``--out`` to redirect, ``--out ""`` to disable;
 :func:`validate_payload` pins its schema, and CI smoke-runs a tiny sweep
@@ -212,7 +221,8 @@ _PARTICIPATIONS = {"uniform": "UniformParticipation",
                    "stratified": "StratifiedParticipation"}
 
 
-def _run_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
+def _run_sampled(args, cfg: HFLConfig, n: int, exchange_every: int,
+                 faults=None):
     from repro.core import participation as PT
     from repro.core.experiment import tensor_population
 
@@ -225,7 +235,8 @@ def _run_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
         pop, cfg,
         participation=policy_cls(fraction=args.fraction, min_clients=2),
         schedule=RoundSchedule(args.waves, cfg.R,
-                               exchange_every=exchange_every))
+                               exchange_every=exchange_every),
+        faults=faults)
     t0 = time.perf_counter()
     pf.fit()
     elapsed = time.perf_counter() - t0
@@ -234,16 +245,21 @@ def _run_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
     # each resident client trains sub_rounds-per-epoch rounds per wave
     sub = RoundSchedule(1, cfg.R).sub_rounds(n)
     train_rounds = sum(len(w["active"]) * sub for w in pf.wave_log)
-    return elapsed, args.waves * sub, train_rounds, st
+    mean_val = pf.wave_log[-1]["mean_val"] if pf.wave_log else None
+    return elapsed, args.waves * sub, train_rounds, st, mean_val
 
 
-def bench_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
+def bench_sampled(args, cfg: HFLConfig, n: int, exchange_every: int,
+                  faults=None):
     """One sampled-participation row: warmup run (compile — the stratified
     sampler keeps every wave's cohort geometry identical, so one warmup
-    covers all waves), then the measured run."""
-    _run_sampled(args, cfg, n, exchange_every)                    # warmup
-    elapsed, sub_rounds, train_rounds, st = _run_sampled(
-        args, cfg, n, exchange_every)
+    covers all waves), then the measured run.  ``faults`` (a
+    :class:`repro.core.faults.FaultPlan`) makes it a graceful-degradation
+    row: the row carries the fault rates, the rejection/degradation
+    counters, and the final wave's mean validation MSE."""
+    _run_sampled(args, cfg, n, exchange_every, faults)            # warmup
+    elapsed, sub_rounds, train_rounds, st, mean_val = _run_sampled(
+        args, cfg, n, exchange_every, faults)
     return {
         "round_ms": 1e3 * elapsed / sub_rounds,
         "client_rounds_per_s": train_rounds / elapsed,
@@ -258,6 +274,13 @@ def bench_sampled(args, cfg: HFLConfig, n: int, exchange_every: int):
         "participation_fraction": st["participation_fraction"],
         "resident_clients": st["resident_clients"],
         "resident_state_bytes": st["resident_state_bytes"],
+        "fault_rate": float(faults.dropout) if faults is not None else 0.0,
+        "byzantine_frac": (float(faults.byzantine)
+                           if faults is not None else 0.0),
+        "heads_rejected": int(st.get("heads_rejected", 0)),
+        "waves_degraded": int(st.get("waves_degraded", 0)),
+        "mean_val": (None if mean_val is None or mean_val != mean_val
+                     else float(mean_val)),
     }
 
 
@@ -350,6 +373,8 @@ def validate_payload(payload: dict) -> None:
     need(payload["config"], "fraction", (int, float, type(None)), "config")
     need(payload["config"], "participation", (str, type(None)), "config")
     need(payload["config"], "waves", (int, type(None)), "config")
+    need(payload["config"], "fault_rate", list, "config")
+    need(payload["config"], "byzantine_frac", (int, float), "config")
     if not all(isinstance(k, int) and k >= 1
                for k in payload["config"]["exchange_every"]):
         raise ValueError("config[exchange_every]: expected a list of "
@@ -374,6 +399,19 @@ def validate_payload(payload: dict) -> None:
         need(r, "participation_fraction", (int, float), where)
         need(r, "resident_clients", int, where)
         need(r, "resident_state_bytes", int, where)
+        need(r, "fault_rate", (int, float), where)
+        need(r, "byzantine_frac", (int, float), where)
+        need(r, "heads_rejected", int, where)
+        need(r, "waves_degraded", int, where)
+        need(r, "mean_val", (int, float, type(None)), where)
+        if not 0 <= r["fault_rate"] <= 1:
+            raise ValueError(f"{where}[fault_rate]: must be in [0, 1], "
+                             f"got {r['fault_rate']}")
+        if not 0 <= r["byzantine_frac"] <= 1:
+            raise ValueError(f"{where}[byzantine_frac]: must be in [0, 1], "
+                             f"got {r['byzantine_frac']}")
+        if r["heads_rejected"] < 0 or r["waves_degraded"] < 0:
+            raise ValueError(f"{where}: fault counters must be >= 0")
         if r["exchange_every"] < 1:
             raise ValueError(f"{where}[exchange_every]: must be >= 1, "
                              f"got {r['exchange_every']}")
@@ -415,6 +453,12 @@ def _record(C, label, het, r, speedup):
         "client_rounds_per_s": r["client_rounds_per_s"],
         "dispatches_per_epoch": r["dispatches_per_epoch"],
         "dispatch_path": r["dispatch_path"],
+        # graceful-degradation columns: full-population rows run faultless
+        "fault_rate": r.get("fault_rate", 0.0),
+        "byzantine_frac": r.get("byzantine_frac", 0.0),
+        "heads_rejected": r.get("heads_rejected", 0),
+        "waves_degraded": r.get("waves_degraded", 0),
+        "mean_val": r.get("mean_val"),
         "speedup_vs_sequential":
             None if speedup != speedup else speedup}
 
@@ -462,6 +506,16 @@ def main():
                     help="sampling policy for --population-size rows")
     ap.add_argument("--waves", type=int, default=2,
                     help="participation waves for --population-size rows")
+    ap.add_argument("--fault-rate", default="",
+                    help="comma list of per-wave client dropout "
+                         "probabilities; each adds a fault-injected "
+                         "sampled-participation row (requires "
+                         "--population-size) — the graceful-degradation "
+                         "curve of MSE and rounds/s vs fault rate")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="per-wave probability a sampled client publishes "
+                         "corrupted (NaN) heads in --fault-rate rows "
+                         "(quarantined by the pool admission guard)")
     ap.add_argument("--max-seq-clients", type=int, default=None,
                     help="skip the sequential oracle above this client "
                          "count (its per-client Python loop dominates the "
@@ -475,6 +529,14 @@ def main():
     ks = [int(x) for x in args.exchange_every.split(",")]
     if any(k < 1 for k in ks):
         raise SystemExit("--exchange-every entries must be >= 1")
+    fault_rates = [float(x) for x in args.fault_rate.split(",") if x]
+    if fault_rates and not args.population_size:
+        raise SystemExit("--fault-rate rows ride the participation path; "
+                         "pass --population-size too")
+    if not all(0 <= f <= 1 for f in fault_rates) \
+            or not 0 <= args.byzantine_frac <= 1:
+        raise SystemExit("--fault-rate / --byzantine-frac entries must be "
+                         "probabilities in [0, 1]")
     cfg = HFLConfig(mode="always", epochs=args.epochs, R=args.R)
     n = args.batches * args.R
 
@@ -567,6 +629,29 @@ def main():
                   f"{r['resident_clients']},nan", flush=True)
             records.append(_record(r["resident_clients"], label, False, r,
                                    float("nan")))
+        # graceful-degradation curve: one fault-injected row per rate at
+        # the first cadence (MSE + rounds/s vs fault rate; same seed, so
+        # the schedules are comparable across rates)
+        from repro.core.faults import FaultPlan
+        for rate in fault_rates:
+            plan = FaultPlan(dropout=rate, byzantine=args.byzantine_frac,
+                             corruption="nan", seed=0)
+            r = bench_sampled(args, cfg, n, ks[0], faults=plan)
+            label = f"participating+fault{rate:g}"
+            print(f"{r['resident_clients']},{label},0,{ks[0]},"
+                  f"{r['devices']},{r['cohorts']},{r['round_ms']:.2f},"
+                  f"{r['client_rounds_per_s']:.1f},"
+                  f"{r['dispatches_per_epoch']:.1f},"
+                  f"{r['exchange_rounds']},{r['pool_bytes_gathered']},"
+                  f"{r['population']},{r['participation_fraction']},"
+                  f"{r['resident_clients']},nan", flush=True)
+            print(f"[faults] rate={rate:g} byz={args.byzantine_frac:g}: "
+                  f"mean_val={r['mean_val']}, "
+                  f"heads_rejected={r['heads_rejected']}, "
+                  f"waves_degraded={r['waves_degraded']}",
+                  file=sys.stderr)
+            records.append(_record(r["resident_clients"], label, False, r,
+                                   float("nan")))
     if args.out:
         payload = {
             "benchmark": "fl_scale",
@@ -587,7 +672,9 @@ def main():
                        "participation": args.participation
                        if args.population_size else None,
                        "waves": args.waves if args.population_size
-                       else None},
+                       else None,
+                       "fault_rate": fault_rates,
+                       "byzantine_frac": args.byzantine_frac},
             "results": records,
         }
         if profiles:

@@ -27,6 +27,16 @@ policy (stratified keeps each wave's cohort geometry identical, so wave
 
   --population 100000 --fraction 0.0003 --participation stratified
 
+``--fault-rate`` / ``--byzantine-frac`` turn on DETERMINISTIC FAULT
+INJECTION for --population runs (`repro.core.faults.FaultPlan`): each
+wave drops clients with probability ``--fault-rate`` (the wave re-rounds
+its geometry and continues) and poisons each survivor's published heads
+with probability ``--byzantine-frac`` — the in-graph pool admission
+guard quarantines the poisoned heads so they never reach a neighbour.
+The summary line reports what was survived:
+
+  --population 64 --fraction 0.25 --fault-rate 0.2 --byzantine-frac 0.1
+
 With ``--engine batched`` (default) every Adam step is vmapped across
 hospitals and each federated opportunity runs as ONE fused selection+blend
 scan; ``--engine sequential`` runs the reference oracle instead — same
@@ -101,6 +111,12 @@ def run_sampled(args, mesh):
         args.population, cfg, n_patients=args.patients,
         n_events=args.events, nf_choices=nf_choices,
         weighted_sizes=args.participation == "weighted")
+    faults = None
+    if args.fault_rate or args.byzantine_frac:
+        from repro.core.faults import FaultPlan
+        faults = FaultPlan(dropout=args.fault_rate,
+                           byzantine=args.byzantine_frac,
+                           corruption="nan")
     if args.resume:
         if not args.save_dir:
             raise SystemExit("--resume requires --save-dir")
@@ -117,10 +133,12 @@ def run_sampled(args, mesh):
             participation=policy_cls(fraction=args.fraction, min_clients=2),
             schedule=RoundSchedule(args.epochs, cfg.R,
                                    exchange_every=args.exchange_every),
-            mesh=mesh)
+            mesh=mesh, faults=faults)
         print(f"== {args.population}-hospital population, "
               f"{args.participation} participation "
-              f"(fraction={args.fraction}), {args.epochs} waves ==")
+              f"(fraction={args.fraction}), {args.epochs} waves =="
+              + (f" [faults: dropout={args.fault_rate:g}, "
+                 f"byzantine={args.byzantine_frac:g}]" if faults else ""))
         t0 = time.time()
         pf.fit(verbose=args.verbose)
     wall = time.time() - t0
@@ -131,6 +149,12 @@ def run_sampled(args, mesh):
           f"{st['store_clients']} clients / {st['store_bytes'] / 1e6:.1f}MB "
           f"host-side, gathered {st['gather_bytes'] / 1e6:.1f}MB in "
           f"{wall:.1f}s")
+    if st.get("clients_dropped") or st.get("heads_rejected") \
+            or st.get("stragglers"):
+        print(f"=> faults survived: {st['clients_dropped']} clients "
+              f"dropped across {st['waves_degraded']} degraded waves, "
+              f"{st['stragglers']} stragglers, {st['heads_rejected']} "
+              f"poisoned heads quarantined at the pool gate")
     if args.save_dir:
         pf.save(args.save_dir)
         print(f"=> sampled federation checkpointed to {args.save_dir} "
@@ -169,6 +193,13 @@ def main():
     ap.add_argument("--participation", default="stratified",
                     choices=sorted(_PARTICIPATIONS),
                     help="wave sampling policy for --population runs")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-wave client dropout probability "
+                         "(repro.core.faults.FaultPlan; --population only)")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="per-wave probability a sampled client publishes "
+                         "poisoned (NaN) heads — the pool admission guard "
+                         "quarantines them (--population only)")
     ap.add_argument("--mesh", action="store_true",
                     help="client-shard the batched engine over all local "
                          "devices (docs/SCALING.md; falls back to the "

@@ -244,7 +244,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                        policies: FederationPolicies, use_kernel: bool,
                        do_federate: bool, do_eval: bool, *,
                        exchange_every: int = 1, gather=None,
-                       local_rows=None, shard=None):
+                       local_rows=None, shard=None, admission=None):
     """The fused whole-epoch computation for a cohorted population, shared by
     the single-device and mesh backends: one ``lax.scan`` over the epoch's
     global sub-rounds.  Each step trains every cohort at its native
@@ -266,7 +266,12 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
     train-only steps plus one train+exchange step on the group's last
     round, leftover ``n_sub % k`` rounds never exchange — static cadence,
     so the mesh path traces the identical collective schedule on every
-    device; k=1 is the historical flat scan, bit-identical."""
+    device; k=1 is the historical flat scan, bit-identical.
+
+    ``admission`` forwards the pool admission guard's norm bound to
+    :func:`~repro.core.federation._policy_round_body`; when set, the epoch
+    returns one extra trailing ``(exchange_rounds, C)`` bool rejection
+    mask (None traces exactly the fault-free body)."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
@@ -325,10 +330,14 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                         dk = jnp.pad(dk, ((0, 0), (0, 0), (0, pad), (0, 0)))
                     xd_g = xd_g.at[idx].set(dk)
                     y_g = y_g.at[idx].set(gather(by[k]))
-                new_heads, pool_heads, pool_age, chosen = _policy_round_body(
+                out = _policy_round_body(
                     heads_g, pool_heads, pool_age, xd_g, y_g, part_r, sub,
                     nf=max_nf, policies=policies, use_kernel=use_kernel,
-                    feat_valid=feat_valid, shard=shard)
+                    feat_valid=feat_valid, shard=shard, admission=admission)
+                if admission is not None:
+                    new_heads, pool_heads, pool_age, chosen, rej = out
+                else:
+                    new_heads, pool_heads, pool_age, chosen = out
                 for k, co in enumerate(plan.cohorts):
                     rows = jax.tree_util.tree_map(
                         lambda g: g[members[k], :co.nf], new_heads)
@@ -336,8 +345,11 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                                    "heads": local_rows(rows, k)}
             else:
                 chosen = jnp.full((C, max_nf), -1, jnp.int32)
+                if admission is not None:
+                    rej = jnp.zeros((C,), bool)
+            ys = (chosen, rej) if admission is not None else chosen
             return ((tuple(params_t), tuple(opt_t), pool_heads, pool_age,
-                     key), chosen)
+                     key), ys)
 
         def train_only(carry, inp):
             params_t, opt_t, pool_heads, pool_age, key = carry
@@ -350,7 +362,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
         carry = (params_t, opt_t, pool_heads, pool_age, key)
         if not do_federate or k_ex == 1:
             # the historical flat scan; exchange_every=1 stays bit-identical
-            carry, chosen = jax.lax.scan(body, carry, xs_all)
+            carry, ys = jax.lax.scan(body, carry, xs_all)
         else:
             n_sub = part.shape[0]
             n_grp, rem = divmod(n_sub, k_ex)
@@ -367,12 +379,13 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                 return body(carry, jax.tree_util.tree_map(
                     lambda t: t[k_ex - 1], inp_k))
 
-            carry, chosen = jax.lax.scan(group, carry, grouped)
+            carry, ys = jax.lax.scan(group, carry, grouped)
             if rem:                       # leftover rounds never exchange
                 carry, _ = jax.lax.scan(
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
                                            xs_all))
+        chosen, rejected = ys if admission is not None else (ys, None)
         (params_t, opt_t, pool_heads, pool_age, key) = carry
         if do_eval:
             vs, new_bv, new_bp = [], [], []
@@ -392,8 +405,9 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
             v_t = tuple(vs)
         else:
             v_t = None
-        return (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
-                best_params_t, v_t, chosen)
+        out = (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
+               best_params_t, v_t, chosen)
+        return out + (rejected,) if admission is not None else out
 
     return epoch
 
@@ -402,7 +416,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
 def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
                           policies: FederationPolicies, use_kernel: bool,
                           do_federate: bool, do_eval: bool,
-                          exchange_every: int = 1):
+                          exchange_every: int = 1, admission=None):
     """Compile-cached fused heterogeneous epoch (single-device): one
     dispatch scans every global sub-round of a mixed-cohort epoch, with the
     whole carried state donated — the cohort twin of
@@ -410,7 +424,8 @@ def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
     :class:`CohortPlan`, so every distinct population LAYOUT compiles once
     and every cohort inside it shares that single program."""
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
-                               do_eval, exchange_every=exchange_every)
+                               do_eval, exchange_every=exchange_every,
+                               admission=admission)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -419,7 +434,7 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
                                policies: FederationPolicies,
                                use_kernel: bool, do_federate: bool,
                                do_eval: bool, mesh,
-                               exchange_every: int = 1):
+                               exchange_every: int = 1, admission=None):
     """The client-sharded twin of :func:`_make_hetero_epoch_fn`: the same
     epoch body under ``shard_map``, with every cohort's stack partitioned
     over the mesh's ``clients`` axis (each cohort size must divide the
@@ -453,15 +468,18 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
                                do_eval, exchange_every=exchange_every,
                                gather=gather, local_rows=local_rows,
-                               shard=(axis, D))
+                               shard=(axis, D), admission=admission)
     tup = lambda spec: tuple(spec for _ in range(K))
+    out_specs = (pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
+                 tup(cl) if do_eval else None, rep)
+    if admission is not None:
+        out_specs = out_specs + (rep,)   # rejection mask is replicated
     sharded = shard_map(
         epoch, mesh=mesh,
         in_specs=(pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
                   tup(data), tup(data), tup(data), rep, rep, rep,
                   tup(cl), tup(cl), tup(cl)),
-        out_specs=(pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
-                   tup(cl) if do_eval else None, rep),
+        out_specs=out_specs,
         check_rep=False)
     return jax.jit(sharded, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
@@ -574,6 +592,9 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
     pool_age = jnp.asarray([fed.pool.age_of(n_) for n_ in names], jnp.int32)
     use_kernel = cfg.use_pool_kernel and pool_kernel_available()
     lut = hetero_selection_lut(names, plan.nfs, plan.max_nf)
+    admission = fed._admission()
+    smask = fed._straggler_mask
+    heads_rejected = 0
     live_np = np.asarray([[k < co.n_sub for co in plan.cohorts]
                           for k in range(n_sub_max)], bool)
 
@@ -616,9 +637,11 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         if mesh is not None:
             return _make_mesh_hetero_epoch_fn(cfg.lr, plan, cfg.w, pol,
                                               use_kernel, do_federate,
-                                              do_eval, mesh, exchange_every)
+                                              do_eval, mesh, exchange_every,
+                                              admission)
         return _make_hetero_epoch_fn(cfg.lr, plan, pol, use_kernel,
-                                     do_federate, do_eval, exchange_every)
+                                     do_federate, do_eval, exchange_every,
+                                     admission)
 
     fused = not any(_wants_per_round(cb) for cb in cbs)
     n_dispatch = 0
@@ -648,6 +671,8 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         epoch = fed.epoch
         active = np.asarray(pol.switch.active_mask(histories,
                                                    fed._switch_rng))
+        if smask is not None:   # stragglers train but miss every exchange
+            active = active & ~np.asarray(smask, bool)
         do_federate = bool(active.any()) and C >= 2
         # participation: epoch-active AND the client still has sub-rounds
         # left (the oracle's live set); the staleness clock ticks in every
@@ -674,14 +699,19 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         fed._mid_epoch = True
         if fused:
             epoch_fn = make_epoch_fn(do_federate, True, k_ex)
-            (*state, v_t, chosen) = epoch_fn(*state,
-                                             tuple(r[0] for r in rounds_t),
-                                             tuple(r[1] for r in rounds_t),
-                                             tuple(r[2] for r in rounds_t),
-                                             part, tick, live,
-                                             tuple(v[0] for v in val_t),
-                                             tuple(v[1] for v in val_t),
-                                             tuple(v[2] for v in val_t))
+            out = epoch_fn(*state,
+                           tuple(r[0] for r in rounds_t),
+                           tuple(r[1] for r in rounds_t),
+                           tuple(r[2] for r in rounds_t),
+                           part, tick, live,
+                           tuple(v[0] for v in val_t),
+                           tuple(v[1] for v in val_t),
+                           tuple(v[2] for v in val_t))
+            if admission is not None:
+                (*state, v_t, chosen, rej) = out
+                heads_rejected += int(np.asarray(rej).sum())
+            else:
+                (*state, v_t, chosen) = out
             n_dispatch += 1
         else:
             chunks = []
@@ -691,7 +721,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                 epoch_fn = make_epoch_fn(do_federate and bool(exch[rnd]),
                                          rnd == n_sub_max - 1)
                 sl = slice(rnd, rnd + 1)
-                (*state, v_t, ch) = epoch_fn(
+                out = epoch_fn(
                     *state,
                     tuple(r[0][sl] for r in rounds_t),
                     tuple(r[1][sl] for r in rounds_t),
@@ -700,6 +730,11 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                     tuple(v[0] for v in val_t),
                     tuple(v[1] for v in val_t),
                     tuple(v[2] for v in val_t))
+                if admission is not None:
+                    (*state, v_t, ch, rej) = out
+                    heads_rejected += int(np.asarray(rej).sum())
+                else:
+                    (*state, v_t, ch) = out
                 chunks.append(ch)
                 n_dispatch += 1
                 (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
@@ -710,7 +745,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                     cb.on_round(fed, epoch, rnd)
             if n_sub_max == 0:   # no trainable sub-round: eval-only dispatch
                 epoch_fn = make_epoch_fn(do_federate, True)
-                (*state, v_t, ch) = epoch_fn(
+                out = epoch_fn(
                     *state,
                     tuple(r[0] for r in rounds_t),
                     tuple(r[1] for r in rounds_t),
@@ -719,6 +754,10 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                     tuple(v[0] for v in val_t),
                     tuple(v[1] for v in val_t),
                     tuple(v[2] for v in val_t))
+                if admission is not None:
+                    (*state, v_t, ch, _rej) = out
+                else:
+                    (*state, v_t, ch) = out
                 chunks.append(ch)
                 n_dispatch += 1
             chosen = jnp.concatenate(chunks) if chunks else None
@@ -762,6 +801,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         "exchange_every": k_ex,
         "exchange_rounds": exchange_rounds,
         "pool_bytes_gathered": pool_bytes,
-        "state_bytes": state_bytes}
+        "state_bytes": state_bytes,
+        **fed._fault_stats(heads_rejected)}
     sync()
     fed._sync = None

@@ -1,0 +1,250 @@
+"""Deterministic fault injection for federated training.
+
+The failure model (docs/SCALING.md "Failure model") has three client fault
+classes, drawn per (wave, client) from a seeded plan so any scenario
+replays bit-identically across engines, device counts, and restores:
+
+  * **dropout** — the client vanishes for the wave: it is removed from the
+    sampled active set before any state is gathered, and the wave's
+    geometry is re-rounded (``reround_wave``) so the fused engine never
+    sees a ragged stack.
+  * **straggler** — the client trains but misses its federated
+    opportunities: its switch is masked off for the wave, so it neither
+    selects nor publishes, and its pool entry ages under the existing
+    bounded-staleness clock exactly as an inactive client's would.
+  * **byzantine** — the client's head parameters are corrupted host-side
+    before the wave trains (NaN / Inf / exploding-norm / sign-flip).  The
+    engines' pool admission guard (``federation._policy_round_body``
+    ``admission=``) rejects non-finite or norm-violating heads at
+    publication time, so a poisoned head never enters the shared pool;
+    the client itself trains on its own corrupted state (sacrificial).
+
+Faults are drawn independently per (wave, global client index) from
+``SeedSequence([plan.seed, 0xFA, wave, index])`` — never from a shared
+stream — so the schedule is index-addressable: the same client faults the
+same way no matter which engine runs the wave, how the mesh shards it, or
+in what order other clients are drawn.  Precedence within one draw is
+dropout > straggler > byzantine (the classes are disjoint per wave).
+
+``FaultPlan`` is a frozen registered policy dataclass, so it round-trips
+through checkpoint manifests via ``spec()`` / ``policy_from_spec`` like
+every other protocol.
+
+Known limitation, by design: the admission guard is a *sanity* gate
+(finiteness + norm bound), not a statistical defense — a sign-flipped head
+has the same norm as the original and passes.  Robust aggregation belongs
+to the ROADMAP trust layer; the quarantine contract here guarantees only
+that no non-finite or norm-exploding head is ever served by the pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.policies import _Spec, register_policy
+
+# Pool rows seeded from an inadmissible head are published as zeros at this
+# sentinel age: far above any real staleness bound, so both the bounded
+# (`age > max_age`) and the admission-aware unbounded exclusion hide the row
+# from every selector until a clean republication resets its age.
+QUARANTINE_AGE = 1 << 30
+
+CORRUPTIONS = ("nan", "inf", "explode", "signflip")
+
+
+@register_policy
+@dataclasses.dataclass(frozen=True)
+class FaultPlan(_Spec):
+    """A seeded description of the failure scenario to inject.
+
+    ``dropout`` / ``straggler`` / ``byzantine`` are independent per-wave
+    per-client probabilities (disjoint classes: dropout wins over
+    straggler wins over byzantine).  ``corruption`` picks how a byzantine
+    client's heads are mangled; ``norm_bound`` is the admission guard's
+    L2 bound on a published head tree (non-finite heads are always
+    rejected).  An all-zero plan is exactly "no faults": the engines skip
+    the admission guard entirely and trace bit-identically to a run with
+    no plan at all."""
+    dropout: float = 0.0
+    straggler: float = 0.0
+    byzantine: float = 0.0
+    corruption: str = "nan"
+    norm_bound: float = 1e6
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("dropout", "straggler", "byzantine"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be a probability in [0, 1], "
+                                 f"got {v}")
+        if self.corruption not in CORRUPTIONS:
+            raise ValueError(f"unknown corruption {self.corruption!r} "
+                             f"(one of {CORRUPTIONS})")
+        if not self.norm_bound > 0:
+            raise ValueError(f"norm_bound must be > 0, got {self.norm_bound}")
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any fault class can fire.  Disabled plans are inert:
+        engines treat them exactly like ``faults=None``."""
+        return (self.dropout > 0 or self.straggler > 0
+                or self.byzantine > 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveFaults:
+    """The faults that actually hit one wave, AFTER geometry re-rounding
+    (a drawn-dropped client revived to keep the wave at one mesh multiple
+    is healthy; a trimmed survivor counts as dropped).  Global population
+    indices, each tuple sorted."""
+    wave: int
+    dropped: Tuple[int, ...] = ()
+    stragglers: Tuple[int, ...] = ()
+    byzantine: Tuple[int, ...] = ()
+
+    @property
+    def degraded(self) -> bool:
+        """A wave is degraded when it lost clients to dropout."""
+        return bool(self.dropped)
+
+    def to_json(self) -> dict:
+        return {"wave": self.wave, "dropped": list(self.dropped),
+                "stragglers": list(self.stragglers),
+                "byzantine": list(self.byzantine)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WaveFaults":
+        return cls(wave=int(d["wave"]),
+                   dropped=tuple(int(i) for i in d["dropped"]),
+                   stragglers=tuple(int(i) for i in d["stragglers"]),
+                   byzantine=tuple(int(i) for i in d["byzantine"]))
+
+
+def reround_wave(indices: Sequence[int], dropped: Sequence[int],
+                 multiple: int = 1):
+    """Re-round a wave's geometry after dropout, deterministically.
+
+    ``indices`` is the sampled active set in sample order; ``dropped`` the
+    drawn dropouts.  Survivors are kept in sample order.  If fewer than
+    ``max(multiple, 1)`` clients survive, drawn dropouts are revived in
+    sample order until one multiple is reached (a wave never goes empty);
+    if the survivor count is not a multiple of ``multiple``, the
+    HIGHEST-index survivors are trimmed (they count as dropped — the mesh
+    needs per-device equal blocks, see ``participation_multiple``).
+    Returns ``(kept, effective_dropped)`` — both lists of ints, ``kept``
+    in sample order, ``effective_dropped`` sorted."""
+    indices = [int(i) for i in indices]
+    drop = set(int(d) for d in dropped) & set(indices)
+    floor = max(int(multiple), 1)
+    kept = [i for i in indices if i not in drop]
+    for i in indices:               # revive first-drawn until one multiple
+        if len(kept) >= floor:
+            break
+        if i in drop:
+            drop.discard(i)
+            kept = [j for j in indices if j not in drop]
+    if multiple > 1 and len(kept) % multiple:
+        excess = len(kept) % multiple
+        for i in sorted(kept, reverse=True)[:excess]:
+            drop.add(i)
+        kept = [j for j in indices if j not in drop]
+    return kept, sorted(drop)
+
+
+class FaultInjector:
+    """Draws a :class:`FaultPlan`'s faults.  Stateless between calls —
+    every decision is a pure function of ``(plan.seed, wave, index)`` —
+    so a restored run replays the identical schedule without any carried
+    RNG state."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+
+    def _draws(self, wave: int, index: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.plan.seed, 0xFA, int(wave),
+                                    int(index)]))
+        return rng.random(3)
+
+    def wave_faults(self, wave: int, indices: Sequence[int],
+                    multiple: int = 1) -> WaveFaults:
+        """The effective faults for one wave over its sampled ``indices``
+        (geometry re-rounding applied; see :func:`reround_wave`)."""
+        p = self.plan
+        drawn_drop: List[int] = []
+        strag: List[int] = []
+        byz: List[int] = []
+        for i in indices:
+            u = self._draws(wave, int(i))
+            if u[0] < p.dropout:
+                drawn_drop.append(int(i))
+            elif u[1] < p.straggler:
+                strag.append(int(i))
+            elif u[2] < p.byzantine:
+                byz.append(int(i))
+        kept, dropped = reround_wave(indices, drawn_drop, multiple)
+        keptset = set(kept)
+        return WaveFaults(
+            wave=int(wave), dropped=tuple(dropped),
+            stragglers=tuple(sorted(i for i in strag if i in keptset)),
+            byzantine=tuple(sorted(i for i in byz if i in keptset)))
+
+    def corrupt_heads(self, heads, wave: int, index: int):
+        """A corrupted copy of a stacked head tree (host-side numpy) for a
+        byzantine client, per ``plan.corruption``.  The 'explode' scale
+        draw comes from the client's own (wave, index) stream, so it too
+        replays exactly."""
+        mode = self.plan.corruption
+
+        def bad(x):
+            a = np.array(x, copy=True)
+            if mode == "nan":
+                a[...] = np.nan
+            elif mode == "inf":
+                a[...] = np.inf
+            elif mode == "explode":
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([self.plan.seed, 0xFB,
+                                            int(wave), int(index)]))
+                a = (a + 1.0) * np.asarray(
+                    rng.uniform(1e12, 1e15), a.dtype)
+            elif mode == "signflip":
+                a = -a
+            return a.astype(np.asarray(x).dtype)
+
+        return jax.tree_util.tree_map(bad, heads)
+
+
+def heads_admissible(heads, norm_bound: float) -> bool:
+    """The host-side twin of the in-graph admission predicate: True iff
+    every leaf of the head tree is finite and the whole tree's L2 norm is
+    within ``norm_bound``.  Used by the sequential oracle's publish gate
+    and by the pool-seeding sanitizer — MUST agree with the traced form in
+    ``federation._policy_round_body`` (sum of float32 squares, compared to
+    the squared bound)."""
+    sq = 0.0
+    for leaf in jax.tree_util.tree_leaves(heads):
+        a = np.asarray(leaf, np.float32)
+        sq += float(np.sum(np.square(a), dtype=np.float32))
+    return bool(np.isfinite(sq) and sq <= float(norm_bound) ** 2)
+
+
+def zero_heads_like(heads):
+    """A zeroed copy of a head tree — what a quarantined pool row serves
+    if something scores it anyway (it never should: quarantine age hides
+    it from every selector)."""
+    return jax.tree_util.tree_map(
+        lambda x: np.zeros_like(np.asarray(x)), heads)
+
+
+def fault_log_json(log: Sequence[WaveFaults]) -> list:
+    """JSON form of a fault log for the checkpoint manifest."""
+    return [wf.to_json() for wf in log]
+
+
+def fault_log_from_json(rows: Sequence[dict]) -> List[WaveFaults]:
+    return [WaveFaults.from_json(r) for r in rows]

@@ -45,12 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.core import faults as FT
 from repro.core import mesh_federation as MF
 from repro.core.hfl import (FederatedClient, HeadPool, HFLConfig,
                             _eval_mse, _pool_kernel_ops, _train_step,
                             pool_errors, pool_errors_kernel,
                             pool_kernel_available)
-from repro.core.policies import FederationPolicies
+from repro.core.policies import FederationPolicies, policy_from_spec
 from repro.optim import adam
 
 
@@ -273,6 +274,9 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
     C = len(fed.clients)
     use_kernel = fed.cfg.use_pool_kernel
     k_ex = fed.schedule.exchange_every
+    admission = fed._admission()
+    smask = fed._straggler_mask
+    heads_rejected = 0
     n_exchange = 0            # executed sub-rounds that ran an exchange
     n_dispatch = 0            # jitted calls: train steps + Eq.-7 scorings +
                               # per-epoch evals (eager tree ops not counted)
@@ -280,6 +284,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
         epoch = fed.epoch
         mask = pol.switch.active_mask(
             [c.val_history for c in fed.clients], fed._switch_rng)
+        if smask is not None:   # stragglers train but miss every exchange
+            mask = np.asarray(mask, bool) & ~np.asarray(smask, bool)
         active = {c.name: bool(mask[i]) for i, c in enumerate(fed.clients)}
         iters = {c.name: c.train_epoch(R=fed.schedule.R)
                  for c in fed.clients}
@@ -320,7 +326,11 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                         if pol.selection.needs_errors:
                             n_dispatch += c.nf
                     fed.n_rounds[c.name] += 1
-                    fed.pool.publish(c.name, c.params["heads"], c.nf)
+                    if admission is None or FT.heads_admissible(
+                            c.params["heads"], admission):
+                        fed.pool.publish(c.name, c.params["heads"], c.nf)
+                    else:       # admission guard: the stale row persists
+                        heads_rejected += 1
             if progressed:
                 if exchange and any(active.values()):
                     n_exchange += 1
@@ -345,7 +355,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                           "state_bytes": sum(
                               _tree_bytes((c.params, c.opt_state,
                                            c.best_params))
-                              for c in fed.clients)}
+                              for c in fed.clients),
+                          **fed._fault_stats(heads_rejected)}
 
 
 # ---------------------------------------------------------------------------
@@ -383,7 +394,8 @@ def merge_sharded_argmin(vals, gidx, ns: int):
 
 def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
                        *, nf: int, policies: FederationPolicies,
-                       use_kernel: bool, feat_valid=None, shard=None):
+                       use_kernel: bool, feat_valid=None, shard=None,
+                       admission=None):
     """One federated opportunity for ALL clients as a traceable scan over
     clients — the body both :func:`fused_policy_round` (standalone jit) and
     the fused-epoch scan (:func:`_make_epoch_fn`) trace.  The policy
@@ -421,7 +433,19 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
     per-device minima + :func:`merge_sharded_argmin` (two (D, nf)
     all-gathers per client); other error-based policies all-gather the
     full (nf, ns) error matrix and select replicated.  ``None`` (the
-    single-device engines) traces exactly the unsharded body."""
+    single-device engines) traces exactly the unsharded body.
+
+    ``admission`` opts into the in-graph pool admission guard (the fault-
+    tolerance layer, ``core/faults.py``): a float L2 norm bound on any head
+    tree a client tries to publish.  Before the pool write-back each
+    candidate head is checked finite-and-within-bound; a rejected
+    publication leaves the previous pool row AND its age untouched (the
+    stale entry keeps aging under the staleness clock), and rows at the
+    :data:`~repro.core.faults.QUARANTINE_AGE` sentinel are excluded from
+    selection even under last-write-wins pools.  The body then returns a
+    FIFTH output: the (C,) bool per-client rejection mask for this
+    opportunity.  ``None`` (the default) traces exactly the original
+    4-output body — the no-faults bit-identity pin."""
     C = y_R.shape[0]
     ns = C * nf
     sel, transfer, poolp = policies.selection, policies.transfer, policies.pool
@@ -442,7 +466,14 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
         if feat_valid is not None:
             own = own | ~valid_flat          # padded rows are never sources
         if bounded:
+            # quarantined rows sit at age QUARANTINE_AGE > any max_age, so
+            # the staleness exclusion already hides them
             excluded = own | jnp.repeat(age > poolp.max_age, nf)
+            any_valid = jnp.any(~excluded)
+        elif admission is not None:
+            # last-write-wins pool under the admission guard: quarantined
+            # seed rows (zeroed, age = QUARANTINE_AGE) must still be hidden
+            excluded = own | jnp.repeat(age >= FT.QUARANTINE_AGE, nf)
             any_valid = jnp.any(~excluded)
         else:
             excluded = own
@@ -501,7 +532,8 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
         # take their masked path (see SelectionPolicy.select_batched)
         if shard is None or not (sel.needs_errors and sel.local_argmin):
             j = sel.select_batched(errs, excluded, key_i, nf=nf, ns=ns, i=i,
-                                   bounded=bounded or feat_valid is not None)
+                                   bounded=bounded or feat_valid is not None
+                                   or admission is not None)
         selected = jax.tree_util.tree_map(lambda p: p[j], fp)      # (nf, ...)
         mine = jax.tree_util.tree_map(lambda h: h[i], heads)
         blended = transfer.apply(mine, selected)
@@ -521,6 +553,15 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
         # inactive clients' stale entries persist (the pool policy decides
         # how long they stay *visible*)
         pub = active[i]
+        if admission is not None:
+            # pool admission guard: a candidate head must be finite and
+            # within the L2 norm bound, or the publication is rejected —
+            # the previous (clean) row and its age survive untouched
+            sq = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                     for leaf in jax.tree_util.tree_leaves(new_mine))
+            ok = jnp.isfinite(sq) & (sq <= jnp.float32(admission) ** 2)
+            rejected_i = pub & ~ok
+            pub = pub & ok
         pool = jax.tree_util.tree_map(
             lambda pl, m: pl.at[i].set(jnp.where(pub, m, pl[i])),
             pool, new_mine)
@@ -529,12 +570,16 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
             chosen = jnp.where(act & fv[i], j, -1).astype(jnp.int32)
         else:
             chosen = jnp.where(act, j, -1).astype(jnp.int32)
-        return (heads, pool, age), chosen
+        ys = (chosen, rejected_i) if admission is not None else chosen
+        return (heads, pool, age), ys
 
     keys = jax.random.split(key, C)
-    (heads, pool_heads, pool_age), chosen = jax.lax.scan(
+    (heads, pool_heads, pool_age), ys = jax.lax.scan(
         body, (heads, pool_heads, pool_age), (jnp.arange(C), keys))
-    return heads, pool_heads, pool_age, chosen
+    if admission is not None:
+        chosen, rejected = ys
+        return heads, pool_heads, pool_age, chosen, rejected
+    return heads, pool_heads, pool_age, ys
 
 
 @functools.partial(jax.jit, static_argnames=("nf", "policies", "use_kernel"))
@@ -621,7 +666,7 @@ def _make_batched_fns(lr: float):
 def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 use_kernel: bool, do_federate: bool, do_eval: bool, *,
                 exchange_every: int = 1, gather=None, local_rows=None,
-                shard=None):
+                shard=None, admission=None):
     """The fused whole-epoch computation shared by BOTH batched backends:
     a scan over the epoch's sub-rounds (vmapped Adam step on that round's
     R-slice, then the fused policy round), with the per-epoch validation
@@ -646,7 +691,12 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
     oracle's ``_recent``), then a train-only scan over the ``n_sub % k``
     leftover rounds.  No ``lax.cond`` around collectives — the cadence is
     static, so the mesh path segments identically on every device.  k=1
-    traces the historical flat scan unchanged (the bit-identity pin)."""
+    traces the historical flat scan unchanged (the bit-identity pin).
+
+    ``admission`` (a norm bound, or None) forwards to
+    :func:`_policy_round_body`'s pool admission guard; when set, the epoch
+    function returns ONE extra trailing output — the stacked
+    ``(exchange_rounds, C)`` bool per-opportunity rejection mask."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
@@ -672,14 +722,22 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 if bounded:
                     pool_age = pool_age + 1
                 key, sub = jax.random.split(key)
-                new_heads, pool_heads, pool_age, chosen = _policy_round_body(
+                out = _policy_round_body(
                     gather(params["heads"]), pool_heads, pool_age,
                     xd_g, y_g, active, sub, nf=nf,
-                    policies=policies, use_kernel=use_kernel, shard=shard)
+                    policies=policies, use_kernel=use_kernel, shard=shard,
+                    admission=admission)
+                if admission is not None:
+                    new_heads, pool_heads, pool_age, chosen, rej = out
+                else:
+                    new_heads, pool_heads, pool_age, chosen = out
                 params = {**params, "heads": local_rows(new_heads)}
             else:
                 chosen = jnp.full((C, nf), -1, jnp.int32)
-            return (params, opt_state, pool_heads, pool_age, key), chosen
+                if admission is not None:
+                    rej = jnp.zeros((C,), bool)
+            ys = (chosen, rej) if admission is not None else chosen
+            return (params, opt_state, pool_heads, pool_age, key), ys
 
         def train_only(carry, batch):
             params, opt_state, pool_heads, pool_age, key = carry
@@ -691,7 +749,7 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
         if not do_federate or k_ex == 1:
             # the historical flat scan — one (train, exchange?) step per
             # sub-round; exchange_every=1 must stay bit-identical to it
-            carry, chosen = jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
+            carry, ys = jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
         else:
             n_grp, rem = divmod(n_sub, k_ex)
             grouped = jax.tree_util.tree_map(
@@ -708,12 +766,13 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 return body(carry, jax.tree_util.tree_map(
                     lambda t: t[k_ex - 1], batch_k))
 
-            carry, chosen = jax.lax.scan(group, carry, grouped)
+            carry, ys = jax.lax.scan(group, carry, grouped)
             if rem:                       # leftover rounds never exchange
                 carry, _ = jax.lax.scan(
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
                                            (xs_r, xd_r, y_r)))
+        chosen, rejected = ys if admission is not None else (ys, None)
         (params, opt_state, pool_heads, pool_age, key) = carry
         if do_eval:
             v = evaluate(params, val_xs, val_xd, val_y)  # (local clients,)
@@ -726,8 +785,9 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 best_params, params)
         else:
             v = None
-        return (params, opt_state, pool_heads, pool_age, key, best_val,
-                best_params, v, chosen)
+        out = (params, opt_state, pool_heads, pool_age, key, best_val,
+               best_params, v, chosen)
+        return out + (rejected,) if admission is not None else out
 
     return epoch
 
@@ -735,7 +795,7 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
 @functools.lru_cache(maxsize=None)
 def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
                    use_kernel: bool, do_federate: bool, do_eval: bool,
-                   exchange_every: int = 1):
+                   exchange_every: int = 1, admission=None):
     """Compile-cached whole-epoch function: ONE dispatch scans every
     sub-round of an epoch — the vmapped Adam step on that round's R-slice,
     then the fused policy round (selection, blend, publish, aging, RNG
@@ -761,7 +821,7 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
     ``do_federate`` gating (a non-exchange round IS a ``do_federate=False``
     round)."""
     epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval,
-                        exchange_every=exchange_every)
+                        exchange_every=exchange_every, admission=admission)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -828,6 +888,9 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     pool_age = jnp.asarray([fed.pool.age_of(n_) for n_ in names], jnp.int32)
     use_kernel = cfg.use_pool_kernel and pool_kernel_available()
     lut = _selection_lut(names, nf)
+    admission = fed._admission()
+    smask = fed._straggler_mask
+    heads_rejected = 0
     k_ex = fed.schedule.exchange_every
     exch_mask = fed.schedule.exchange_mask(n_sub)
     n_exch_epoch = fed.schedule.exchanges(n_sub)
@@ -869,9 +932,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
         if mesh is not None:
             return MF._make_mesh_epoch_fn(cfg.lr, nf, cfg.w, pol,
                                           use_kernel, do_federate, do_eval,
-                                          mesh, C, exchange_every)
+                                          mesh, C, exchange_every,
+                                          admission)
         return _make_epoch_fn(cfg.lr, nf, pol, use_kernel, do_federate,
-                              do_eval, exchange_every)
+                              do_eval, exchange_every, admission)
 
     # the fused path runs the whole epoch in ONE dispatch; any callback that
     # needs per-round delivery forces the chunked path (one dispatch per
@@ -901,6 +965,8 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
         epoch = fed.epoch
         active = np.asarray(pol.switch.active_mask(histories,
                                                    fed._switch_rng))
+        if smask is not None:   # stragglers train but miss every exchange
+            active = active & ~np.asarray(smask, bool)
         active_dev = jnp.asarray(active)
         if mesh is not None:
             active_dev = MF.replicate(mesh, active_dev)
@@ -910,8 +976,12 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
         fed._mid_epoch = True
         if fused:
             epoch_fn = make_epoch_fn(do_federate, True, k_ex)
-            (*state, v, chosen) = epoch_fn(*state, xs_r, xd_r, y_r,
-                                           active_dev, *val)
+            out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val)
+            if admission is not None:
+                (*state, v, chosen, rej) = out
+                heads_rejected += int(np.asarray(rej).sum())
+            else:
+                (*state, v, chosen) = out
             n_dispatch += 1
         else:
             chunks = []
@@ -920,9 +990,14 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                 # exactly a do_federate=False dispatch (train + eval only)
                 epoch_fn = make_epoch_fn(do_federate and bool(exch_mask[rnd]),
                                          rnd == n_sub - 1)
-                (*state, v, ch) = epoch_fn(
+                out = epoch_fn(
                     *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
                     y_r[rnd:rnd + 1], active_dev, *val)
+                if admission is not None:
+                    (*state, v, ch, rej) = out
+                    heads_rejected += int(np.asarray(rej).sum())
+                else:
+                    (*state, v, ch) = out
                 chunks.append(ch)
                 n_dispatch += 1
                 # sync the carried state (and the live round counters)
@@ -936,8 +1011,11 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                     cb.on_round(fed, epoch, rnd)
             if n_sub == 0:      # no trainable sub-round: eval-only dispatch
                 epoch_fn = make_epoch_fn(do_federate, True)
-                (*state, v, ch) = epoch_fn(*state, xs_r, xd_r, y_r,
-                                           active_dev, *val)
+                out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val)
+                if admission is not None:
+                    (*state, v, ch, _rej) = out
+                else:
+                    (*state, v, ch) = out
                 chunks.append(ch)
                 n_dispatch += 1
             chosen = jnp.concatenate(chunks) if chunks else None
@@ -973,7 +1051,8 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                           "exchange_every": k_ex,
                           "exchange_rounds": exchange_rounds,
                           "pool_bytes_gathered": pool_bytes,
-                          "state_bytes": state_bytes}
+                          "state_bytes": state_bytes,
+                          **fed._fault_stats(heads_rejected)}
     # write the final state back so the clients / pool / rng stay canonical
     sync()
     fed._sync = None
@@ -1024,7 +1103,7 @@ class Federation:
                  schedule: Optional[RoundSchedule] = None,
                  callbacks: Sequence[Callback] = (),
                  engine: str = "sequential",
-                 mesh=None):
+                 mesh=None, faults=None):
         if engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {engine!r}")
         self.clients = list(clients)
@@ -1049,9 +1128,28 @@ class Federation:
         self.epoch = 0
         self.n_rounds: Dict[str, int] = {n: 0 for n in names}
         self.selections: Dict[str, list] = {n: [] for n in names}
+        # fault-tolerance layer (core/faults.py): an *enabled* FaultPlan
+        # arms the pool admission guard; a disabled plan (all rates zero)
+        # or None keeps every engine bit-identical to a fault-free build
+        self.faults = faults
+        # (C,) bool poked by the participation orchestrator before fit():
+        # True rows are this wave's stragglers (they train, never exchange)
+        self._straggler_mask = None
+        self._seed_rejected = 0
         self.pool = HeadPool()
+        admission = self._admission()
         for c in self.clients:   # asynchronous start: pool is never empty
-            self.pool.publish(c.name, c.params["heads"], c.nf)
+            if admission is not None and not FT.heads_admissible(
+                    c.params["heads"], admission):
+                # quarantine a poisoned seed head: publish a zeroed row at
+                # the sentinel age so no selector ever sees it (a clean
+                # republication later revives the row at age 0)
+                self.pool.publish(c.name,
+                                  FT.zero_heads_like(c.params["heads"]),
+                                  c.nf, age=FT.QUARANTINE_AGE)
+                self._seed_rejected += 1
+            else:
+                self.pool.publish(c.name, c.params["heads"], c.nf)
         self._sel_rng = np.random.default_rng(cfg.seed)
         self._switch_rng = np.random.default_rng(
             np.random.SeedSequence([cfg.seed, 0x5F]))
@@ -1073,6 +1171,27 @@ class Federation:
         if self.mesh is not None and MF.mesh_devices(self.mesh) > 1:
             return self.mesh
         return None
+
+    def _admission(self) -> Optional[float]:
+        """The pool admission guard's norm bound, or None when the guard is
+        off (no FaultPlan, or a disabled all-zero plan — the engines then
+        trace exactly the fault-free computation)."""
+        if self.faults is not None and self.faults.enabled:
+            return float(self.faults.norm_bound)
+        return None
+
+    def _fault_stats(self, heads_rejected: int) -> dict:
+        """The fault counters every engine folds into ``dispatch_stats``.
+        Dropout / wave degradation happen a layer up (the participation
+        orchestrator re-rounds wave geometry before this Federation even
+        exists), so a plain Federation reports zeros there and the
+        orchestrator overwrites them with wave-aggregated counts."""
+        smask = self._straggler_mask
+        return {"heads_rejected": int(heads_rejected)
+                + int(self._seed_rejected),
+                "clients_dropped": 0,
+                "stragglers": 0 if smask is None else int(np.sum(smask)),
+                "waves_degraded": 0}
 
     # -- training ----------------------------------------------------------
 
@@ -1204,6 +1323,8 @@ class Federation:
                           for (u, i), a in self.pool.ages.items()},
             "sel_rng": self._sel_rng.bit_generator.state,
             "switch_rng": self._switch_rng.bit_generator.state,
+            "faults": (self.faults.spec()
+                       if self.faults is not None else None),
         }
         # atomic manifest write = the commit; only then prune state files
         # superseded by it (the previous pair stays intact until here)
@@ -1254,12 +1375,14 @@ class Federation:
                     f"lr={ck_cfg['lr']}, w={ck_cfg['w']} — rebuild the "
                     f"clients with the checkpointed config")
         cfg = HFLConfig(**manifest["cfg"])
+        fspec = manifest.get("faults")
         fed = cls(clients, cfg,
                   policies=FederationPolicies.from_spec(manifest["policies"]),
                   schedule=RoundSchedule(**manifest["schedule"]),
                   callbacks=callbacks,
                   engine=engine or manifest["engine"],
-                  mesh=mesh)
+                  mesh=mesh,
+                  faults=policy_from_spec(fspec) if fspec else None)
         state = ckpt.load(d / manifest.get("state_file", "state.msgpack"))
         if state.get("epoch") != manifest["epoch"]:
             raise ValueError(

@@ -193,10 +193,15 @@ class HeadPool:
         True where the entry is young enough to be served (always, when
         `max_age` is None — last-write-wins).  Pass the `keys` that
         stacked_for returned to guarantee alignment with its rows."""
+        from repro.core import faults as FT
         if keys is None:
             keys = [k for k in sorted(self.entries) if k[0] != exclude_user]
         if max_age is None:
-            return np.ones(len(keys), bool)
+            # Unbounded pools still hide quarantined rows (entries seeded
+            # from an inadmissible head at FT.QUARANTINE_AGE) — a clean
+            # republication resets the age and revives the row.
+            return np.array([self.ages.get(k, 0) < FT.QUARANTINE_AGE
+                             for k in keys], bool)
         return np.array([self.ages.get(k, 0) <= max_age for k in keys],
                         bool)
 
@@ -209,9 +214,12 @@ class HeadPool:
 def pool_errors(pool_stacked, xd_i, y):
     """Mean squared preliminary-prediction error of every pool head on the
     client's last-R dense vectors of feature i.  xd_i: (R, w); y: (R,).
-    Returns (ns,)."""
+    Returns (ns,).  Non-finite errors (a NaN/Inf pool head or probe) are
+    pinned to +inf so ``argmin`` never selects a poisoned candidate —
+    finite scores pass through bit-exactly."""
     preds = N.head_pool_apply(pool_stacked, xd_i)      # (ns, R)
-    return jnp.mean((y[None, :] - preds) ** 2, axis=1)
+    errs = jnp.mean((y[None, :] - preds) ** 2, axis=1)
+    return jnp.where(jnp.isfinite(errs), errs, jnp.inf)
 
 
 @functools.lru_cache(maxsize=None)

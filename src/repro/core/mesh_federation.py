@@ -191,7 +191,8 @@ def replicate(mesh: Mesh, x):
 def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
                         policies: FederationPolicies, use_kernel: bool,
                         do_federate: bool, do_eval: bool, mesh: Mesh,
-                        n_clients: int, exchange_every: int = 1):
+                        n_clients: int, exchange_every: int = 1,
+                        admission=None):
     """Compile-cached client-sharded whole-epoch function — the mesh twin of
     ``federation._make_epoch_fn``: the SAME shared epoch computation
     (``federation._epoch_body``), same signature, same donation contract,
@@ -236,12 +237,18 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
     epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval,
                         exchange_every=exchange_every, gather=gather,
                         local_rows=local_rows,
-                        shard=(axis, mesh_devices(mesh)))
+                        shard=(axis, mesh_devices(mesh)),
+                        admission=admission)
+    out_specs = (pspecs, cl, rep, rep, rep, cl, pspecs,
+                 cl if do_eval else None, rep)
+    if admission is not None:
+        # the admission guard's per-opportunity rejection mask is computed
+        # from the replicated pool carry — replicated like the selections
+        out_specs = out_specs + (rep,)
     sharded = shard_map(
         epoch, mesh=mesh,
         in_specs=(pspecs, cl, rep, rep, rep, cl, pspecs,
                   data, data, data, rep, cl, cl, cl),
-        out_specs=(pspecs, cl, rep, rep, rep, cl, pspecs,
-                   cl if do_eval else None, rep),
+        out_specs=out_specs,
         check_rep=False)
     return jax.jit(sharded, donate_argnums=(0, 1, 2, 3, 4, 5, 6))

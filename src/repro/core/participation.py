@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.core import faults as FT
 from repro.core import mesh_federation as MF
 from repro.core.federation import (Federation, RoundSchedule, _tree_bytes)
 from repro.core.hfl import FederatedClient, HFLConfig
@@ -77,6 +78,28 @@ def host_tree(tree):
 # ClientStore — host-resident learnable state
 # ---------------------------------------------------------------------------
 
+class StoreCorruption(RuntimeError):
+    """A stored entry failed its checksum after the bounded reread budget.
+    The orchestrator's recovery is to discard the entry and rebuild the
+    client from its deterministic per-index builder (see
+    :meth:`ParticipatingFederation.fit`)."""
+
+
+def entry_checksum(entry: dict) -> int:
+    """crc32 over every byte a store entry round-trips: the three numpy
+    trees' leaf buffers plus the float64 encodings of best_val and the
+    val history.  Bit-exact round-trip ⇒ checksum match; any single-byte
+    corruption flips it."""
+    crc = 0
+    for tree in (entry["params"], entry["opt_state"], entry["best_params"]):
+        for leaf in jax.tree_util.tree_leaves(tree):
+            crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+    crc = zlib.crc32(np.float64(entry["best_val"]).tobytes(), crc)
+    crc = zlib.crc32(np.asarray(entry["val_history"],
+                                np.float64).tobytes(), crc)
+    return crc
+
+
 class ClientStore:
     """Host-side store of per-client learnable state (params / opt_state /
     best_params as numpy trees, plus best_val + val_history scalars).
@@ -84,23 +107,47 @@ class ClientStore:
     Grows only with clients that have actually been sampled — a population
     index never drawn costs nothing here; its first wave starts from the
     deterministic fresh init its :class:`ClientPopulation` builds.  Values
-    are bit-exact round-trips of whatever was scattered in."""
+    are bit-exact round-trips of whatever was scattered in.
+
+    Every entry carries a crc32 over its leaf bytes, written at
+    :meth:`put` and verified at :meth:`get` with a bounded reread budget
+    (``GET_RETRIES``).  A persistent mismatch raises
+    :class:`StoreCorruption` — the store never silently serves corrupted
+    state."""
+
+    GET_RETRIES = 3
 
     def __init__(self):
         self._states: Dict[str, dict] = {}
+        self._crcs: Dict[str, int] = {}
 
     def put(self, name: str, *, params, opt_state, best_params,
             best_val: float, val_history: Sequence[float]) -> None:
-        self._states[name] = {
+        entry = {
             "params": host_tree(params),
             "opt_state": host_tree(opt_state),
             "best_params": host_tree(best_params),
             "best_val": float(best_val),
             "val_history": [float(v) for v in val_history],
         }
+        self._states[name] = entry
+        self._crcs[name] = entry_checksum(entry)
 
     def get(self, name: str) -> dict:
-        return self._states[name]
+        entry = self._states[name]
+        for _ in range(self.GET_RETRIES):
+            if entry_checksum(entry) == self._crcs[name]:
+                return entry
+        raise StoreCorruption(
+            f"store entry {name!r} failed checksum verification "
+            f"{self.GET_RETRIES} times (host memory corruption); rebuild "
+            f"it from the population's deterministic builder")
+
+    def discard(self, name: str) -> None:
+        """Drop an entry (the corruption-recovery path: the client's next
+        wave starts from its deterministic fresh init again)."""
+        self._states.pop(name, None)
+        self._crcs.pop(name, None)
 
     def __contains__(self, name: str) -> bool:
         return name in self._states
@@ -305,7 +352,15 @@ class ParticipatingFederation:
     more waves.  ``save``/``restore`` checkpoint the store, the pool, the
     sampler RNG, and both engine RNG streams — resuming mid-schedule
     replays the exact participation schedule and histories an
-    uninterrupted run would have produced."""
+    uninterrupted run would have produced.
+
+    ``faults=`` takes a :class:`~repro.core.faults.FaultPlan`: each wave
+    the seeded injector drops clients (the wave re-rounds its geometry and
+    proceeds degraded), marks stragglers (they train but miss every
+    exchange, aging their pool entries), and corrupts byzantine clients'
+    heads (quarantined by the inner engines' pool admission guard).  The
+    plan spec and the accumulated fault log ride the checkpoint manifest,
+    so a restored run replays the identical failure scenario."""
 
     def __init__(self, population: ClientPopulation,
                  cfg: Optional[HFLConfig] = None, *,
@@ -314,7 +369,8 @@ class ParticipatingFederation:
                  schedule: Optional[RoundSchedule] = None,
                  engine: str = "batched",
                  mesh=None,
-                 sample_multiple: Optional[int] = None):
+                 sample_multiple: Optional[int] = None,
+                 faults: Optional[FT.FaultPlan] = None):
         self.population = population
         self.cfg = cfg or HFLConfig()
         self.policies = policies if policies is not None \
@@ -328,6 +384,13 @@ class ParticipatingFederation:
             raise ValueError("mesh= requires engine='batched'")
         self.engine = engine
         self.mesh = mesh
+        # deterministic fault injection (core/faults.py): a disabled or
+        # absent plan is exactly "no faults" — the wave loop and the inner
+        # engines run their historical bit-identical paths
+        self.faults = faults
+        self._injector = FT.FaultInjector(faults) \
+            if faults is not None and faults.enabled else None
+        self.fault_log: List[FT.WaveFaults] = []
         # the granularity sampled counts are rounded to — defaults to the
         # mesh device count; pass it explicitly to reproduce a D-device
         # run's exact participation schedule on another engine/mesh (the
@@ -377,33 +440,75 @@ class ParticipatingFederation:
         gather_bytes = scatter_bytes = 0
         resident_clients = resident_bytes = 0
         dispatches = exchange_rounds = pool_bytes = 0
+        heads_rejected = clients_dropped = stragglers_n = 0
+        waves_degraded = store_rebuilds = 0
         cohorts_max = 1
         path = None
         while self.wave < target:
             idx = self.participation.sample(self.population, self._part_rng,
                                             multiple_of=mult)
-            clients = self.population.build([int(i) for i in idx])
-            names = [self.population.name_of(int(i)) for i in idx]
+            active = [int(i) for i in idx]
+            wf = None
+            if self._injector is not None:
+                # dropout-tolerant wave: drop drawn clients and re-round
+                # the geometry BEFORE anything is built or gathered — the
+                # fused engines never see a ragged stack.  The draw is a
+                # pure function of (plan.seed, wave, index), so a restored
+                # run replays the identical degraded schedule.
+                wf = self._injector.wave_faults(self.wave, active, mult)
+                dropped = set(wf.dropped)
+                active = [i for i in active if i not in dropped]
+                self.fault_log.append(wf)
+                clients_dropped += len(wf.dropped)
+                stragglers_n += len(wf.stragglers)
+                waves_degraded += int(wf.degraded)
+            clients = self.population.build(active)
+            names = [self.population.name_of(i) for i in active]
             got = [c.name for c in clients]
             if got != names:
                 raise ValueError(
                     f"population.build returned names {got} for indices "
-                    f"{idx.tolist()}, expected {names} (name_of and build "
+                    f"{active}, expected {names} (name_of and build "
                     f"must agree — the store is keyed by name)")
-            # gather: stored state onto the freshly built clients
+            # gather: stored state onto the freshly built clients.  A
+            # checksum-corrupt entry is discarded and the client rebuilt
+            # from its deterministic fresh init (the self-healing path).
             for c in clients:
                 if c.name in self.store:
-                    st = self.store.get(c.name)
+                    try:
+                        st = self.store.get(c.name)
+                    except StoreCorruption:
+                        self.store.discard(c.name)
+                        store_rebuilds += 1
+                        continue
                     c.params = st["params"]
                     c.opt_state = st["opt_state"]
                     c.best_params = st["best_params"]
                     c.best_val = st["best_val"]
                     c.val_history = list(st["val_history"])
+            if wf is not None and wf.byzantine:
+                # byzantine clients' heads are corrupted host-side before
+                # the wave trains; the inner Federation's admission guard
+                # quarantines the poisoned publication at pool-seed time
+                # and rejects any poisoned republication in-graph
+                byz = set(wf.byzantine)
+                for c, i in zip(clients, active):
+                    if i in byz:
+                        c.params = dict(c.params)
+                        c.params["heads"] = self._injector.corrupt_heads(
+                            c.params["heads"], self.wave, i)
             fed = Federation(
                 clients, self.cfg, policies=self.policies,
                 schedule=RoundSchedule(1, self.schedule.R,
                                        self.schedule.exchange_every),
-                engine=self.engine, mesh=self.mesh)
+                engine=self.engine, mesh=self.mesh, faults=self.faults)
+            if wf is not None and wf.stragglers:
+                # stragglers train but miss every exchange this wave: the
+                # engines mask their switch off, so their pool entries age
+                # under the bounded-staleness clock
+                strag = set(wf.stragglers)
+                fed._straggler_mask = np.array([i in strag for i in active],
+                                               bool)
             # the RNG streams and device key persist ACROSS waves: the
             # generators are shared by reference (mutated in place by the
             # inner fit), the key is threaded through explicitly
@@ -447,15 +552,26 @@ class ParticipatingFederation:
             dispatches += int(st.get("dispatches", 0))
             exchange_rounds += int(st.get("exchange_rounds", 0))
             pool_bytes += int(st.get("pool_bytes_gathered", 0))
+            heads_rejected += int(st.get("heads_rejected", 0))
             cohorts_max = max(cohorts_max, int(st.get("cohorts", 1)))
             path = st.get("path", path)
-            mean_val = float(np.mean([hist[n]["val"][-1] for n in names]))
-            self.wave_log.append({
-                "wave": self.wave, "active": [int(i) for i in idx],
+            # a byzantine client's own validation goes NaN (it trains on
+            # its corrupted state, sacrificially) — the wave mean reports
+            # over the finite clients so the degradation curve stays real
+            finals = [hist[n]["val"][-1] for n in names]
+            finite = [v for v in finals if np.isfinite(v)]
+            mean_val = float(np.mean(finite)) if finite else float("nan")
+            row = {
+                "wave": self.wave, "active": active,
                 "mean_val": mean_val,
                 "state_bytes": sb,
                 "rounds": sum(fed.n_rounds.values()),
-            })
+            }
+            if wf is not None:
+                row["dropped"] = list(wf.dropped)
+                row["stragglers"] = list(wf.stragglers)
+                row["byzantine"] = list(wf.byzantine)
+            self.wave_log.append(row)
             if verbose:
                 print(f"[wave {self.wave:3d}] {len(clients)}/"
                       f"{self.population.size} clients  "
@@ -485,6 +601,11 @@ class ParticipatingFederation:
             "exchange_every": self.schedule.exchange_every,
             "exchange_rounds": exchange_rounds,
             "pool_bytes_gathered": pool_bytes,
+            "heads_rejected": heads_rejected,
+            "clients_dropped": clients_dropped,
+            "stragglers": stragglers_n,
+            "waves_degraded": waves_degraded,
+            "store_rebuilds": store_rebuilds,
         }
         return self.results()
 
@@ -543,6 +664,14 @@ class ParticipatingFederation:
             "part_rng": self._part_rng.bit_generator.state,
             "sel_rng": self._sel_rng.bit_generator.state,
             "switch_rng": self._switch_rng.bit_generator.state,
+            # the failure scenario rides the manifest: the plan spec
+            # re-seeds the injector (draws are pure functions of
+            # (seed, wave, index), so no RNG state to carry) and the log
+            # records the faults that already fired, so a restored run
+            # replays the exact degraded schedule
+            "faults": (self.faults.spec()
+                       if self.faults is not None else None),
+            "fault_log": FT.fault_log_json(self.fault_log),
         }
         tmp = d / "manifest.json.tmp"
         tmp.write_text(json.dumps(manifest))
@@ -579,6 +708,7 @@ class ParticipatingFederation:
                 f"{population.size} ({population.fingerprint()}) — "
                 f"re-declare the population with the same arguments")
         cfg = HFLConfig(**manifest["cfg"])
+        fspec = manifest.get("faults")
         fed = cls(population, cfg,
                   policies=FederationPolicies.from_spec(
                       manifest["policies"]),
@@ -587,7 +717,8 @@ class ParticipatingFederation:
                   engine=engine or manifest["engine"],
                   mesh=mesh,
                   sample_multiple=sample_multiple
-                  or manifest.get("sample_multiple"))
+                  or manifest.get("sample_multiple"),
+                  faults=policy_from_spec(fspec) if fspec else None)
         state = ckpt.load(d / manifest["state_file"])
         if state.get("wave") != manifest["wave"]:
             raise ValueError(
@@ -613,6 +744,8 @@ class ParticipatingFederation:
         fed.last_test = {n: float(v)
                          for n, v in manifest["last_test"].items()}
         fed.wave_log = list(manifest["wave_log"])
+        fed.fault_log = FT.fault_log_from_json(
+            manifest.get("fault_log", []))
         fed._key = jnp.asarray(state["key"])
         fed._part_rng.bit_generator.state = manifest["part_rng"]
         fed._sel_rng.bit_generator.state = manifest["sel_rng"]

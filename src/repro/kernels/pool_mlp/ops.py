@@ -62,6 +62,10 @@ def pool_mlp_errors(pool_stacked, xd, y, *, block_pool: int = 8,
     BP = min(block_pool, ns)
     errs = pool_mlp_pallas(xd, y, _padded_weights(pool_stacked, BP),
                            block_pool=BP, interpret=interpret)
+    # Non-finite scores (NaN probes or poisoned pool rows) pin to +inf so
+    # argmin never selects them — identical to the vmap fallback's pinning,
+    # and an exact pass-through for finite errors.
+    errs = jnp.where(jnp.isfinite(errs), errs, jnp.inf)
     return errs[:ns]
 
 
@@ -126,4 +130,8 @@ def pool_mlp_errors_features(pool_stacked, xd_feats, y, *,
     errs = pool_mlp_features_pallas(xd_feats, y,
                                     _padded_weights(pool_stacked, BP),
                                     block_pool=BP, interpret=interpret)
+    # NaN-probe hardening: pin non-finite scores to +inf (NaN propagates
+    # through argmin unpredictably across backends; +inf loses to every
+    # finite candidate on all of them).  Finite errors pass through exactly.
+    errs = jnp.where(jnp.isfinite(errs), errs, jnp.inf)
     return errs[:, :ns]

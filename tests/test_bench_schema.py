@@ -26,6 +26,8 @@ def _payload():
         "dispatch_path": "fused", "speedup_vs_sequential": 2.5,
         "population": 8, "participation_fraction": 1.0,
         "resident_clients": 8, "resident_state_bytes": 262144,
+        "fault_rate": 0.0, "byzantine_frac": 0.0,
+        "heads_rejected": 0, "waves_degraded": 0, "mean_val": None,
     }
     seq = dict(row, engine="sequential", devices=1, exchange_every=1,
                pool_bytes_gathered=0, speedup_vs_sequential=1.0)
@@ -33,6 +35,9 @@ def _payload():
                    population=100000, participation_fraction=0.0003,
                    resident_clients=30, resident_state_bytes=58900000,
                    speedup_vs_sequential=None)
+    faulted = dict(sampled, engine="participating+fault0.2",
+                   fault_rate=0.2, byzantine_frac=0.1,
+                   heads_rejected=7, waves_degraded=2, mean_val=0.93)
     return {
         "benchmark": "fl_scale",
         "unix_time": 1700000000,
@@ -45,8 +50,9 @@ def _payload():
                    "engines": ["sequential", "batched"],
                    "exchange_every": [1, 2],
                    "population_size": 100000, "fraction": 0.0003,
-                   "participation": "stratified", "waves": 2},
-        "results": [seq, row, sampled],
+                   "participation": "stratified", "waves": 2,
+                   "fault_rate": [0.0, 0.2], "byzantine_frac": 0.1},
+        "results": [seq, row, sampled, faulted],
         "profiles": {"8": {"train_us_per_round": 10.0,
                            "policy_us_per_round": 20.0,
                            "eval_us_per_epoch": 5.0,
@@ -78,11 +84,39 @@ def test_round_trips_through_json():
                                  "client_rounds_per_s", "dispatch_path",
                                  "population", "participation_fraction",
                                  "resident_clients",
-                                 "resident_state_bytes"))
+                                 "resident_state_bytes", "fault_rate",
+                                 "heads_rejected", "waves_degraded"))
 def test_rejects_row_with_missing_key(key):
     p = _payload()
     del p["results"][1][key]
     with pytest.raises(ValueError, match=key):
+        validate_payload(p)
+
+
+def test_rejects_bad_fault_fields():
+    p = _payload()
+    p["results"][3]["fault_rate"] = 1.5
+    with pytest.raises(ValueError, match="fault_rate"):
+        validate_payload(p)
+    p = _payload()
+    p["results"][3]["byzantine_frac"] = -0.1
+    with pytest.raises(ValueError, match="byzantine_frac"):
+        validate_payload(p)
+    p = _payload()
+    p["results"][3]["heads_rejected"] = -1
+    with pytest.raises(ValueError, match="counters"):
+        validate_payload(p)
+    p = _payload()
+    p["results"][3]["heads_rejected"] = 7.5      # non-int counter
+    with pytest.raises(ValueError, match="heads_rejected"):
+        validate_payload(p)
+    p = _payload()
+    p["results"][3]["mean_val"] = "low"
+    with pytest.raises(ValueError, match="mean_val"):
+        validate_payload(p)
+    p = _payload()
+    del p["config"]["fault_rate"]
+    with pytest.raises(ValueError, match="fault_rate"):
         validate_payload(p)
 
 

@@ -1,0 +1,510 @@
+"""Fault-tolerance layer (repro.core.faults + the engines' admission guard
++ the participation layer's dropout-tolerant waves and self-healing store).
+
+Pins the ISSUE-8 acceptance surface: with a disabled FaultPlan the engines
+are bit-identical to their no-plan selves on the batched, cohort, and mesh
+paths; with injected dropout + byzantine heads training completes, no
+poisoned head is ever admitted to the pool (dispatch_stats counters + pool
+finiteness), the fault schedule is a pure function of (seed, wave, index)
+so it replays across engines and save/restore; and the ClientStore detects
+single-byte corruption by checksum and rebuilds from the deterministic
+per-index builder."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import faults as FT
+from repro.core.experiment import tensor_population
+from repro.core.federation import Federation, RoundSchedule
+from repro.core.hfl import HeadPool, HFLConfig
+from repro.core.participation import (ClientStore, ParticipatingFederation,
+                                      StoreCorruption, UniformParticipation,
+                                      entry_checksum)
+from repro.core.policies import policy_from_spec
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _cfg(**kw):
+    kw.setdefault("epochs", 3)
+    kw.setdefault("R", 10)
+    kw.setdefault("mode", "hfl")
+    kw.setdefault("seed", 0)
+    return HFLConfig(**kw)
+
+
+def _pop(cfg, n=8, nf_choices=(3,), seed=0):
+    return tensor_population(n, cfg, seed=seed, nf_choices=nf_choices,
+                             n_train=20, n_eval=10)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="dropout"):
+        FT.FaultPlan(dropout=1.5)
+    with pytest.raises(ValueError, match="byzantine"):
+        FT.FaultPlan(byzantine=-0.1)
+    with pytest.raises(ValueError, match="corruption"):
+        FT.FaultPlan(corruption="gremlins")
+    with pytest.raises(ValueError, match="norm_bound"):
+        FT.FaultPlan(norm_bound=0.0)
+
+
+def test_fault_plan_enabled_and_spec_roundtrip():
+    assert not FT.FaultPlan().enabled            # all-zero plan is inert
+    plan = FT.FaultPlan(dropout=0.2, byzantine=0.1, corruption="inf",
+                        norm_bound=50.0, seed=9)
+    assert plan.enabled
+    spec = plan.spec()
+    again = policy_from_spec(json.loads(json.dumps(spec)))
+    assert again == plan
+
+
+def test_wave_faults_json_roundtrip():
+    wf = FT.WaveFaults(wave=3, dropped=(1, 4), stragglers=(2,),
+                       byzantine=(7,))
+    assert FT.WaveFaults.from_json(json.loads(json.dumps(wf.to_json()))) \
+        == wf
+    assert wf.degraded
+    assert not FT.WaveFaults(wave=0, stragglers=(1,)).degraded
+
+
+# ---------------------------------------------------------------------------
+# reround_wave geometry
+# ---------------------------------------------------------------------------
+
+def test_reround_keeps_survivors_in_sample_order():
+    kept, dropped = FT.reround_wave([3, 1, 7, 5], [1, 5])
+    assert kept == [3, 7] and dropped == [1, 5]
+
+
+def test_reround_revives_to_one_multiple():
+    # all four drawn dropped on a 4-multiple: everyone revives
+    kept, dropped = FT.reround_wave([0, 1, 2, 3], [0, 1, 2, 3], multiple=4)
+    assert kept == [0, 1, 2, 3] and dropped == []
+    # a wave never goes empty even with multiple=1
+    kept, dropped = FT.reround_wave([5, 9], [5, 9])
+    assert kept == [5] and dropped == [9]
+
+
+def test_reround_trims_to_multiple():
+    # 8 sampled, 2 dropped -> 6 survivors, trimmed to 4 (highest indices)
+    kept, dropped = FT.reround_wave(list(range(8)), [0, 1], multiple=4)
+    assert kept == [2, 3, 4, 5] and dropped == [0, 1, 6, 7]
+    assert len(kept) % 4 == 0
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector determinism + corruption modes
+# ---------------------------------------------------------------------------
+
+def test_injector_draws_are_index_addressable():
+    """The same (seed, wave, index) faults identically no matter what other
+    indices are in the wave — the property that makes schedules replay
+    across engines and device counts.  (dropout=0 so geometry re-rounding
+    cannot reclassify anyone between the two calls.)"""
+    inj = FT.FaultInjector(FT.FaultPlan(straggler=0.4, byzantine=0.4,
+                                        seed=2))
+    cls = lambda wf, i: ("strag" if i in wf.stragglers else
+                         "byz" if i in wf.byzantine else "ok")
+    a = inj.wave_faults(5, list(range(12)))
+    b = inj.wave_faults(5, [3, 4, 5])
+    assert [cls(a, i) for i in (3, 4, 5)] == [cls(b, i) for i in (3, 4, 5)]
+    assert inj.wave_faults(5, list(range(12))) == a   # stateless replay
+    assert inj.wave_faults(6, list(range(12))) != a   # wave-keyed draws
+
+
+def test_corruption_modes():
+    heads = {"w": np.ones((2, 3), np.float32), "b": np.full((2,), 2.0,
+                                                            np.float32)}
+    for mode, check in (
+            ("nan", lambda a: np.isnan(a).all()),
+            ("inf", lambda a: np.isposinf(a).all()),
+            ("explode", lambda a: (np.abs(a) > 1e9).all()),
+            ("signflip", lambda a: (a < 0).all())):
+        inj = FT.FaultInjector(FT.FaultPlan(byzantine=1.0, corruption=mode))
+        bad = inj.corrupt_heads(heads, wave=0, index=3)
+        for leaf in jax.tree_util.tree_leaves(bad):
+            assert check(np.asarray(leaf)), mode
+            assert leaf.dtype == np.float32
+        # deterministic: the same (wave, index) corrupts identically
+        again = inj.corrupt_heads(heads, wave=0, index=3)
+        np.testing.assert_array_equal(bad["w"], again["w"])
+
+
+def test_heads_admissible():
+    ok = {"w": np.ones((2, 2), np.float32)}
+    assert FT.heads_admissible(ok, 1e6)
+    assert not FT.heads_admissible({"w": np.full((2, 2), np.nan,
+                                                 np.float32)}, 1e6)
+    assert not FT.heads_admissible({"w": np.full((2, 2), np.inf,
+                                                 np.float32)}, 1e6)
+    assert not FT.heads_admissible({"w": np.full((2, 2), 1e9,
+                                                 np.float32)}, 1e6)
+    # documented limitation: a sign-flip preserves the norm and passes
+    assert FT.heads_admissible({"w": -np.ones((2, 2), np.float32)}, 1e6)
+
+
+def test_pool_fresh_mask_hides_quarantined_rows():
+    pool = HeadPool()
+    heads = {"w": np.zeros((2, 1, 1), np.float32)}
+    pool.publish("a", heads, 2)
+    pool.publish("b", heads, 2, age=FT.QUARANTINE_AGE)
+    mask = pool.fresh_mask("z")                 # unbounded, exclude no one
+    keys = sorted(k for k in pool.entries)
+    assert mask.tolist() == [k[0] != "b" for k in keys]
+    # clean republication revives
+    pool.publish("b", heads, 2)
+    assert pool.fresh_mask("z").all()
+
+
+# ---------------------------------------------------------------------------
+# Disabled plan == no plan: bit-identity parity pins (batched + cohort)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nf_choices", [(3,), (2, 4)],
+                         ids=["batched", "cohort"])
+def test_disabled_plan_is_bit_identical(nf_choices):
+    def run(faults):
+        cfg = _cfg()
+        clients = _pop(cfg, n=6, nf_choices=nf_choices).build(range(6))
+        fed = Federation(clients, cfg, schedule=RoundSchedule(3, 10),
+                         engine="batched", faults=faults)
+        return fed.fit(), fed
+
+    h0, f0 = run(None)
+    h1, f1 = run(FT.FaultPlan())                  # all-zero plan
+    for n in h0:
+        assert h0[n]["val"] == h1[n]["val"]
+        assert h0[n]["selections"] == h1[n]["selections"]
+    assert f1.dispatch_stats["heads_rejected"] == 0
+    assert f1.dispatch_stats["stragglers"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Byzantine quarantine: no poisoned head is ever admitted
+# ---------------------------------------------------------------------------
+
+def _pool_is_finite(pf):
+    for k, e in pf.pool_entries.items():
+        for leaf in jax.tree_util.tree_leaves(e):
+            if not np.all(np.isfinite(np.asarray(leaf))):
+                return False
+    return True
+
+
+@pytest.mark.parametrize("corruption", ["nan", "explode"])
+@pytest.mark.parametrize("engine", ["batched", "sequential"])
+def test_byzantine_heads_quarantined(engine, corruption):
+    cfg = _cfg(mode="always")
+    plan = FT.FaultPlan(byzantine=0.5, corruption=corruption, seed=3)
+    pf = ParticipatingFederation(
+        _pop(cfg), cfg,
+        participation=UniformParticipation(fraction=0.5, min_clients=4),
+        schedule=RoundSchedule(3, 10), engine=engine, faults=plan)
+    pf.fit()
+    st = pf.dispatch_stats
+    assert st["heads_rejected"] > 0
+    assert any(w.byzantine for w in pf.fault_log)
+    assert _pool_is_finite(pf)
+    # quarantined seed rows sit at the sentinel age, zeroed
+    byz_names = {pf.population.name_of(i)
+                 for w in pf.fault_log for i in w.byzantine}
+    assert byz_names
+    if corruption == "nan":
+        # a NaN client's own history goes NaN (sacrificial by design) but
+        # the shared pool never serves its head
+        assert any(not np.all(np.isfinite(pf.store.get(n)["val_history"]))
+                   for n in byz_names if n in pf.store)
+
+
+def test_byzantine_rejections_agree_across_engines():
+    cfg = _cfg(mode="always")
+    plan = FT.FaultPlan(byzantine=0.5, corruption="nan", seed=3)
+
+    def run(engine):
+        pf = ParticipatingFederation(
+            _pop(cfg), cfg,
+            participation=UniformParticipation(fraction=0.5, min_clients=4),
+            schedule=RoundSchedule(3, 10), engine=engine, faults=plan)
+        pf.fit()
+        return pf
+
+    b, s = run("batched"), run("sequential")
+    assert [w.to_json() for w in b.fault_log] \
+        == [w.to_json() for w in s.fault_log]
+    assert b.dispatch_stats["heads_rejected"] \
+        == s.dispatch_stats["heads_rejected"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Dropout-tolerant waves + stragglers
+# ---------------------------------------------------------------------------
+
+def test_dropout_waves_complete_and_count():
+    cfg = _cfg(epochs=6)
+    plan = FT.FaultPlan(dropout=0.4, seed=1)
+    pf = ParticipatingFederation(
+        _pop(cfg, n=12), cfg,
+        participation=UniformParticipation(fraction=0.5, min_clients=6),
+        schedule=RoundSchedule(6, 10), faults=plan)
+    pf.fit()
+    st = pf.dispatch_stats
+    assert st["waves"] == 6                       # every wave completed
+    assert st["clients_dropped"] > 0
+    assert st["waves_degraded"] > 0
+    assert st["waves_degraded"] \
+        == sum(1 for w in pf.fault_log if w.degraded)
+    # degraded waves ran with the re-rounded active set
+    for row, wf in zip(pf.wave_log, pf.fault_log):
+        assert set(row["active"]).isdisjoint(wf.dropped)
+
+
+def test_stragglers_train_but_never_exchange():
+    cfg = _cfg(mode="always")
+    plan = FT.FaultPlan(straggler=1.0, seed=0)
+    pf = ParticipatingFederation(
+        _pop(cfg), cfg,
+        participation=UniformParticipation(fraction=0.5, min_clients=4),
+        schedule=RoundSchedule(2, 10), faults=plan)
+    pf.fit()
+    st = pf.dispatch_stats
+    assert st["stragglers"] > 0
+    # nobody exchanged: every resident client's round count is zero, yet
+    # training happened (val histories advanced)
+    assert all(v == 0 for v in pf.n_rounds.values())
+    assert all(len(pf.store.get(n)["val_history"]) > 0
+               for n in pf.store.names())
+
+
+# ---------------------------------------------------------------------------
+# Seeded schedule save/restores bit-identically
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_save_restore_bit_identical():
+    cfg = _cfg(epochs=6)
+    mk = lambda: _pop(cfg, n=10)
+    plan = FT.FaultPlan(dropout=0.3, straggler=0.2, byzantine=0.3,
+                        corruption="nan", seed=5)
+
+    def build(pop):
+        return ParticipatingFederation(
+            pop, cfg,
+            participation=UniformParticipation(fraction=0.4, min_clients=4),
+            schedule=RoundSchedule(6, 10), faults=plan)
+
+    a = build(mk())
+    a.fit(waves=3)
+    with tempfile.TemporaryDirectory() as d:
+        a.save(d)
+        b = ParticipatingFederation.restore(d, mk())
+        assert b.faults == plan
+        assert [w.to_json() for w in b.fault_log] \
+            == [w.to_json() for w in a.fault_log]
+        ha = a.fit(waves=3)
+        hb = b.fit(waves=3)
+    same = lambda x, y: np.array_equal(np.asarray(x, np.float64),
+                                       np.asarray(y, np.float64),
+                                       equal_nan=True)
+    for n in ha:
+        assert same(ha[n]["val"], hb[n]["val"]), n
+        assert ha[n]["selections"] == hb[n]["selections"], n
+    assert [w.to_json() for w in a.fault_log] \
+        == [w.to_json() for w in b.fault_log]
+
+
+# ---------------------------------------------------------------------------
+# ClientStore checksums + self-healing rebuild
+# ---------------------------------------------------------------------------
+
+def _put_dummy(store, name, val=1.0):
+    tree = {"w": np.full((3, 2), val, np.float32)}
+    store.put(name, params=tree, opt_state=tree, best_params=tree,
+              best_val=val, val_history=[val])
+
+
+def test_store_checksum_roundtrip_and_single_byte_corruption():
+    store = ClientStore()
+    _put_dummy(store, "a")
+    assert store.get("a")["best_val"] == 1.0      # clean round-trip
+    # flip ONE byte of one leaf in place — every byte position must flip
+    # the checksum (crc32 covers the full buffer)
+    leaf = store._states["a"]["params"]["w"]
+    raw = leaf.view(np.uint8).reshape(-1)
+    for pos in (0, len(raw) // 2, len(raw) - 1):
+        raw[pos] ^= 0xFF
+        with pytest.raises(StoreCorruption, match="checksum"):
+            store.get("a")
+        raw[pos] ^= 0xFF                          # restore
+        store.get("a")                            # clean again
+
+
+def test_entry_checksum_covers_scalars():
+    store = ClientStore()
+    _put_dummy(store, "a")
+    entry = store._states["a"]
+    crc = entry_checksum(entry)
+    entry["best_val"] = 2.0
+    assert entry_checksum(entry) != crc
+    entry["best_val"] = 1.0
+    entry["val_history"] = [1.0, 1.0]
+    assert entry_checksum(entry) != crc
+
+
+def test_store_discard_and_rebuild_parity():
+    """After a corrupt entry is discarded, the population's deterministic
+    builder reproduces the client bit-exactly — the rebuild path."""
+    cfg = _cfg()
+    pop = _pop(cfg, n=4)
+    a = pop.build([2])[0]
+    b = pop.build([2])[0]
+    for la, lb in zip(jax.tree_util.tree_leaves(a.params),
+                      jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    tr_a, tr_b = a.train, b.train
+    for ta, tb in zip(tr_a, tr_b):
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+def test_corrupted_store_entry_heals_during_fit():
+    cfg = _cfg(epochs=2)
+    pop = _pop(cfg, n=4)
+    pf = ParticipatingFederation(
+        pop, cfg,
+        participation=UniformParticipation(fraction=1.0, min_clients=4),
+        schedule=RoundSchedule(2, 10))
+    pf.fit(waves=1)
+    # corrupt one stored entry between waves (host memory fault) —
+    # swap in a copy with one byte flipped, leaving the recorded crc stale
+    victim = pf.store.names()[0]
+    st = pf.store._states[victim]
+    leaves, treedef = jax.tree_util.tree_flatten(st["params"])
+    bad = np.array(leaves[0], copy=True)
+    bad.view(np.uint8).reshape(-1)[0] ^= 0xFF
+    st["params"] = jax.tree_util.tree_unflatten(
+        treedef, [bad] + leaves[1:])
+    pf.fit(waves=1)                               # completes, self-heals
+    assert pf.dispatch_stats["store_rebuilds"] == 1
+    assert victim in pf.store                     # re-put after the wave
+    pf.store.get(victim)                          # and verifies clean
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: forced 4-device mesh — 20% dropout + 10% byzantine completes,
+# counters fire, restore replays bit-identically, disabled plan is parity
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS = r"""
+import json
+import tempfile
+import jax
+assert jax.device_count() == 4, jax.devices()
+import numpy as np
+from repro.core import faults as FT
+from repro.core.experiment import tensor_population
+from repro.core.federation import Federation, RoundSchedule
+from repro.core.hfl import HFLConfig
+from repro.core.mesh_federation import make_mesh
+from repro.core.participation import (ParticipatingFederation,
+                                      UniformParticipation)
+
+cfg = HFLConfig(epochs=4, R=10, mode="always", seed=3)
+mkpop = lambda: tensor_population(16, cfg, seed=1, nf_choices=(3,),
+                                  n_train=20, n_eval=10)
+res = {}
+
+# 1) disabled-plan parity on the mesh engine
+def full(faults):
+    fed = Federation(mkpop().build(range(16)), cfg,
+                     schedule=RoundSchedule(2, 10), engine="batched",
+                     mesh=make_mesh(), faults=faults)
+    return fed.fit()
+h0, h1 = full(None), full(FT.FaultPlan())
+res["mesh_parity"] = all(
+    h0[n]["val"] == h1[n]["val"]
+    and h0[n]["selections"] == h1[n]["selections"] for n in h0)
+
+# 2) 20% dropout + 10% byzantine on the mesh completes with clean pool
+plan = FT.FaultPlan(dropout=0.2, byzantine=0.1, corruption="nan", seed=2)
+def build(pop):
+    return ParticipatingFederation(
+        pop, cfg,
+        participation=UniformParticipation(fraction=0.75, min_clients=8),
+        schedule=RoundSchedule(4, 10), engine="batched", mesh=make_mesh(),
+        faults=plan)
+pf = build(mkpop())
+pf.fit(waves=2)
+with tempfile.TemporaryDirectory() as d:
+    pf.save(d)
+    rf = ParticipatingFederation.restore(d, mkpop(), mesh=make_mesh())
+    ha = pf.fit(waves=2)
+    hb = rf.fit(waves=2)
+st = pf.dispatch_stats
+res["devices"] = st["devices"]
+res["waves"] = st["waves"]
+res["clients_dropped"] = st["clients_dropped"]
+res["waves_degraded"] = st["waves_degraded"]
+res["heads_rejected_total"] = (st["heads_rejected"]
+                               + rf.dispatch_stats["heads_rejected"])
+res["dropout_wave_completed"] = any(w.degraded for w in pf.fault_log) \
+    and st["waves"] == 2
+res["geometry_multiple_held"] = all(
+    len(w["active"]) % 4 == 0 for w in pf.wave_log)
+res["pool_finite"] = all(
+    bool(np.all(np.isfinite(np.asarray(l))))
+    for e in pf.pool_entries.values()
+    for l in jax.tree_util.tree_leaves(e))
+same = lambda x, y: np.array_equal(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64),
+                                   equal_nan=True)
+res["restore_bit_identical"] = (
+    all(same(ha[n]["val"], hb[n]["val"])
+        and ha[n]["selections"] == hb[n]["selections"] for n in ha)
+    and [w.to_json() for w in pf.fault_log]
+    == [w.to_json() for w in rf.fault_log])
+print("RESULT " + json.dumps(res))
+"""
+
+
+def _run_forced_devices(script: str, n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_faults_on_forced_4_device_mesh():
+    """ISSUE 8 acceptance: the mesh engine with a disabled plan is
+    bit-identical to no plan; with 20% dropout + 10% byzantine every wave
+    completes on 4 devices at 4-multiple geometry, the counters fire, the
+    pool stays finite, and an interrupted run restores bit-identically."""
+    res = _run_forced_devices(_SUBPROCESS, 4)
+    assert res["mesh_parity"] is True
+    assert res["devices"] == 4
+    assert res["waves"] == 2
+    assert res["dropout_wave_completed"] is True
+    assert res["geometry_multiple_held"] is True
+    assert res["clients_dropped"] > 0
+    assert res["waves_degraded"] > 0
+    assert res["heads_rejected_total"] > 0
+    assert res["pool_finite"] is True
+    assert res["restore_bit_identical"] is True

@@ -153,6 +153,91 @@ def test_pool_mlp_shapes(ns, R, w, bp):
     assert int(jnp.argmin(out)) == int(jnp.argmin(ref))
 
 
+def _stacked_pool(ns, w, seed0=0):
+    from repro.core.networks import head_schema
+    from repro.sharding import spec as S
+    pool = [S.materialize(head_schema(w), jax.random.PRNGKey(seed0 + i))
+            for i in range(ns)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pool)
+
+
+def test_pool_mlp_poisoned_rows_pinned_to_inf():
+    """NaN/Inf pool heads must come back +inf — never NaN (argmin over NaN
+    is backend-dependent) — and agree with the vmap fallback's pinning on
+    every row, finite rows bit-matching the clean sweep."""
+    from repro.core.hfl import pool_errors
+    from repro.kernels.pool_mlp.ops import pool_mlp_errors_features
+
+    ns, R, w, nf = 8, 20, 3, 2
+    stacked = dict(_stacked_pool(ns, w))
+    clean = pool_mlp_errors_features(
+        stacked, jax.random.normal(jax.random.PRNGKey(9), (nf, R, w)),
+        jax.random.normal(jax.random.PRNGKey(8), (R,)))
+    stacked["w0"] = stacked["w0"].at[1].set(jnp.nan)
+    stacked["b4"] = stacked["b4"].at[5].set(jnp.inf)
+    xd = jax.random.normal(jax.random.PRNGKey(9), (nf, R, w))
+    y = jax.random.normal(jax.random.PRNGKey(8), (R,))
+    out = pool_mlp_errors_features(stacked, xd, y)
+    ref = jax.vmap(lambda xf: pool_errors(stacked, xf, y))(xd)
+    assert bool(jnp.all(jnp.isposinf(out[:, 1])))
+    assert bool(jnp.all(jnp.isposinf(out[:, 5])))
+    assert bool(jnp.all(jnp.isfinite(jnp.delete(out, jnp.array([1, 5]),
+                                                axis=1))))
+    # kernel and fallback agree everywhere (inf == inf; finite rows close)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    keep = [i for i in range(ns) if i not in (1, 5)]
+    np.testing.assert_allclose(np.asarray(out[:, keep]),
+                               np.asarray(clean[:, keep]),
+                               rtol=1e-6, atol=0)
+    assert int(jnp.argmin(out[0])) not in (1, 5)
+
+
+def test_pool_mlp_nan_probe_pinned_to_inf():
+    """A NaN probe batch poisons every score for that feature: both the
+    kernel and the vmap fallback must return +inf across the row, so the
+    selection layer sees a uniform worst-case, not NaN."""
+    from repro.core.hfl import pool_errors
+    from repro.kernels.pool_mlp.ops import pool_mlp_errors_features
+
+    ns, R, w, nf = 6, 10, 3, 2
+    stacked = _stacked_pool(ns, w)
+    xd = jax.random.normal(jax.random.PRNGKey(3), (nf, R, w))
+    xd = xd.at[1, 4, 0].set(jnp.nan)               # one bad sample
+    y = jax.random.normal(jax.random.PRNGKey(4), (R,))
+    out = pool_mlp_errors_features(stacked, xd, y)
+    ref = jax.vmap(lambda xf: pool_errors(stacked, xf, y))(xd)
+    assert bool(jnp.all(jnp.isfinite(out[0])))
+    assert bool(jnp.all(jnp.isposinf(out[1])))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pool_mlp_masked_and_shard_pin_nan():
+    """The masked union-pool sweep and the per-device chunk sweep inherit
+    the pinning: invalid rows AND poisoned rows are +inf, and a chunk
+    equals the corresponding slice of the full sweep."""
+    from repro.kernels.pool_mlp.ops import (pool_mlp_errors_features,
+                                            pool_mlp_errors_features_masked,
+                                            pool_mlp_errors_shard)
+
+    ns, R, w, nf = 8, 10, 3, 2
+    stacked = dict(_stacked_pool(ns, w))
+    stacked["w2"] = stacked["w2"].at[2].set(jnp.nan)
+    xd = jax.random.normal(jax.random.PRNGKey(5), (nf, R, w))
+    y = jax.random.normal(jax.random.PRNGKey(6), (R,))
+    valid = jnp.array([True] * 6 + [False] * 2)
+    out = pool_mlp_errors_features_masked(stacked, xd, y, valid)
+    assert bool(jnp.all(jnp.isposinf(out[:, 2])))      # poisoned
+    assert bool(jnp.all(jnp.isposinf(out[:, 6:])))     # invalid
+    full = pool_mlp_errors_features(stacked, xd, y)
+    lo, hi = 0, 4
+    chunk = jax.tree_util.tree_map(lambda t: t[lo:hi], stacked)
+    sh = pool_mlp_errors_shard(chunk, xd, y)
+    np.testing.assert_array_equal(np.asarray(sh),
+                                  np.asarray(full[:, lo:hi]))
+
+
 def test_pool_mlp_raw_kernel_rejects_ragged_pool():
     """Padding lives in ops.pool_mlp_errors* only; the raw kernel entry
     point must refuse a pool that is not a block multiple with a real
