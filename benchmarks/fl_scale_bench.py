@@ -344,6 +344,25 @@ def profile_phases(C: int, cfg: HFLConfig, nf: int, n: int,
     }
 
 
+def _engine_tag_valid(tag: str) -> bool:
+    """The closed set of engine row tags this bench emits: the three full
+    engines plus ``participating+<policy>`` / ``participating+fault<rate>``.
+    Downstream dashboards key on these strings, so an unknown tag is a
+    schema violation, not a forward-compatible extension."""
+    if tag in ("sequential", "batched", "batched+mesh"):
+        return True
+    if tag.startswith("participating+"):
+        rest = tag[len("participating+"):]
+        if rest in ("uniform", "weighted", "stratified"):
+            return True
+        if rest.startswith("fault"):
+            try:
+                return 0.0 <= float(rest[len("fault"):]) <= 1.0
+            except ValueError:
+                return False
+    return False
+
+
 def validate_payload(payload: dict) -> None:
     """Structural schema check for BENCH_fl_scale.json — CI smoke-runs a
     tiny sweep and validates the emitted file through this, so the schema
@@ -385,6 +404,9 @@ def validate_payload(payload: dict) -> None:
         where = f"results[{i}]"
         need(r, "clients", int, where)
         need(r, "engine", str, where)
+        if not _engine_tag_valid(r["engine"]):
+            raise ValueError(f"{where}[engine]: unknown engine tag "
+                             f"{r['engine']!r}")
         need(r, "devices", int, where)
         need(r, "hetero", bool, where)
         need(r, "cohorts", int, where)

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mesh_federation as MF
+from repro.core import trust as TR
 from repro.core.federation import (_exchange_round_bytes, _policy_round_body,
                                    _stack_trees, _tree_bytes, _tree_row,
                                    _wants_per_round)
@@ -244,7 +245,8 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                        policies: FederationPolicies, use_kernel: bool,
                        do_federate: bool, do_eval: bool, *,
                        exchange_every: int = 1, gather=None,
-                       local_rows=None, shard=None, admission=None):
+                       local_rows=None, shard=None, admission=None,
+                       trust=None):
     """The fused whole-epoch computation for a cohorted population, shared by
     the single-device and mesh backends: one ``lax.scan`` over the epoch's
     global sub-rounds.  Each step trains every cohort at its native
@@ -271,7 +273,17 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
     ``admission`` forwards the pool admission guard's norm bound to
     :func:`~repro.core.federation._policy_round_body`; when set, the epoch
     returns one extra trailing ``(exchange_rounds, C)`` bool rejection
-    mask (None traces exactly the fault-free body)."""
+    mask (None traces exactly the fault-free body).
+
+    ``trust`` threads the trust layer at the PADDED geometry, exactly as
+    ``federation._epoch_body`` does at the homogeneous one: the epoch
+    function takes one extra trailing ``trust_arrays`` argument (padded
+    signature stack / ``(net_masks, correction)`` scan leg / DP dummy)
+    and returns one extra trailing ``((rounds, C) clip, (rounds, C)
+    wm_failed)`` pair after the admission mask.  Secure aggregation
+    replaces the padded-union selection with ``trust.secure_round`` over
+    the padded stacks (``feat_valid`` silences padded rows in every sum).
+    ``trust=None`` traces the byte-identical pre-trust graph."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
@@ -281,6 +293,9 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
     members = [np.asarray(co.members, np.int32) for co in plan.cohorts]
     bounded = policies.pool.bounded
     k_ex = int(exchange_every)
+    secure = trust is not None and trust.secure_agg is not None
+    secure_in_scan = secure and do_federate
+    sel_trust = None if secure else trust
     if gather is None:
         gather = lambda t: t
     if local_rows is None:
@@ -288,7 +303,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
 
     def epoch(params_t, opt_t, pool_heads, pool_age, key, best_val_t,
               best_params_t, xs_t, xd_t, y_t, part, tick, live,
-              val_xs_t, val_xd_t, val_y_t):
+              val_xs_t, val_xd_t, val_y_t, trust_arrays=None):
 
         def train(params_t, opt_t, bx, bd, by, live_r):
             """Every cohort's masked native-geometry step for one
@@ -305,6 +320,8 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
 
         def body(carry, inp):
             params_t, opt_t, pool_heads, pool_age, key = carry
+            if secure_in_scan:
+                inp, (mask_e, corr_e) = inp
             (bx, bd, by), part_r, tick_r, live_r = inp
             params_t, opt_t = train(params_t, opt_t, bx, bd, by, live_r)
             if do_federate:
@@ -324,20 +341,38 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                     hk = _pad_axis1(gather(params_t[k]["heads"]), max_nf)
                     heads_g = jax.tree_util.tree_map(
                         lambda g, h: g.at[idx].set(h), heads_g, hk)
-                    dk = gather(bd[k])                 # (C_k, R, nf_k, w)
-                    pad = max_nf - dk.shape[2]
-                    if pad:
-                        dk = jnp.pad(dk, ((0, 0), (0, 0), (0, pad), (0, 0)))
-                    xd_g = xd_g.at[idx].set(dk)
-                    y_g = y_g.at[idx].set(gather(by[k]))
-                out = _policy_round_body(
-                    heads_g, pool_heads, pool_age, xd_g, y_g, part_r, sub,
-                    nf=max_nf, policies=policies, use_kernel=use_kernel,
-                    feat_valid=feat_valid, shard=shard, admission=admission)
-                if admission is not None:
-                    new_heads, pool_heads, pool_age, chosen, rej = out
+                    if not secure:      # secure needs no probe scatters
+                        dk = gather(bd[k])             # (C_k, R, nf_k, w)
+                        pad = max_nf - dk.shape[2]
+                        if pad:
+                            dk = jnp.pad(dk,
+                                         ((0, 0), (0, 0), (0, pad), (0, 0)))
+                        xd_g = xd_g.at[idx].set(dk)
+                        y_g = y_g.at[idx].set(gather(by[k]))
+                if secure:
+                    (new_heads, pool_heads, pool_age, chosen, rej,
+                     clip) = TR.secure_round(
+                        heads_g, pool_heads, pool_age, part_r, mask_e,
+                        corr_e, sub, feat_valid=feat_valid,
+                        sa=trust.secure_agg, dp=trust.dp, nf=max_nf,
+                        admission=admission)
+                    tstats = (clip, jnp.zeros((C,), bool))
                 else:
-                    new_heads, pool_heads, pool_age, chosen = out
+                    out = _policy_round_body(
+                        heads_g, pool_heads, pool_age, xd_g, y_g, part_r,
+                        sub, nf=max_nf, policies=policies,
+                        use_kernel=use_kernel, feat_valid=feat_valid,
+                        shard=shard, admission=admission, trust=sel_trust,
+                        trust_sig=(trust_arrays if sel_trust is not None
+                                   and sel_trust.watermark is not None
+                                   else None))
+                    if trust is not None:
+                        tstats = out[-1]
+                        out = out[:-1]
+                    if admission is not None:
+                        new_heads, pool_heads, pool_age, chosen, rej = out
+                    else:
+                        new_heads, pool_heads, pool_age, chosen = out
                 for k, co in enumerate(plan.cohorts):
                     rows = jax.tree_util.tree_map(
                         lambda g: g[members[k], :co.nf], new_heads)
@@ -347,7 +382,15 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                 chosen = jnp.full((C, max_nf), -1, jnp.int32)
                 if admission is not None:
                     rej = jnp.zeros((C,), bool)
-            ys = (chosen, rej) if admission is not None else chosen
+                if trust is not None:
+                    tstats = (jnp.zeros((C,), bool), jnp.zeros((C,), bool))
+            ys = (chosen,)
+            if admission is not None:
+                ys = ys + (rej,)
+            if trust is not None:
+                ys = ys + (tstats,)
+            if len(ys) == 1:
+                ys = ys[0]
             return ((tuple(params_t), tuple(opt_t), pool_heads, pool_age,
                      key), ys)
 
@@ -362,7 +405,8 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
         carry = (params_t, opt_t, pool_heads, pool_age, key)
         if not do_federate or k_ex == 1:
             # the historical flat scan; exchange_every=1 stays bit-identical
-            carry, ys = jax.lax.scan(body, carry, xs_all)
+            xs = (xs_all, trust_arrays) if secure_in_scan else xs_all
+            carry, ys = jax.lax.scan(body, carry, xs)
         else:
             n_sub = part.shape[0]
             n_grp, rem = divmod(n_sub, k_ex)
@@ -373,19 +417,33 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
             def group(carry, inp_k):
                 # k-1 train-only rounds, then train + exchange on the
                 # group's LAST round (probes = that round's own R-batches)
+                if secure_in_scan:
+                    inp_k, masks_e = inp_k
                 carry, _ = jax.lax.scan(
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[:k_ex - 1], inp_k))
-                return body(carry, jax.tree_util.tree_map(
-                    lambda t: t[k_ex - 1], inp_k))
+                last = jax.tree_util.tree_map(lambda t: t[k_ex - 1], inp_k)
+                if secure_in_scan:
+                    last = (last, masks_e)
+                return body(carry, last)
 
-            carry, ys = jax.lax.scan(group, carry, grouped)
+            xs = (grouped, trust_arrays) if secure_in_scan else grouped
+            carry, ys = jax.lax.scan(group, carry, xs)
             if rem:                       # leftover rounds never exchange
                 carry, _ = jax.lax.scan(
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
                                            xs_all))
-        chosen, rejected = ys if admission is not None else (ys, None)
+        if admission is not None and trust is not None:
+            chosen, rejected, tstats = ys
+        elif admission is not None:
+            chosen, rejected = ys
+            tstats = None
+        elif trust is not None:
+            chosen, tstats = ys
+            rejected = None
+        else:
+            chosen, rejected, tstats = ys, None, None
         (params_t, opt_t, pool_heads, pool_age, key) = carry
         if do_eval:
             vs, new_bv, new_bp = [], [], []
@@ -407,7 +465,11 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
             v_t = None
         out = (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
                best_params_t, v_t, chosen)
-        return out + (rejected,) if admission is not None else out
+        if admission is not None:
+            out = out + (rejected,)
+        if trust is not None:
+            out = out + (tstats,)
+        return out
 
     return epoch
 
@@ -416,7 +478,8 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
 def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
                           policies: FederationPolicies, use_kernel: bool,
                           do_federate: bool, do_eval: bool,
-                          exchange_every: int = 1, admission=None):
+                          exchange_every: int = 1, admission=None,
+                          trust=None):
     """Compile-cached fused heterogeneous epoch (single-device): one
     dispatch scans every global sub-round of a mixed-cohort epoch, with the
     whole carried state donated — the cohort twin of
@@ -425,7 +488,7 @@ def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
     and every cohort inside it shares that single program."""
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
                                do_eval, exchange_every=exchange_every,
-                               admission=admission)
+                               admission=admission, trust=trust)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -434,7 +497,8 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
                                policies: FederationPolicies,
                                use_kernel: bool, do_federate: bool,
                                do_eval: bool, mesh,
-                               exchange_every: int = 1, admission=None):
+                               exchange_every: int = 1, admission=None,
+                               trust=None):
     """The client-sharded twin of :func:`_make_hetero_epoch_fn`: the same
     epoch body under ``shard_map``, with every cohort's stack partitioned
     over the mesh's ``clients`` axis (each cohort size must divide the
@@ -468,17 +532,24 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
                                do_eval, exchange_every=exchange_every,
                                gather=gather, local_rows=local_rows,
-                               shard=(axis, D), admission=admission)
+                               shard=(axis, D), admission=admission,
+                               trust=trust)
     tup = lambda spec: tuple(spec for _ in range(K))
     out_specs = (pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
                  tup(cl) if do_eval else None, rep)
     if admission is not None:
         out_specs = out_specs + (rep,)   # rejection mask is replicated
+    in_specs = (pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
+                tup(data), tup(data), tup(data), rep, rep, rep,
+                tup(cl), tup(cl), tup(cl))
+    if trust is not None:
+        # trust inputs (padded signature stack / mask pair / dummy) and
+        # the per-round trust stats are replicated like the pool carry
+        in_specs = in_specs + (rep,)
+        out_specs = out_specs + (rep,)
     sharded = shard_map(
         epoch, mesh=mesh,
-        in_specs=(pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
-                  tup(data), tup(data), tup(data), rep, rep, rep,
-                  tup(cl), tup(cl), tup(cl)),
+        in_specs=in_specs,
         out_specs=out_specs,
         check_rep=False)
     return jax.jit(sharded, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
@@ -594,6 +665,22 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
     lut = hetero_selection_lut(names, plan.nfs, plan.max_nf)
     admission = fed._admission()
     smask = fed._straggler_mask
+    trust = fed._trust
+    secure = trust is not None and trust.secure_agg is not None
+    # host templates/derivations the trust layer needs, at the PADDED
+    # geometry (masks and signatures ride the (C, max_nf, ...) union)
+    head_tmpl = TR.pad_rows(jax.tree_util.tree_map(
+        np.asarray, clients[0].params["heads"]), plan.max_nf) \
+        if secure else None
+    sig_stack = None
+    if trust is not None and trust.watermark is not None:
+        sig_stack = jax.tree_util.tree_map(
+            jnp.asarray,
+            TR.stack_trees_np([TR.pad_rows(fed._wm_sig(c), plan.max_nf)
+                               for c in clients]))
+    clip_total = 0
+    wm_fail = np.zeros(C, np.int64)
+    dp_pubs = np.zeros(C, np.int64)
     heads_rejected = 0
     live_np = np.asarray([[k < co.n_sub for co in plan.cohorts]
                           for k in range(n_sub_max)], bool)
@@ -638,10 +725,59 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
             return _make_mesh_hetero_epoch_fn(cfg.lr, plan, cfg.w, pol,
                                               use_kernel, do_federate,
                                               do_eval, mesh, exchange_every,
-                                              admission)
+                                              admission, trust)
         return _make_hetero_epoch_fn(cfg.lr, plan, pol, use_kernel,
                                      do_federate, do_eval, exchange_every,
-                                     admission)
+                                     admission, trust)
+
+    def trust_args(act_rows, e_off: int = 0):
+        """The epoch function's trailing ``trust_arrays`` argument for one
+        dispatch.  ``act_rows`` is the (n_exch, C) per-exchange-round
+        participation — on the cohort engine the publisher set varies per
+        sub-round (clients drop out as their sub-rounds run dry), so the
+        secure dropout correction is reconstructed per round from the
+        round's own survivor set."""
+        if trust is None:
+            return ()
+        if secure:
+            n_exch = len(act_rows)
+            wave = fed._trust_wave_base + fed.epoch
+            masks = TR.net_masks(trust.secure_agg, wave, n_exch,
+                                 fed._trust_ids, head_tmpl,
+                                 round_offset=e_off)
+            corrs = [TR.mask_correction(
+                jax.tree_util.tree_map(lambda m: m[r:r + 1], masks),
+                act_rows[r]) for r in range(n_exch)]
+            if corrs:
+                corr = jax.tree_util.tree_map(
+                    lambda *cs: np.concatenate(cs), *corrs)
+            else:
+                corr = jax.tree_util.tree_map(
+                    lambda m: np.zeros((0,) + m.shape[2:], m.dtype), masks)
+            ta = jax.tree_util.tree_map(jnp.asarray, (masks, corr))
+        elif sig_stack is not None:
+            ta = sig_stack
+        else:
+            ta = jnp.zeros((), jnp.float32)
+        if mesh is not None:
+            ta = MF.replicate(mesh, ta)
+        return (ta,)
+
+    def account_trust(tstats, rej, opps):
+        """Fold one dispatch's trust outputs into the fit's counters.
+        ``opps``: (C,) per-client exchange publication opportunities this
+        dispatch (zero everywhere on a non-federating dispatch)."""
+        nonlocal clip_total
+        if trust is None:
+            return
+        clip_r, wmf_r = (np.asarray(t) for t in tstats)
+        clip_total += int(clip_r.sum())
+        wmf_pc = wmf_r.reshape(-1, C).sum(axis=0).astype(np.int64)
+        wm_fail[:] += wmf_pc
+        if trust.dp is not None:
+            rej_pc = (np.asarray(rej).reshape(-1, C).sum(axis=0)
+                      if rej is not None else np.zeros(C, np.int64))
+            dp_pubs[:] += np.asarray(opps, np.int64) - wmf_pc - rej_pc
 
     fused = not any(_wants_per_round(cb) for cb in cbs)
     n_dispatch = 0
@@ -699,6 +835,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         fed._mid_epoch = True
         if fused:
             epoch_fn = make_epoch_fn(do_federate, True, k_ex)
+            act_rows = part_np[exch] if do_federate else part_np[:0]
             out = epoch_fn(*state,
                            tuple(r[0] for r in rounds_t),
                            tuple(r[1] for r in rounds_t),
@@ -706,21 +843,30 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                            part, tick, live,
                            tuple(v[0] for v in val_t),
                            tuple(v[1] for v in val_t),
-                           tuple(v[2] for v in val_t))
+                           tuple(v[2] for v in val_t),
+                           *trust_args(act_rows))
+            if trust is not None:
+                tstats, out = out[-1], out[:-1]
             if admission is not None:
                 (*state, v_t, chosen, rej) = out
                 heads_rejected += int(np.asarray(rej).sum())
             else:
                 (*state, v_t, chosen) = out
+                rej = None
+            account_trust(tstats, rej, act_rows.sum(axis=0)) \
+                if trust is not None else None
             n_dispatch += 1
         else:
             chunks = []
+            e_done = 0          # exchange rounds executed so far this epoch
+                                # (the trust layer's within-epoch mask index)
             for rnd in range(n_sub_max):
                 # cadence on the chunked path: a non-exchange sub-round is
                 # exactly a do_federate=False dispatch (train-only)
-                epoch_fn = make_epoch_fn(do_federate and bool(exch[rnd]),
-                                         rnd == n_sub_max - 1)
+                fed_r = do_federate and bool(exch[rnd])
+                epoch_fn = make_epoch_fn(fed_r, rnd == n_sub_max - 1)
                 sl = slice(rnd, rnd + 1)
+                act_rows = part_np[sl] if fed_r else part_np[:0]
                 out = epoch_fn(
                     *state,
                     tuple(r[0][sl] for r in rounds_t),
@@ -729,12 +875,20 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                     part[sl], tick[sl], live[sl],
                     tuple(v[0] for v in val_t),
                     tuple(v[1] for v in val_t),
-                    tuple(v[2] for v in val_t))
+                    tuple(v[2] for v in val_t),
+                    *trust_args(act_rows, e_done))
+                if trust is not None:
+                    tstats, out = out[-1], out[:-1]
                 if admission is not None:
                     (*state, v_t, ch, rej) = out
                     heads_rejected += int(np.asarray(rej).sum())
                 else:
                     (*state, v_t, ch) = out
+                    rej = None
+                account_trust(tstats, rej, act_rows.sum(axis=0)) \
+                    if trust is not None else None
+                if fed_r:
+                    e_done += 1
                 chunks.append(ch)
                 n_dispatch += 1
                 (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
@@ -753,7 +907,10 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                     part, tick, live,
                     tuple(v[0] for v in val_t),
                     tuple(v[1] for v in val_t),
-                    tuple(v[2] for v in val_t))
+                    tuple(v[2] for v in val_t),
+                    *trust_args(part_np[:0]))
+                if trust is not None:
+                    out = out[:-1]
                 if admission is not None:
                     (*state, v_t, ch, _rej) = out
                 else:
@@ -788,6 +945,15 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                             {names[i]: float(v_all[i]) for i in range(C)},
                             {names[i]: bool(active[i]) for i in range(C)})
 
+    if trust is not None:
+        fed._clip_events += clip_total
+        for i, nm in enumerate(names):
+            if wm_fail[i]:
+                fed._wm_failures[nm] = (fed._wm_failures.get(nm, 0)
+                                        + int(wm_fail[i]))
+            if dp_pubs[i]:
+                fed._dp_counts[nm] = (fed._dp_counts.get(nm, 0)
+                                      + int(dp_pubs[i]))
     fed.dispatch_stats = {
         "engine": "batched",
         "path": "fused" if fused else "chunked",
@@ -802,6 +968,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         "exchange_rounds": exchange_rounds,
         "pool_bytes_gathered": pool_bytes,
         "state_bytes": state_bytes,
-        **fed._fault_stats(heads_rejected)}
+        **fed._fault_stats(heads_rejected),
+        **fed._trust_stats()}
     sync()
     fed._sync = None

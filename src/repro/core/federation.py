@@ -47,6 +47,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import faults as FT
 from repro.core import mesh_federation as MF
+from repro.core import trust as TR
 from repro.core.hfl import (FederatedClient, HeadPool, HFLConfig,
                             _eval_mse, _pool_kernel_ops, _train_step,
                             pool_errors, pool_errors_kernel,
@@ -276,10 +277,111 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
     k_ex = fed.schedule.exchange_every
     admission = fed._admission()
     smask = fed._straggler_mask
+    trust = fed._trust
+    wm = trust.watermark if trust is not None else None
+    dpn = trust.dp if trust is not None else None
+    sa = trust.secure_agg if trust is not None else None
+    gids = {c.name: fed._trust_ids[i] for i, c in enumerate(fed.clients)} \
+        if trust is not None else {}
     heads_rejected = 0
     n_exchange = 0            # executed sub-rounds that ran an exchange
     n_dispatch = 0            # jitted calls: train steps + Eq.-7 scorings +
                               # per-epoch evals (eager tree ops not counted)
+
+    def publish(c, e_idx: int):
+        """One publication opportunity for an active client: watermark
+        verify + top-up, DP release, admission guard, pool write — the
+        oracle twin of the fused body's publication tail (watermark and
+        DP ride the SAME jnp functions the engines trace; only the DP
+        noise stream is host-side — noise is engine-specific, like
+        stochastic selection)."""
+        nonlocal heads_rejected
+        cand = c.params["heads"]
+        if wm is not None:
+            new_h, ok, _ = TR.wm_apply(cand, fed._wm_sig(c),
+                                       strength=wm.strength,
+                                       threshold=wm.threshold)
+            c.params = dict(c.params)
+            c.params["heads"] = new_h   # the client keeps its topped-up head
+            if not bool(ok):            # tampered: block + count, stale row
+                fed._wm_failures[c.name] += 1   # persists as evidence
+                return
+            cand = new_h
+        if dpn is not None:
+            cand, clipped = TR.dp_privatize_host(
+                cand, dpn, fed._trust_wave_base + fed.epoch, e_idx,
+                gids[c.name])
+            if clipped:
+                fed._clip_events += 1
+        if admission is None or FT.heads_admissible(cand, admission):
+            fed.pool.publish(c.name, cand, c.nf)
+            if dpn is not None:
+                fed._dp_counts[c.name] = fed._dp_counts.get(c.name, 0) + 1
+        else:           # admission guard: the stale row persists
+            heads_rejected += 1
+
+    def secure_exchange(clients, active, e_idx: int):
+        """The oracle's masked mean-transfer round: train results for the
+        round's clients are stacked (zero-padded to max_nf for mixed
+        populations) and handed to the SAME jitted ``trust.secure_round``
+        the fused engines trace, so the masked blend matches the batched
+        engine to float tolerance by construction; the host then publishes
+        the masked payloads y = priv + mask, never a raw head."""
+        nonlocal heads_rejected
+        max_nf = max(c.nf for c in clients)
+        wave = fed._trust_wave_base + fed.epoch
+        tmpl = jax.tree_util.tree_map(
+            np.asarray, TR.pad_rows(clients[0].params["heads"], max_nf))
+        masks = TR.net_masks(sa, wave, 1,
+                             [gids[c.name] for c in clients], tmpl,
+                             round_offset=e_idx)
+        act = np.array([active[c.name] for c in clients])
+        corr = TR.mask_correction(masks, act)
+        mask0 = jax.tree_util.tree_map(lambda m: jnp.asarray(m[0]), masks)
+        corr0 = jax.tree_util.tree_map(lambda m: jnp.asarray(m[0]), corr)
+        heads = TR.stack_trees_np(
+            [TR.pad_rows(jax.tree_util.tree_map(np.asarray,
+                                                c.params["heads"]), max_nf)
+             for c in clients])
+        heads = jax.tree_util.tree_map(jnp.asarray, heads)
+        fv = np.zeros((len(clients), max_nf), bool)
+        for i, c in enumerate(clients):
+            fv[i, :c.nf] = True
+        priv = None
+        if dpn is not None:
+            rel = [TR.dp_privatize_host(_tree_row(heads, i), dpn, wave,
+                                        e_idx, gids[c.name])
+                   for i, c in enumerate(clients)]
+            fed._clip_events += sum(int(cl and act[i])
+                                    for i, (_, cl) in enumerate(rel))
+            priv = _stack_trees([r for r, _ in rel])
+        dummy_age = jnp.zeros((len(clients),), jnp.int32)
+        new_heads, _, _, _, rejected, _ = TR.secure_round_jit(
+            heads, heads, dummy_age, jnp.asarray(act), mask0, corr0,
+            jax.random.PRNGKey(0), priv=priv, feat_valid=jnp.asarray(fv),
+            sa=sa, dp=None, nf=max_nf, admission=admission)
+        rej = (np.zeros(len(clients), bool) if rejected is None
+               else np.asarray(rejected))
+        src = heads if priv is None else priv
+        for i, c in enumerate(clients):
+            if not act[i]:
+                continue
+            fed.n_rounds[c.name] += 1
+            c.params = dict(c.params)
+            c.params["heads"] = jax.tree_util.tree_map(
+                lambda l: l[i, :c.nf], new_heads)
+            if rej[i]:
+                heads_rejected += 1
+                continue
+            y = jax.tree_util.tree_map(
+                lambda p, m: np.asarray(p[i, :c.nf])
+                + np.asarray(m[i, :c.nf]).astype(
+                    np.asarray(p[i, :c.nf]).dtype),
+                src, mask0)
+            fed.pool.publish(c.name, y, c.nf)
+            if dpn is not None:
+                fed._dp_counts[c.name] = fed._dp_counts.get(c.name, 0) + 1
+
     for _ in range(n_epochs):
         epoch = fed.epoch
         mask = pol.switch.active_mask(
@@ -292,6 +394,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
         live = set(iters)
         fed._mid_epoch = True
         rnd = 0
+        e_idx = 0               # exchange index within the epoch (the
+                                # trust layer's mask/noise round key)
         while live:
             # bounded-staleness cadence: only every k-th executed sub-round
             # (within the epoch) is a federated opportunity — on the other
@@ -303,6 +407,7 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
             ticked = not exchange or not (pol.pool.bounded and C >= 2
                                           and any(active[n] for n in live))
             progressed = False
+            stepped = []
             for c in fed.clients:
                 if c.name not in live:
                     continue
@@ -312,9 +417,10 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                     live.discard(c.name)
                     continue
                 progressed = True
+                stepped.append(c)
                 n_dispatch += 1
-                if not exchange:
-                    continue
+                if sa is not None or not exchange:
+                    continue    # secure mode exchanges once, after training
                 if not ticked:
                     fed.pool.tick()
                     ticked = True
@@ -325,15 +431,33 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                         fed.selections[c.name].append(sel)
                         if pol.selection.needs_errors:
                             n_dispatch += c.nf
-                    fed.n_rounds[c.name] += 1
-                    if admission is None or FT.heads_admissible(
-                            c.params["heads"], admission):
-                        fed.pool.publish(c.name, c.params["heads"], c.nf)
-                    else:       # admission guard: the stale row persists
-                        heads_rejected += 1
+                    if trust is None:
+                        fed.n_rounds[c.name] += 1
+                        if admission is None or FT.heads_admissible(
+                                c.params["heads"], admission):
+                            fed.pool.publish(c.name, c.params["heads"], c.nf)
+                        else:   # admission guard: the stale row persists
+                            heads_rejected += 1
+                    else:
+                        fed.n_rounds[c.name] += 1
+                        publish(c, e_idx)
+            if sa is not None and exchange and progressed:
+                # masked secure aggregation: one collective round over the
+                # clients that trained this sub-round (mirrors the fused
+                # engine's all-clients round)
+                if not ticked:
+                    fed.pool.tick()
+                    ticked = True
+                if any(active[c.name] for c in stepped) and C >= 2:
+                    secure_exchange(fed.clients,
+                                    {c.name: active[c.name]
+                                     and c in stepped for c in fed.clients},
+                                    e_idx)
+                    n_dispatch += 1
             if progressed:
                 if exchange and any(active.values()):
                     n_exchange += 1
+                    e_idx += 1
                 for cb in cbs:
                     cb.on_round(fed, epoch, rnd)
                 rnd += 1
@@ -356,7 +480,8 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
                               _tree_bytes((c.params, c.opt_state,
                                            c.best_params))
                               for c in fed.clients),
-                          **fed._fault_stats(heads_rejected)}
+                          **fed._fault_stats(heads_rejected),
+                          **fed._trust_stats()}
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +520,7 @@ def merge_sharded_argmin(vals, gidx, ns: int):
 def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
                        *, nf: int, policies: FederationPolicies,
                        use_kernel: bool, feat_valid=None, shard=None,
-                       admission=None):
+                       admission=None, trust=None, trust_sig=None):
     """One federated opportunity for ALL clients as a traceable scan over
     clients — the body both :func:`fused_policy_round` (standalone jit) and
     the fused-epoch scan (:func:`_make_epoch_fn`) trace.  The policy
@@ -445,7 +570,27 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
     selection even under last-write-wins pools.  The body then returns a
     FIFTH output: the (C,) bool per-client rejection mask for this
     opportunity.  ``None`` (the default) traces exactly the original
-    4-output body — the no-faults bit-identity pin."""
+    4-output body — the no-faults bit-identity pin.
+
+    ``trust`` (a :class:`~repro.core.trust.TrustPlan` without secure_agg —
+    the masked round bypasses this body entirely, see
+    ``trust.secure_round``) opts into the trust layer's publication tail:
+    with ``trust.watermark``, each active client's post-blend head is
+    signature-verified and topped up (``trust.wm_apply`` on its row of
+    the replicated ``trust_sig`` stack); a failed verification blocks the
+    publication (the stale clean row persists) and is counted.  With
+    ``trust.dp``, the publication candidate is clip+noise privatized
+    in-graph (noise key = ``fold_in(key_i, 0x7D)`` — a stream the
+    selection RNG never sees, which is what keeps ``trust=None``
+    byte-identical).  The admission guard then checks the PRIVATIZED
+    candidate (the actual release).  When ``trust`` is set the body
+    returns one extra trailing output: a ``((C,) clip, (C,) wm_failed)``
+    bool pair.  ``None`` traces exactly the pre-trust graph."""
+    if trust is not None and trust.secure_agg is not None:
+        raise ValueError(
+            "masked secure aggregation replaces the selection round "
+            "entirely (trust.secure_round) — it never reaches "
+            "_policy_round_body")
     C = y_R.shape[0]
     ns = C * nf
     sel, transfer, poolp = policies.selection, policies.transfer, policies.pool
@@ -470,9 +615,11 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
             # the staleness exclusion already hides them
             excluded = own | jnp.repeat(age > poolp.max_age, nf)
             any_valid = jnp.any(~excluded)
-        elif admission is not None:
-            # last-write-wins pool under the admission guard: quarantined
-            # seed rows (zeroed, age = QUARANTINE_AGE) must still be hidden
+        elif admission is not None or trust is not None:
+            # last-write-wins pool under the admission guard or the trust
+            # layer: quarantined seed rows (zeroed, age = QUARANTINE_AGE —
+            # inadmissible or watermark-failed at seeding) must still be
+            # hidden, exactly as the oracle's fresh_mask hides them
             excluded = own | jnp.repeat(age >= FT.QUARANTINE_AGE, nf)
             any_valid = jnp.any(~excluded)
         else:
@@ -547,38 +694,87 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
         else:
             new_mine = jax.tree_util.tree_map(
                 lambda b, m: jnp.where(act, b, m), blended, mine)
-        heads = jax.tree_util.tree_map(
-            lambda h, m: h.at[i].set(m), heads, new_mine)
         # publication: active clients overwrite their pool row (age resets),
         # inactive clients' stale entries persist (the pool policy decides
         # how long they stay *visible*)
         pub = active[i]
+        if trust is not None and trust.watermark is not None:
+            # signature verify + top-up on the client's OWN head: the
+            # topped head persists in its params (so the honest watermark
+            # never decays through Eq.-8 blending); a failed verification
+            # (a sign-flipped head projects at -strength) blocks the
+            # publication and leaves the head untouched as evidence
+            sig_i = jax.tree_util.tree_map(lambda s: s[i], trust_sig)
+            topped, wm_ok, _ = TR.wm_apply(
+                new_mine, sig_i, strength=trust.watermark.strength,
+                threshold=trust.watermark.threshold)
+            new_mine = jax.tree_util.tree_map(
+                lambda t, m: jnp.where(pub, t, m), topped, new_mine)
+            wmf_i = pub & ~wm_ok
+            pub = pub & wm_ok
+        else:
+            wmf_i = jnp.zeros((), bool)
+        heads = jax.tree_util.tree_map(
+            lambda h, m: h.at[i].set(m), heads, new_mine)
+        cand = new_mine
+        if trust is not None and trust.dp is not None:
+            # the DP release: what actually reaches the pool is the
+            # clipped+noised candidate; the client's own params keep the
+            # raw head.  The noise key forks off the selection key on a
+            # dedicated stream, so the selection RNG sequence (and with
+            # it the trust=None graph) is untouched.
+            cand, clipped = TR.dp_privatize(
+                cand, jax.random.fold_in(key_i, 0x7D),
+                clip=trust.dp.clip, sigma=trust.dp.sigma)
+            if feat_valid is not None:
+                # padded rows stay zero in the pool (noise on a row the
+                # client does not own is never a release)
+                cand = jax.tree_util.tree_map(
+                    lambda l: jnp.where(
+                        fv[i].reshape((nf,) + (1,) * (l.ndim - 1)), l, 0),
+                    cand)
+            clip_i = pub & clipped
+        else:
+            clip_i = jnp.zeros((), bool)
         if admission is not None:
             # pool admission guard: a candidate head must be finite and
             # within the L2 norm bound, or the publication is rejected —
             # the previous (clean) row and its age survive untouched
             sq = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
-                     for leaf in jax.tree_util.tree_leaves(new_mine))
+                     for leaf in jax.tree_util.tree_leaves(cand))
             ok = jnp.isfinite(sq) & (sq <= jnp.float32(admission) ** 2)
             rejected_i = pub & ~ok
             pub = pub & ok
         pool = jax.tree_util.tree_map(
             lambda pl, m: pl.at[i].set(jnp.where(pub, m, pl[i])),
-            pool, new_mine)
+            pool, cand)
         age = age.at[i].set(jnp.where(pub, 0, age[i]))
         if feat_valid is not None:
             chosen = jnp.where(act & fv[i], j, -1).astype(jnp.int32)
         else:
             chosen = jnp.where(act, j, -1).astype(jnp.int32)
-        ys = (chosen, rejected_i) if admission is not None else chosen
+        if admission is not None and trust is not None:
+            ys = (chosen, rejected_i, (clip_i, wmf_i))
+        elif admission is not None:
+            ys = (chosen, rejected_i)
+        elif trust is not None:
+            ys = (chosen, (clip_i, wmf_i))
+        else:
+            ys = chosen
         return (heads, pool, age), ys
 
     keys = jax.random.split(key, C)
     (heads, pool_heads, pool_age), ys = jax.lax.scan(
         body, (heads, pool_heads, pool_age), (jnp.arange(C), keys))
+    if admission is not None and trust is not None:
+        chosen, rejected, tstats = ys
+        return heads, pool_heads, pool_age, chosen, rejected, tstats
     if admission is not None:
         chosen, rejected = ys
         return heads, pool_heads, pool_age, chosen, rejected
+    if trust is not None:
+        chosen, tstats = ys
+        return heads, pool_heads, pool_age, chosen, tstats
     return heads, pool_heads, pool_age, ys
 
 
@@ -666,7 +862,7 @@ def _make_batched_fns(lr: float):
 def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 use_kernel: bool, do_federate: bool, do_eval: bool, *,
                 exchange_every: int = 1, gather=None, local_rows=None,
-                shard=None, admission=None):
+                shard=None, admission=None, trust=None):
     """The fused whole-epoch computation shared by BOTH batched backends:
     a scan over the epoch's sub-rounds (vmapped Adam step on that round's
     R-slice, then the fused policy round), with the per-epoch validation
@@ -696,47 +892,92 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
     ``admission`` (a norm bound, or None) forwards to
     :func:`_policy_round_body`'s pool admission guard; when set, the epoch
     function returns ONE extra trailing output — the stacked
-    ``(exchange_rounds, C)`` bool per-opportunity rejection mask."""
+    ``(exchange_rounds, C)`` bool per-opportunity rejection mask.
+
+    ``trust`` (a :class:`~repro.core.trust.TrustPlan`, or None) threads the
+    trust layer through the scan.  The epoch function then takes ONE extra
+    trailing runtime argument ``trust_arrays`` — the watermark signature
+    stack (C, nf, ...) under ``trust.watermark``, the host-derived
+    ``(net_masks, correction)`` pair (leading axis = this epoch's exchange
+    rounds, consumed as an extra scan leg) under ``trust.secure_agg``, an
+    ignored dummy under DP-only — and returns one extra trailing output
+    AFTER the admission mask: the stacked ``((rounds, C) clip, (rounds, C)
+    wm_failed)`` bool pair.  Secure aggregation replaces the per-client
+    selection scan with ``trust.secure_round`` (masked mean transfer — the
+    pool stores masked payloads, ``chosen`` is all -1).  ``trust=None``
+    traces the byte-identical pre-trust graph (the bit-identity pin,
+    mirroring ``faults=None``)."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
     bounded = policies.pool.bounded
     k_ex = int(exchange_every)
+    secure = trust is not None and trust.secure_agg is not None
+    # secure masks ride the scan as an extra xs leg only when the scan
+    # actually exchanges; a do_federate=False dispatch ignores them
+    secure_in_scan = secure and do_federate
+    sel_trust = None if secure else trust
     if gather is None:
         gather = lambda t: t
     if local_rows is None:
         local_rows = lambda t: t
 
     def epoch(params, opt_state, pool_heads, pool_age, key, best_val,
-              best_params, xs_r, xd_r, y_r, active, val_xs, val_xd, val_y):
+              best_params, xs_r, xd_r, y_r, active, val_xs, val_xd, val_y,
+              trust_arrays=None):
         C = active.shape[0]
         n_sub = y_r.shape[0]
 
         def body(carry, batch):
             params, opt_state, pool_heads, pool_age, key = carry
-            xs_b, xd_b, y_b = batch
-            if do_federate:
+            if secure_in_scan:
+                (xs_b, xd_b, y_b), (mask_e, corr_e) = batch
+            else:
+                xs_b, xd_b, y_b = batch
+            if do_federate and not secure:  # secure needs no probe gathers
                 xd_g, y_g = gather(xd_b), gather(y_b)   # overlaps the step
             params, opt_state, _ = step(params, opt_state, xs_b, xd_b, y_b)
             if do_federate:
                 if bounded:
                     pool_age = pool_age + 1
                 key, sub = jax.random.split(key)
-                out = _policy_round_body(
-                    gather(params["heads"]), pool_heads, pool_age,
-                    xd_g, y_g, active, sub, nf=nf,
-                    policies=policies, use_kernel=use_kernel, shard=shard,
-                    admission=admission)
-                if admission is not None:
-                    new_heads, pool_heads, pool_age, chosen, rej = out
+                if secure:
+                    (new_heads, pool_heads, pool_age, chosen, rej,
+                     clip) = TR.secure_round(
+                        gather(params["heads"]), pool_heads, pool_age,
+                        active, mask_e, corr_e, sub, sa=trust.secure_agg,
+                        dp=trust.dp, nf=nf, admission=admission)
+                    tstats = (clip, jnp.zeros((C,), bool))
                 else:
-                    new_heads, pool_heads, pool_age, chosen = out
+                    out = _policy_round_body(
+                        gather(params["heads"]), pool_heads, pool_age,
+                        xd_g, y_g, active, sub, nf=nf,
+                        policies=policies, use_kernel=use_kernel,
+                        shard=shard, admission=admission, trust=sel_trust,
+                        trust_sig=(trust_arrays if sel_trust is not None
+                                   and sel_trust.watermark is not None
+                                   else None))
+                    if trust is not None:
+                        tstats = out[-1]
+                        out = out[:-1]
+                    if admission is not None:
+                        new_heads, pool_heads, pool_age, chosen, rej = out
+                    else:
+                        new_heads, pool_heads, pool_age, chosen = out
                 params = {**params, "heads": local_rows(new_heads)}
             else:
                 chosen = jnp.full((C, nf), -1, jnp.int32)
                 if admission is not None:
                     rej = jnp.zeros((C,), bool)
-            ys = (chosen, rej) if admission is not None else chosen
+                if trust is not None:
+                    tstats = (jnp.zeros((C,), bool), jnp.zeros((C,), bool))
+            ys = (chosen,)
+            if admission is not None:
+                ys = ys + (rej,)
+            if trust is not None:
+                ys = ys + (tstats,)
+            if len(ys) == 1:
+                ys = ys[0]
             return (params, opt_state, pool_heads, pool_age, key), ys
 
         def train_only(carry, batch):
@@ -749,7 +990,10 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
         if not do_federate or k_ex == 1:
             # the historical flat scan — one (train, exchange?) step per
             # sub-round; exchange_every=1 must stay bit-identical to it
-            carry, ys = jax.lax.scan(body, carry, (xs_r, xd_r, y_r))
+            xs = (xs_r, xd_r, y_r)
+            if secure_in_scan:
+                xs = (xs, trust_arrays)
+            carry, ys = jax.lax.scan(body, carry, xs)
         else:
             n_grp, rem = divmod(n_sub, k_ex)
             grouped = jax.tree_util.tree_map(
@@ -760,19 +1004,33 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
             def group(carry, batch_k):
                 # k-1 train-only rounds, then train + exchange on the
                 # group's LAST round (probes = that round's own R-batch)
+                if secure_in_scan:
+                    batch_k, masks_e = batch_k
                 carry, _ = jax.lax.scan(
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[:k_ex - 1], batch_k))
-                return body(carry, jax.tree_util.tree_map(
-                    lambda t: t[k_ex - 1], batch_k))
+                last = jax.tree_util.tree_map(lambda t: t[k_ex - 1], batch_k)
+                if secure_in_scan:
+                    last = (last, masks_e)
+                return body(carry, last)
 
-            carry, ys = jax.lax.scan(group, carry, grouped)
+            xs = (grouped, trust_arrays) if secure_in_scan else grouped
+            carry, ys = jax.lax.scan(group, carry, xs)
             if rem:                       # leftover rounds never exchange
                 carry, _ = jax.lax.scan(
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
                                            (xs_r, xd_r, y_r)))
-        chosen, rejected = ys if admission is not None else (ys, None)
+        if admission is not None and trust is not None:
+            chosen, rejected, tstats = ys
+        elif admission is not None:
+            chosen, rejected = ys
+            tstats = None
+        elif trust is not None:
+            chosen, tstats = ys
+            rejected = None
+        else:
+            chosen, rejected, tstats = ys, None, None
         (params, opt_state, pool_heads, pool_age, key) = carry
         if do_eval:
             v = evaluate(params, val_xs, val_xd, val_y)  # (local clients,)
@@ -787,7 +1045,11 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
             v = None
         out = (params, opt_state, pool_heads, pool_age, key, best_val,
                best_params, v, chosen)
-        return out + (rejected,) if admission is not None else out
+        if admission is not None:
+            out = out + (rejected,)
+        if trust is not None:
+            out = out + (tstats,)
+        return out
 
     return epoch
 
@@ -795,7 +1057,7 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
 @functools.lru_cache(maxsize=None)
 def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
                    use_kernel: bool, do_federate: bool, do_eval: bool,
-                   exchange_every: int = 1, admission=None):
+                   exchange_every: int = 1, admission=None, trust=None):
     """Compile-cached whole-epoch function: ONE dispatch scans every
     sub-round of an epoch — the vmapped Adam step on that round's R-slice,
     then the fused policy round (selection, blend, publish, aging, RNG
@@ -821,7 +1083,8 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
     ``do_federate`` gating (a non-exchange round IS a ``do_federate=False``
     round)."""
     epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval,
-                        exchange_every=exchange_every, admission=admission)
+                        exchange_every=exchange_every, admission=admission,
+                        trust=trust)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -890,6 +1153,20 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     lut = _selection_lut(names, nf)
     admission = fed._admission()
     smask = fed._straggler_mask
+    trust = fed._trust
+    secure = trust is not None and trust.secure_agg is not None
+    # host templates/derivations the trust layer needs (captured before the
+    # stacked state is donated away)
+    head_tmpl = jax.tree_util.tree_map(
+        np.asarray, clients[0].params["heads"]) if secure else None
+    sig_stack = None
+    if trust is not None and trust.watermark is not None:
+        sig_stack = jax.tree_util.tree_map(
+            jnp.asarray,
+            TR.stack_trees_np([fed._wm_sig(c) for c in clients]))
+    clip_total = 0
+    wm_fail = np.zeros(C, np.int64)
+    dp_pubs = np.zeros(C, np.int64)
     heads_rejected = 0
     k_ex = fed.schedule.exchange_every
     exch_mask = fed.schedule.exchange_mask(n_sub)
@@ -933,15 +1210,57 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
             return MF._make_mesh_epoch_fn(cfg.lr, nf, cfg.w, pol,
                                           use_kernel, do_federate, do_eval,
                                           mesh, C, exchange_every,
-                                          admission)
+                                          admission, trust)
         return _make_epoch_fn(cfg.lr, nf, pol, use_kernel, do_federate,
-                              do_eval, exchange_every, admission)
+                              do_eval, exchange_every, admission, trust)
+
+    def trust_args(active, n_exch: int, e_off: int = 0):
+        """The epoch function's trailing ``trust_arrays`` argument for one
+        dispatch: the replicated signature stack (watermark), the wave's
+        ``(net_masks, correction)`` pair covering ``n_exch`` exchange
+        rounds starting at within-epoch round ``e_off`` (secure), or a
+        scalar dummy (DP-only).  Returns () when the trust layer is off."""
+        if trust is None:
+            return ()
+        if secure:
+            wave = fed._trust_wave_base + fed.epoch
+            masks = TR.net_masks(trust.secure_agg, wave, n_exch,
+                                 fed._trust_ids, head_tmpl,
+                                 round_offset=e_off)
+            corr = TR.mask_correction(masks, active)
+            ta = jax.tree_util.tree_map(jnp.asarray, (masks, corr))
+        elif sig_stack is not None:
+            ta = sig_stack
+        else:
+            ta = jnp.zeros((), jnp.float32)
+        if mesh is not None:
+            ta = MF.replicate(mesh, ta)
+        return (ta,)
 
     # the fused path runs the whole epoch in ONE dispatch; any callback that
     # needs per-round delivery forces the chunked path (one dispatch per
     # sub-round through the SAME compiled function, on_round after each)
     fused = not any(_wants_per_round(cb) for cb in cbs)
     n_dispatch = 0
+
+    def account_trust(tstats, rej, active, federated: bool, n_exch: int):
+        """Fold one dispatch's trust outputs into the fit's counters: clip
+        events, per-client watermark failures, and the DP release count —
+        publications actually made (active exchange opportunities minus
+        watermark-blocked minus admission-rejected; the three are disjoint
+        by the in-graph publication chain)."""
+        nonlocal clip_total
+        if trust is None:
+            return
+        clip_r, wmf_r = (np.asarray(t) for t in tstats)
+        clip_total += int(clip_r.sum())
+        wmf_pc = wmf_r.reshape(-1, C).sum(axis=0).astype(np.int64)
+        wm_fail[:] += wmf_pc
+        if trust.dp is not None and federated:
+            rej_pc = (np.asarray(rej).reshape(-1, C).sum(axis=0)
+                      if rej is not None else np.zeros(C, np.int64))
+            dp_pubs[:] += (active.astype(np.int64) * n_exch
+                           - wmf_pc - rej_pc)
 
     def sync():
         """Write the stacked loop state back into the clients / pool / rng —
@@ -976,28 +1295,45 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
         fed._mid_epoch = True
         if fused:
             epoch_fn = make_epoch_fn(do_federate, True, k_ex)
-            out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val)
+            out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val,
+                           *trust_args(active, n_exch_epoch))
+            if trust is not None:
+                tstats, out = out[-1], out[:-1]
             if admission is not None:
                 (*state, v, chosen, rej) = out
                 heads_rejected += int(np.asarray(rej).sum())
             else:
                 (*state, v, chosen) = out
+                rej = None
+            account_trust(tstats, rej, active, do_federate,
+                          n_exch_epoch) if trust is not None else None
             n_dispatch += 1
         else:
             chunks = []
+            e_done = 0          # exchange rounds executed so far this epoch
+                                # (the trust layer's within-epoch mask index)
             for rnd in range(n_sub):
                 # cadence on the chunked path: a non-exchange sub-round is
                 # exactly a do_federate=False dispatch (train + eval only)
-                epoch_fn = make_epoch_fn(do_federate and bool(exch_mask[rnd]),
-                                         rnd == n_sub - 1)
+                fed_r = do_federate and bool(exch_mask[rnd])
+                epoch_fn = make_epoch_fn(fed_r, rnd == n_sub - 1)
                 out = epoch_fn(
                     *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
-                    y_r[rnd:rnd + 1], active_dev, *val)
+                    y_r[rnd:rnd + 1], active_dev, *val,
+                    *trust_args(active, 1 if fed_r else 0, e_done))
+                if trust is not None:
+                    tstats, out = out[-1], out[:-1]
                 if admission is not None:
                     (*state, v, ch, rej) = out
                     heads_rejected += int(np.asarray(rej).sum())
                 else:
                     (*state, v, ch) = out
+                    rej = None
+                account_trust(tstats, rej, active, fed_r,
+                              1 if fed_r else 0) if trust is not None \
+                    else None
+                if fed_r:
+                    e_done += 1
                 chunks.append(ch)
                 n_dispatch += 1
                 # sync the carried state (and the live round counters)
@@ -1011,7 +1347,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                     cb.on_round(fed, epoch, rnd)
             if n_sub == 0:      # no trainable sub-round: eval-only dispatch
                 epoch_fn = make_epoch_fn(do_federate, True)
-                out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val)
+                out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val,
+                               *trust_args(active, 0))
+                if trust is not None:
+                    out = out[:-1]
                 if admission is not None:
                     (*state, v, ch, _rej) = out
                 else:
@@ -1042,6 +1381,15 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                             {names[i]: float(v[i]) for i in range(C)},
                             {names[i]: bool(active[i]) for i in range(C)})
 
+    if trust is not None:
+        fed._clip_events += clip_total
+        for i, nm in enumerate(names):
+            if wm_fail[i]:
+                fed._wm_failures[nm] = (fed._wm_failures.get(nm, 0)
+                                        + int(wm_fail[i]))
+            if dp_pubs[i]:
+                fed._dp_counts[nm] = (fed._dp_counts.get(nm, 0)
+                                      + int(dp_pubs[i]))
     fed.dispatch_stats = {"engine": "batched",
                           "path": "fused" if fused else "chunked",
                           "devices": MF.mesh_devices(mesh),
@@ -1052,7 +1400,8 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                           "exchange_rounds": exchange_rounds,
                           "pool_bytes_gathered": pool_bytes,
                           "state_bytes": state_bytes,
-                          **fed._fault_stats(heads_rejected)}
+                          **fed._fault_stats(heads_rejected),
+                          **fed._trust_stats()}
     # write the final state back so the clients / pool / rng stay canonical
     sync()
     fed._sync = None
@@ -1103,7 +1452,7 @@ class Federation:
                  schedule: Optional[RoundSchedule] = None,
                  callbacks: Sequence[Callback] = (),
                  engine: str = "sequential",
-                 mesh=None, faults=None):
+                 mesh=None, faults=None, trust=None):
         if engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {engine!r}")
         self.clients = list(clients)
@@ -1132,14 +1481,60 @@ class Federation:
         # arms the pool admission guard; a disabled plan (all rates zero)
         # or None keeps every engine bit-identical to a fault-free build
         self.faults = faults
+        # trust layer (core/trust.py): an *enabled* TrustPlan arms masked
+        # secure aggregation / DP releases / watermark verification; a
+        # disabled plan or None keeps every engine bit-identical to a
+        # trust-free build (the same contract as faults=None)
+        if trust is not None and not isinstance(trust, TR.TrustPlan):
+            raise TypeError(f"trust: expected a TrustPlan, "
+                            f"got {type(trust).__name__}")
+        self.trust = trust
+        self._trust = trust if trust is not None and trust.enabled else None
+        # wave/identity context the participation orchestrator overrides so
+        # trust derivations (masks, oracle DP noise) key on GLOBAL client
+        # ids and the wave counter, not per-wave positions
+        self._trust_wave_base = 0
+        self._trust_ids = tuple(range(len(self.clients)))
+        self._dp_counts: Dict[str, int] = {}
+        self._wm_failures: Dict[str, int] = {n: 0 for n in names}
+        self._clip_events = 0
+        self._wm_sigs: Dict[str, object] = {}
         # (C,) bool poked by the participation orchestrator before fit():
         # True rows are this wave's stragglers (they train, never exchange)
         self._straggler_mask = None
         self._seed_rejected = 0
+        wm = self._trust.watermark if self._trust is not None else None
+        if wm is not None:
+            # embed/top-up every client's OWN signature before anything is
+            # published — the no-heal rule leaves an already-flipped head
+            # (projection at -strength) untouched, so corruption that
+            # happened upstream stays detectable
+            for c in self.clients:
+                new_h, _ = TR.wm_embed(c.params["heads"], self._wm_sig(c),
+                                       wm)
+                c.params = dict(c.params)
+                c.params["heads"] = new_h
         self.pool = HeadPool()
         admission = self._admission()
         for c in self.clients:   # asynchronous start: pool is never empty
-            if admission is not None and not FT.heads_admissible(
+            if self._trust is not None \
+                    and self._trust.secure_agg is not None:
+                # under secure aggregation no raw head may ever reach the
+                # pool — the seed rows are zeros (the first masked round
+                # overwrites them with masked payloads)
+                self.pool.publish(c.name,
+                                  FT.zero_heads_like(c.params["heads"]),
+                                  c.nf)
+            elif wm is not None and not TR.wm_verify_host(
+                    c.params["heads"], self._wm_sig(c), wm):
+                # a seed head that fails its own signature was tampered
+                # with before this federation saw it (the sign-flip
+                # fingerprint): quarantine the row, count the failure
+                self.pool.publish(c.name,
+                                  FT.zero_heads_like(c.params["heads"]),
+                                  c.nf, age=FT.QUARANTINE_AGE)
+                self._wm_failures[c.name] += 1
+            elif admission is not None and not FT.heads_admissible(
                     c.params["heads"], admission):
                 # quarantine a poisoned seed head: publish a zeroed row at
                 # the sentinel age so no selector ever sees it (a clean
@@ -1192,6 +1587,31 @@ class Federation:
                 "clients_dropped": 0,
                 "stragglers": 0 if smask is None else int(np.sum(smask)),
                 "waves_degraded": 0}
+
+    def _wm_sig(self, c: FederatedClient):
+        """The client's cached watermark signature tree (a pure function of
+        the watermark seed and the client NAME, so it is identical across
+        engines, waves and restores)."""
+        if c.name not in self._wm_sigs:
+            self._wm_sigs[c.name] = TR.signature(
+                self._trust.watermark, c.name,
+                jax.tree_util.tree_map(np.asarray, c.params["heads"]))
+        return self._wm_sigs[c.name]
+
+    def _trust_stats(self) -> dict:
+        """The trust counters every engine folds into ``dispatch_stats``:
+        ``epsilon_spent`` is the worst per-client analytic (eps, delta)
+        bound over all DP releases so far (cumulative across fits),
+        ``clip_events`` / ``watermark_failures`` the cumulative event
+        counts.  All zero when the trust layer is off."""
+        t = self._trust
+        eps = 0.0
+        if t is not None and t.dp is not None:
+            eps = max((t.dp.epsilon(v) for v in self._dp_counts.values()),
+                      default=0.0)
+        return {"epsilon_spent": float(eps),
+                "clip_events": int(self._clip_events),
+                "watermark_failures": int(sum(self._wm_failures.values()))}
 
     # -- training ----------------------------------------------------------
 
@@ -1325,6 +1745,16 @@ class Federation:
             "switch_rng": self._switch_rng.bit_generator.state,
             "faults": (self.faults.spec()
                        if self.faults is not None else None),
+            "trust": (self.trust.spec()
+                      if self.trust is not None else None),
+            # integer counters only — the accountant's state restores
+            # bit-identically by construction (epsilons are recomputed
+            # analytically from the counts)
+            "trust_state": {"dp_counts": self._dp_counts,
+                            "wm_failures": self._wm_failures,
+                            "clip_events": self._clip_events,
+                            "wave_base": self._trust_wave_base,
+                            "ids": list(self._trust_ids)},
         }
         # atomic manifest write = the commit; only then prune state files
         # superseded by it (the previous pair stays intact until here)
@@ -1376,13 +1806,15 @@ class Federation:
                     f"clients with the checkpointed config")
         cfg = HFLConfig(**manifest["cfg"])
         fspec = manifest.get("faults")
+        tspec = manifest.get("trust")
         fed = cls(clients, cfg,
                   policies=FederationPolicies.from_spec(manifest["policies"]),
                   schedule=RoundSchedule(**manifest["schedule"]),
                   callbacks=callbacks,
                   engine=engine or manifest["engine"],
                   mesh=mesh,
-                  faults=policy_from_spec(fspec) if fspec else None)
+                  faults=policy_from_spec(fspec) if fspec else None,
+                  trust=policy_from_spec(tspec) if tspec else None)
         state = ckpt.load(d / manifest.get("state_file", "state.msgpack"))
         if state.get("epoch") != manifest["epoch"]:
             raise ValueError(
@@ -1409,6 +1841,21 @@ class Federation:
         fed._key = jnp.asarray(state["key"])
         fed._sel_rng.bit_generator.state = manifest["sel_rng"]
         fed._switch_rng.bit_generator.state = manifest["switch_rng"]
+        ts = manifest.get("trust_state")
+        if ts is not None:
+            # the constructor's init-time embedding/seeding side effects
+            # were fully overwritten by the params/pool overlays above;
+            # the counters below make the accountant/reputation state
+            # replay bit-identically
+            fed._dp_counts = {k: int(v)
+                              for k, v in ts.get("dp_counts", {}).items()}
+            fed._wm_failures = {k: int(v)
+                                for k, v in ts.get("wm_failures",
+                                                   {}).items()}
+            fed._clip_events = int(ts.get("clip_events", 0))
+            fed._trust_wave_base = int(ts.get("wave_base", 0))
+            fed._trust_ids = tuple(int(i) for i in ts.get(
+                "ids", range(len(clients))))
         return fed
 
 

@@ -192,7 +192,7 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
                         policies: FederationPolicies, use_kernel: bool,
                         do_federate: bool, do_eval: bool, mesh: Mesh,
                         n_clients: int, exchange_every: int = 1,
-                        admission=None):
+                        admission=None, trust=None):
     """Compile-cached client-sharded whole-epoch function — the mesh twin of
     ``federation._make_epoch_fn``: the SAME shared epoch computation
     (``federation._epoch_body``), same signature, same donation contract,
@@ -238,17 +238,24 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
                         exchange_every=exchange_every, gather=gather,
                         local_rows=local_rows,
                         shard=(axis, mesh_devices(mesh)),
-                        admission=admission)
+                        admission=admission, trust=trust)
     out_specs = (pspecs, cl, rep, rep, rep, cl, pspecs,
                  cl if do_eval else None, rep)
     if admission is not None:
         # the admission guard's per-opportunity rejection mask is computed
         # from the replicated pool carry — replicated like the selections
         out_specs = out_specs + (rep,)
+    in_specs = (pspecs, cl, rep, rep, rep, cl, pspecs,
+                data, data, data, rep, cl, cl, cl)
+    if trust is not None:
+        # the trust layer's host-derived inputs (signature stack / mask
+        # pair / dummy) and its per-round stats are replicated: the whole
+        # publication tail runs inside the replicated policy round
+        in_specs = in_specs + (rep,)
+        out_specs = out_specs + (rep,)
     sharded = shard_map(
         epoch, mesh=mesh,
-        in_specs=(pspecs, cl, rep, rep, rep, cl, pspecs,
-                  data, data, data, rep, cl, cl, cl),
+        in_specs=in_specs,
         out_specs=out_specs,
         check_rep=False)
     return jax.jit(sharded, donate_argnums=(0, 1, 2, 3, 4, 5, 6))

@@ -61,6 +61,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import faults as FT
 from repro.core import mesh_federation as MF
+from repro.core import trust as TR
 from repro.core.federation import (Federation, RoundSchedule, _tree_bytes)
 from repro.core.hfl import FederatedClient, HFLConfig
 from repro.core.policies import (FederationPolicies, _Spec, policy_from_spec,
@@ -360,7 +361,20 @@ class ParticipatingFederation:
     exchange, aging their pool entries), and corrupts byzantine clients'
     heads (quarantined by the inner engines' pool admission guard).  The
     plan spec and the accumulated fault log ride the checkpoint manifest,
-    so a restored run replays the identical failure scenario."""
+    so a restored run replays the identical failure scenario.
+
+    ``trust=`` takes a :class:`~repro.core.trust.TrustPlan`: the inner
+    engines run their trust hooks each wave (masks/noise keyed by the
+    GLOBAL wave number and client ids, so derivations are wave-unique and
+    engine-independent), while the orchestrator owns the cross-wave state:
+    a per-client :class:`~repro.core.trust.DPAccountant` composing epsilon
+    over every wave, and a :class:`~repro.core.trust.ReputationBook` that
+    strikes clients failing watermark verification and QUARANTINES repeat
+    offenders — dropped from subsequent waves (geometry re-rounded like
+    dropout; a wave never goes empty, so if every sampled client is
+    quarantined the first-drawn are revived) with their resident pool rows
+    zeroed at ``faults.QUARANTINE_AGE``.  Both books ride the checkpoint
+    manifest bit-identically."""
 
     def __init__(self, population: ClientPopulation,
                  cfg: Optional[HFLConfig] = None, *,
@@ -370,7 +384,8 @@ class ParticipatingFederation:
                  engine: str = "batched",
                  mesh=None,
                  sample_multiple: Optional[int] = None,
-                 faults: Optional[FT.FaultPlan] = None):
+                 faults: Optional[FT.FaultPlan] = None,
+                 trust: Optional[TR.TrustPlan] = None):
         self.population = population
         self.cfg = cfg or HFLConfig()
         self.policies = policies if policies is not None \
@@ -391,6 +406,21 @@ class ParticipatingFederation:
         self._injector = FT.FaultInjector(faults) \
             if faults is not None and faults.enabled else None
         self.fault_log: List[FT.WaveFaults] = []
+        # trust layer (core/trust.py): the inner engines privatize/verify
+        # per wave; the orchestrator composes the cross-wave books
+        if trust is not None and not isinstance(trust, TR.TrustPlan):
+            raise TypeError(f"trust: expected a TrustPlan, "
+                            f"got {type(trust).__name__}")
+        self.trust = trust
+        self._trust = trust if trust is not None and trust.enabled else None
+        self.accountant = (TR.DPAccountant(trust.dp)
+                           if self._trust is not None
+                           and trust.dp is not None else None)
+        self.reputation = (TR.ReputationBook(trust.watermark)
+                           if self._trust is not None
+                           and trust.watermark is not None else None)
+        self.clip_events = 0
+        self.wm_failures: Dict[str, int] = {}
         # the granularity sampled counts are rounded to — defaults to the
         # mesh device count; pass it explicitly to reproduce a D-device
         # run's exact participation schedule on another engine/mesh (the
@@ -444,10 +474,21 @@ class ParticipatingFederation:
         waves_degraded = store_rebuilds = 0
         cohorts_max = 1
         path = None
+        quarantined_drops = 0
         while self.wave < target:
             idx = self.participation.sample(self.population, self._part_rng,
                                             multiple_of=mult)
             active = [int(i) for i in idx]
+            if self.reputation is not None:
+                # reputation quarantine: strip quarantined clients from the
+                # wave BEFORE fault injection / building (geometry
+                # re-rounded like dropout; the sampler's RNG sequence is
+                # untouched, so the participation schedule stays replayable)
+                quar = [i for i in active if self.reputation.is_quarantined(
+                    self.population.name_of(i))]
+                if quar:
+                    active, _ = FT.reround_wave(active, quar, mult)
+                    quarantined_drops += len(quar)
             wf = None
             if self._injector is not None:
                 # dropout-tolerant wave: drop drawn clients and re-round
@@ -501,7 +542,13 @@ class ParticipatingFederation:
                 clients, self.cfg, policies=self.policies,
                 schedule=RoundSchedule(1, self.schedule.R,
                                        self.schedule.exchange_every),
-                engine=self.engine, mesh=self.mesh, faults=self.faults)
+                engine=self.engine, mesh=self.mesh, faults=self.faults,
+                trust=self.trust)
+            # trust derivations (pairwise masks, oracle DP noise) key on the
+            # GLOBAL wave number and GLOBAL client ids: unique per wave,
+            # identical across engines/meshes for the same sampled subset
+            fed._trust_wave_base = self.wave
+            fed._trust_ids = tuple(active)
             if wf is not None and wf.stragglers:
                 # stragglers train but miss every exchange this wave: the
                 # engines mask their switch off, so their pool entries age
@@ -543,6 +590,29 @@ class ParticipatingFederation:
                     k = (c.name, f)
                     self.pool_entries[k] = host_tree(fed.pool.entries[k])
                     self.pool_ages[k] = int(fed.pool.ages[k])
+            newly_q: List[str] = []
+            if self._trust is not None:
+                # fold the wave's trust counters into the cross-wave books
+                self.clip_events += fed._clip_events
+                if self.accountant is not None:
+                    for nm, k in sorted(fed._dp_counts.items()):
+                        self.accountant.record(nm, k)
+                for nm, k in sorted(fed._wm_failures.items()):
+                    if k:
+                        self.wm_failures[nm] = (self.wm_failures.get(nm, 0)
+                                                + int(k))
+                        if self.reputation is not None \
+                                and self.reputation.strike(nm):
+                            newly_q.append(nm)
+                # quarantine action: a newly quarantined client's resident
+                # pool rows are zeroed at the QUARANTINE sentinel, so no
+                # engine ever serves its poisoned knowledge again
+                for nm in newly_q:
+                    for k in list(self.pool_entries):
+                        if k[0] == nm:
+                            self.pool_entries[k] = jax.tree_util.tree_map(
+                                np.zeros_like, self.pool_entries[k])
+                            self.pool_ages[k] = FT.QUARANTINE_AGE
             st = fed.dispatch_stats or {}
             sb = int(st.get("state_bytes", 0))
             gather_bytes += sb
@@ -571,6 +641,11 @@ class ParticipatingFederation:
                 row["dropped"] = list(wf.dropped)
                 row["stragglers"] = list(wf.stragglers)
                 row["byzantine"] = list(wf.byzantine)
+            if self._trust is not None:
+                if self.accountant is not None:
+                    row["epsilon"] = self.accountant.max_epsilon
+                if newly_q:
+                    row["quarantined"] = newly_q
             self.wave_log.append(row)
             if verbose:
                 print(f"[wave {self.wave:3d}] {len(clients)}/"
@@ -606,6 +681,13 @@ class ParticipatingFederation:
             "stragglers": stragglers_n,
             "waves_degraded": waves_degraded,
             "store_rebuilds": store_rebuilds,
+            "epsilon_spent": (self.accountant.max_epsilon
+                              if self.accountant is not None else 0.0),
+            "clip_events": self.clip_events,
+            "watermark_failures": sum(self.wm_failures.values()),
+            "quarantined": (sorted(self.reputation.quarantined)
+                            if self.reputation is not None else []),
+            "quarantined_drops": quarantined_drops,
         }
         return self.results()
 
@@ -672,6 +754,18 @@ class ParticipatingFederation:
             "faults": (self.faults.spec()
                        if self.faults is not None else None),
             "fault_log": FT.fault_log_json(self.fault_log),
+            # the trust books are integer counts / name sets — a JSON
+            # round-trip is bit-identical by construction
+            "trust": (self.trust.spec()
+                      if self.trust is not None else None),
+            "trust_state": {
+                "accountant": (self.accountant.to_json()
+                               if self.accountant is not None else None),
+                "reputation": (self.reputation.to_json()
+                               if self.reputation is not None else None),
+                "clip_events": self.clip_events,
+                "wm_failures": self.wm_failures,
+            },
         }
         tmp = d / "manifest.json.tmp"
         tmp.write_text(json.dumps(manifest))
@@ -709,6 +803,7 @@ class ParticipatingFederation:
                 f"re-declare the population with the same arguments")
         cfg = HFLConfig(**manifest["cfg"])
         fspec = manifest.get("faults")
+        tspec = manifest.get("trust")
         fed = cls(population, cfg,
                   policies=FederationPolicies.from_spec(
                       manifest["policies"]),
@@ -718,7 +813,8 @@ class ParticipatingFederation:
                   mesh=mesh,
                   sample_multiple=sample_multiple
                   or manifest.get("sample_multiple"),
-                  faults=policy_from_spec(fspec) if fspec else None)
+                  faults=policy_from_spec(fspec) if fspec else None,
+                  trust=policy_from_spec(tspec) if tspec else None)
         state = ckpt.load(d / manifest["state_file"])
         if state.get("wave") != manifest["wave"]:
             raise ValueError(
@@ -750,4 +846,14 @@ class ParticipatingFederation:
         fed._part_rng.bit_generator.state = manifest["part_rng"]
         fed._sel_rng.bit_generator.state = manifest["sel_rng"]
         fed._switch_rng.bit_generator.state = manifest["switch_rng"]
+        ts = manifest.get("trust_state") or {}
+        if fed.accountant is not None:
+            fed.accountant = TR.DPAccountant.from_json(
+                fed.trust.dp, ts.get("accountant"))
+        if fed.reputation is not None:
+            fed.reputation = TR.ReputationBook.from_json(
+                fed.trust.watermark, ts.get("reputation"))
+        fed.clip_events = int(ts.get("clip_events", 0))
+        fed.wm_failures = {n: int(v)
+                           for n, v in (ts.get("wm_failures") or {}).items()}
         return fed

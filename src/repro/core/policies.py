@@ -448,4 +448,6 @@ def policy_from_spec(spec: dict):
     for k, v in d.items():          # JSON round-trip turns tuples into lists
         if isinstance(v, list):
             d[k] = tuple(v)
+        elif isinstance(v, dict) and "kind" in v:
+            d[k] = policy_from_spec(v)   # nested sub-policy (TrustPlan etc.)
     return _REGISTRY[kind](**d)

@@ -1,0 +1,629 @@
+"""Trust layer: secure aggregation, differential privacy, watermarked heads.
+
+ROADMAP item 3 as a policy pack over PR 2's ``register_policy`` hook — the
+paper claims HFL delivers heterogeneous transfer "with privacy, model
+security", and PR 8's admission guard only covers the *numerical* half of
+that claim (NaN/Inf/exploding norms).  This module adds the statistical
+half as three plugins bundled into a :class:`TrustPlan` the engines thread
+exactly like ``faults=`` — ``trust=None`` (or a disabled plan) traces the
+byte-identical pre-trust graph on every engine:
+
+* :class:`MaskedSecureAggregation` (a ``TransferRule``): pairwise
+  seed-derived masks — a pure function of ``(seed, wave, round, client i,
+  client j)``, like ``FaultPlan``'s draws — that cancel in the pool-side
+  sum, so no raw head ever leaves a client.  The exchange becomes a masked
+  FedAvg mean (per-feature Eq.-7 selection needs raw candidates, which is
+  exactly what secure aggregation forbids; the mean transfer is the
+  standard secure-aggregation aggregate).  Clients removed AFTER the
+  per-wave RNG fold-in (PR 8's stragglers / switch-inactive clients) are
+  recovered by mask reconstruction: the server re-derives the missing
+  net masks from the seed and adds them back (:func:`mask_correction`),
+  so the surviving sum equals the plain sum to float tolerance.
+
+* :class:`DPNoise` (a ``TransferRule``): every published head tree is
+  L2-clipped to ``clip`` and perturbed with Gaussian noise of std
+  ``sigma * clip`` — the Gaussian mechanism — before it reaches the pool.
+  A per-client zCDP accountant (:class:`DPAccountant`) composes the
+  releases across rounds and waves (``rho = k / (2 sigma^2)``,
+  ``eps(delta) = rho + 2 sqrt(rho ln(1/delta))``), survives save/restore
+  bit-identically (its state is integer release counts), and surfaces in
+  ``dispatch_stats`` as ``epsilon_spent`` / ``clip_events``.
+
+* :class:`HeadWatermark` (a ``PoolPolicy``): each client's persisted heads
+  carry an additive per-client signature — a deterministic unit-norm
+  direction derived from ``(seed, crc32(name))``, embedded host-side
+  before any corruption can occur and topped back up in-graph at every
+  publication.  Publication verifies the signature by projection; a
+  sign-flipped head (PR 8's ``corruption="signflip"``, which preserves
+  the norm and therefore PASSES the admission guard by design) negates
+  the embedded signature, so the projection lands at ``-strength`` and
+  verification fails: the publication is blocked (the stale clean row
+  persists) and the failure feeds a reputation score
+  (:class:`ReputationBook`) that quarantines repeat offenders at wave
+  boundaries — dropped from sampling, resident pool rows zeroed at
+  ``faults.QUARANTINE_AGE``.
+
+Composition: DP composes with either mechanism (privatize, then mask /
+then verify happens first on the raw head); secure aggregation and
+watermark verification are mutually exclusive by construction — masked
+payloads destroy projections, which is the entire point of masking — and
+:class:`TrustPlan` rejects the combination.
+
+Derivations are host-side numpy from ``np.random.SeedSequence`` streams
+(the ``FaultPlan`` idiom) so every draw replays bit-identically across
+engines, device counts and save/restore; the in-graph pieces
+(:func:`wm_apply`, :func:`dp_privatize`, :func:`secure_round`) are pure
+jnp functions traced by the fused engines and jit-called by the
+sequential oracle, so the two cannot drift apart.  Note the pairwise mask
+generation materializes O(C^2) mask trees per exchange round on the host —
+fine at wave-sized C; a production deployment would stream a counter-mode
+PRG per pair instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import (PoolPolicy, TransferRule, _Spec,
+                                 register_policy)
+
+# SeedSequence stream tags (disjoint from faults.py's 0xFA/0xFB)
+_SIG_STREAM = 0x51       # per-client watermark signature directions
+_MASK_STREAM = 0x5A      # pairwise secure-aggregation masks
+_DP_STREAM = 0x7D        # host-side (oracle) DP noise; also the in-graph
+                         # fold_in tag deriving noise keys off the round key
+
+
+# ---------------------------------------------------------------------------
+# The three plugins + the plan that bundles them
+# ---------------------------------------------------------------------------
+
+@register_policy
+@dataclasses.dataclass(frozen=True)
+class MaskedSecureAggregation(TransferRule):
+    """Masked-mean secure aggregation.  ``alpha`` blends each client toward
+    the securely aggregated foreign mean (the Eq.-8 role); ``mask_scale``
+    is the std of the pairwise mask entries; ``seed`` keys every pairwise
+    draw.  Registered as a TransferRule for spec round-trip, but routed by
+    the engines through the dedicated mean-transfer round — per-head Eq.-7
+    selection on raw candidates is what masking forbids."""
+    alpha: float = 0.2
+    mask_scale: float = 1e-3
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0 < self.alpha <= 1:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
+        if self.mask_scale < 0:
+            raise ValueError(f"mask_scale must be >= 0, "
+                             f"got {self.mask_scale}")
+
+    def apply(self, target, selected):
+        raise TypeError(
+            "MaskedSecureAggregation is not a per-selection blend: the "
+            "engines route it through the masked mean-transfer round "
+            "(trust.secure_round) — pass it inside a TrustPlan, not as "
+            "FederationPolicies.transfer")
+
+
+@register_policy
+@dataclasses.dataclass(frozen=True)
+class DPNoise(TransferRule):
+    """Gaussian-mechanism release of published heads: L2-clip the head tree
+    to ``clip``, add N(0, (sigma*clip)^2) per coordinate.  ``delta`` is the
+    accountant's target delta; ``seed`` keys the sequential oracle's host
+    noise stream (the fused engines derive theirs from the epoch PRNG key —
+    noise streams are engine-specific, like stochastic selection
+    policies)."""
+    clip: float = 10.0
+    sigma: float = 0.5
+    delta: float = 1e-5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.clip <= 0:
+            raise ValueError(f"clip must be > 0, got {self.clip}")
+        if self.sigma <= 0:
+            raise ValueError(f"sigma must be > 0, got {self.sigma} (omit "
+                             f"the DPNoise plugin for the noiseless path)")
+        if not 0 < self.delta < 1:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+
+    @property
+    def rho_per_release(self) -> float:
+        """zCDP cost of one Gaussian release at noise multiplier sigma."""
+        return 1.0 / (2.0 * self.sigma ** 2)
+
+    def epsilon(self, releases: int) -> float:
+        """Analytic (eps, delta)-DP bound after ``releases`` composed
+        Gaussian releases: rho-zCDP converts at
+        eps = rho + 2 sqrt(rho ln(1/delta))."""
+        if releases <= 0:
+            return 0.0
+        rho = releases * self.rho_per_release
+        return rho + 2.0 * math.sqrt(rho * math.log(1.0 / self.delta))
+
+
+@register_policy
+@dataclasses.dataclass(frozen=True)
+class HeadWatermark(PoolPolicy):
+    """Per-client signature watermarking of published heads.  ``strength``
+    is the L2 magnitude of the embedded signature component; verification
+    passes when the projection onto the client's signature direction is at
+    least ``threshold * strength``; ``tolerance`` is how many waves with a
+    failed verification a client survives before the reputation layer
+    quarantines it.  Registered as a PoolPolicy (it governs what the pool
+    accepts and serves); ``max_age`` is unused here — staleness stays with
+    the bundle's pool policy.
+
+    The default ``strength`` is calibrated so HONEST clients essentially
+    never fail: between publications R training steps drift the projection
+    by an amount independent of ``strength``, so the verification budget
+    ``strength * (1 - threshold)`` must dominate that drift (at 0.05 honest
+    heads failed ~30% of opportunities on the reference population; at 0.2+
+    never), while a sign-flipped head projects at ``-strength`` and fails
+    at ANY strength."""
+    strength: float = 0.25
+    threshold: float = 0.5
+    tolerance: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.strength <= 0:
+            raise ValueError(f"strength must be > 0, got {self.strength}")
+        if not 0 < self.threshold < 1:
+            raise ValueError(f"threshold must be in (0, 1), "
+                             f"got {self.threshold}")
+        if self.tolerance < 1:
+            raise ValueError(f"tolerance must be >= 1, "
+                             f"got {self.tolerance}")
+
+
+@register_policy
+@dataclasses.dataclass(frozen=True)
+class TrustPlan(_Spec):
+    """The bundle the engines thread (``Federation(..., trust=plan)``),
+    mirroring ``faults=``: a disabled plan (all three None) or ``None``
+    traces the byte-identical pre-trust graph.  Hashable, so it joins the
+    fused engines' compile-cache keys as a static."""
+    secure_agg: Optional[MaskedSecureAggregation] = None
+    dp: Optional[DPNoise] = None
+    watermark: Optional[HeadWatermark] = None
+
+    def __post_init__(self):
+        if self.secure_agg is not None \
+                and not isinstance(self.secure_agg, MaskedSecureAggregation):
+            raise TypeError(f"secure_agg: expected MaskedSecureAggregation, "
+                            f"got {type(self.secure_agg).__name__}")
+        if self.dp is not None and not isinstance(self.dp, DPNoise):
+            raise TypeError(f"dp: expected DPNoise, "
+                            f"got {type(self.dp).__name__}")
+        if self.watermark is not None \
+                and not isinstance(self.watermark, HeadWatermark):
+            raise TypeError(f"watermark: expected HeadWatermark, "
+                            f"got {type(self.watermark).__name__}")
+        if self.secure_agg is not None and self.watermark is not None:
+            raise ValueError(
+                "secure_agg and watermark cannot be combined: masked "
+                "payloads destroy signature projections by construction "
+                "(that is what masking is FOR) — run them in separate "
+                "federations or drop one")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.secure_agg is not None or self.dp is not None
+                or self.watermark is not None)
+
+    def spec(self) -> dict:
+        """Nested spec: each sub-policy serializes through its own
+        ``spec()`` (``policy_from_spec`` recurses on dicts carrying a
+        ``kind``), None stays None."""
+        return {"kind": type(self).__name__,
+                "secure_agg": (self.secure_agg.spec()
+                               if self.secure_agg else None),
+                "dp": self.dp.spec() if self.dp else None,
+                "watermark": (self.watermark.spec()
+                              if self.watermark else None)}
+
+
+# ---------------------------------------------------------------------------
+# Tree helpers
+# ---------------------------------------------------------------------------
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def tree_dot(a, b):
+    """float32 inner product of two same-structure trees (the admission
+    guard's reduction style — float32 accumulate regardless of leaf
+    dtype)."""
+    return sum(jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+               for x, y in zip(_leaves(a), _leaves(b)))
+
+
+def _tree_sq_norm(tree):
+    return sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+               for leaf in _leaves(tree))
+
+
+def _rng_tree(ss: np.random.SeedSequence, template, scale: float = 1.0):
+    """A tree of float32 normal draws shaped like ``template``, one child
+    SeedSequence per leaf in canonical tree order (dict leaves flatten in
+    sorted-key order — deterministic everywhere)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    children = ss.spawn(len(leaves))
+    out = [np.random.default_rng(c).standard_normal(
+        np.shape(leaf), dtype=np.float32) * np.float32(scale)
+        for c, leaf in zip(children, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def pad_rows(tree, max_nf: int):
+    """Zero-pad every leaf's leading (feature) axis to ``max_nf`` — aligns
+    a true-nf signature/head tree with the cohort engine's padded
+    geometry."""
+    def pad(leaf):
+        leaf = np.asarray(leaf)
+        if leaf.shape[0] == max_nf:
+            return leaf
+        width = [(0, max_nf - leaf.shape[0])] + [(0, 0)] * (leaf.ndim - 1)
+        return np.pad(leaf, width)
+    return jax.tree_util.tree_map(pad, tree)
+
+
+def stack_trees_np(trees):
+    """np.stack a list of same-structure trees on a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Watermark: signatures, embedding, verification
+# ---------------------------------------------------------------------------
+
+def signature(wm: HeadWatermark, name: str, heads):
+    """The client's deterministic unit-L2 signature tree, shaped like its
+    (nf, ...) head tree — a pure function of ``(wm.seed, crc32(name))``,
+    so it is identical across engines, waves and restores."""
+    ss = np.random.SeedSequence(
+        [wm.seed & 0xFFFFFFFF, _SIG_STREAM, zlib.crc32(name.encode())])
+    raw = _rng_tree(ss, heads)
+    nrm = math.sqrt(sum(float(np.sum(np.square(leaf), dtype=np.float64))
+                        for leaf in _leaves(raw)))
+    return jax.tree_util.tree_map(
+        lambda leaf: (leaf / np.float32(nrm)).astype(np.float32), raw)
+
+
+def wm_apply(heads, sig, *, strength: float, threshold: float):
+    """Verify-and-maintain at a publication opportunity (pure jnp; traced
+    by the fused engines, jit-called per client by the sequential oracle —
+    the single definition keeps them bit-identical).
+
+    Returns ``(new_heads, ok, proj)``: ``ok`` is the verification verdict
+    (projection onto the signature >= threshold * strength); when it
+    passes, the signature component is topped back up to exactly
+    ``strength`` (Eq.-8 blending attenuates it by (1 - alpha) per
+    exchange, so without maintenance an honest client would eventually
+    fail its own watermark); when it fails the heads are returned
+    untouched — a tampered head is evidence, never healed."""
+    proj = tree_dot(heads, sig)
+    ok = proj >= jnp.float32(threshold * strength)
+    t = jnp.float32(strength) - proj
+    new = jax.tree_util.tree_map(
+        lambda h, s: jnp.where(ok, h + t * s.astype(h.dtype), h), heads, sig)
+    return new, ok, proj
+
+
+@jax.jit
+def _wm_embed_jit(heads, sig, strength, threshold):
+    proj = tree_dot(heads, sig)
+    # no-heal rule: a strongly NEGATIVE projection is a tamper signature
+    # (sign-flip of a marked head) — embedding must not launder it back
+    # above the verification threshold
+    heal = proj > -jnp.float32(1.0) * threshold * strength
+    t = jnp.where(heal, strength - proj, 0.0)
+    return jax.tree_util.tree_map(
+        lambda h, s: h + t * s.astype(h.dtype), heads, sig), heal
+
+
+def wm_embed(heads, sig, wm: HeadWatermark):
+    """Host-side embedding/top-up of a client's OWN persisted heads (run
+    before any fault corruption can touch them): sets the signature
+    projection to exactly ``strength`` — unless the head already carries a
+    strongly negative projection, the sign-flip fingerprint, which is left
+    as evidence for verification to catch.  Returns (new_heads,
+    healed: bool)."""
+    sig = jax.tree_util.tree_map(jnp.asarray, sig)
+    new, heal = _wm_embed_jit(heads, sig, jnp.float32(wm.strength),
+                              jnp.float32(wm.threshold))
+    return new, bool(heal)
+
+
+def wm_verify_host(heads, sig, wm: HeadWatermark) -> bool:
+    """Host twin of the in-graph verification verdict (same float32
+    reduction; used at pool seeding, which runs once on the host for both
+    engines)."""
+    proj = float(tree_dot(jax.tree_util.tree_map(jnp.asarray, heads),
+                          jax.tree_util.tree_map(jnp.asarray, sig)))
+    return proj >= wm.threshold * wm.strength
+
+
+# ---------------------------------------------------------------------------
+# Differential privacy: clipped-noise release + accountant
+# ---------------------------------------------------------------------------
+
+def dp_privatize(heads, key, *, clip: float, sigma: float):
+    """One Gaussian-mechanism release of a head tree: scale to L2 norm <=
+    ``clip``, add N(0, (sigma*clip)^2) per coordinate.  Pure jnp.  Returns
+    ``(noisy_heads, clipped)`` where ``clipped`` flags a norm actually
+    exceeding the bound (the ``clip_events`` counter)."""
+    leaves, treedef = jax.tree_util.tree_flatten(heads)
+    nrm = jnp.sqrt(_tree_sq_norm(heads))
+    scale = jnp.minimum(jnp.float32(1.0),
+                        jnp.float32(clip) / jnp.maximum(nrm, 1e-12))
+    std = jnp.float32(sigma * clip)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [leaf * scale.astype(leaf.dtype)
+             + std.astype(leaf.dtype)
+             * jax.random.normal(k, leaf.shape, leaf.dtype)
+             for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noisy), nrm > clip
+
+
+def dp_privatize_host(heads, dp: DPNoise, wave: int, rnd: int, cid: int):
+    """The sequential oracle's release: same clip, host numpy noise from
+    ``SeedSequence([dp.seed, 0x7D, wave, round, client id])`` — replays
+    bit-identically across oracle runs/restores; it is NOT the fused
+    engines' noise stream (noise is engine-specific, like stochastic
+    selection)."""
+    nrm = math.sqrt(max(float(_tree_sq_norm(
+        jax.tree_util.tree_map(jnp.asarray, heads))), 0.0))
+    scale = min(1.0, dp.clip / max(nrm, 1e-12))
+    ss = np.random.SeedSequence([dp.seed & 0xFFFFFFFF, _DP_STREAM,
+                                 wave, rnd, cid])
+    noise = _rng_tree(ss, heads, scale=dp.sigma * dp.clip)
+    noisy = jax.tree_util.tree_map(
+        lambda h, z: (jnp.asarray(h) * np.float32(scale)
+                      + jnp.asarray(z)), heads, noise)
+    return noisy, nrm > dp.clip
+
+
+class DPAccountant:
+    """Per-client zCDP composition over Gaussian releases.  State is a dict
+    of integer release counts — trivially bit-identical through JSON
+    save/restore; epsilons are recomputed analytically on demand."""
+
+    def __init__(self, dp: DPNoise, counts: Optional[Dict[str, int]] = None):
+        self.dp = dp
+        self.counts: Dict[str, int] = {k: int(v)
+                                       for k, v in (counts or {}).items()}
+
+    def record(self, name: str, releases: int = 1) -> None:
+        if releases:
+            self.counts[name] = self.counts.get(name, 0) + int(releases)
+
+    def epsilon(self, name: str) -> float:
+        return self.dp.epsilon(self.counts.get(name, 0))
+
+    @property
+    def max_epsilon(self) -> float:
+        """The headline ``dispatch_stats["epsilon_spent"]`` figure: the
+        worst per-client epsilon (DP guarantees are per-client)."""
+        return max((self.dp.epsilon(k) for k in self.counts.values()),
+                   default=0.0)
+
+    def to_json(self) -> Dict[str, int]:
+        return dict(self.counts)
+
+    @classmethod
+    def from_json(cls, dp: DPNoise, obj) -> "DPAccountant":
+        return cls(dp, dict(obj or {}))
+
+
+# ---------------------------------------------------------------------------
+# Reputation
+# ---------------------------------------------------------------------------
+
+class ReputationBook:
+    """Watermark-failure reputation: one strike per wave in which a client
+    failed >= 1 signature verification; ``wm.tolerance`` strikes
+    quarantines it (the participation layer then drops it from sampling
+    and pins its resident pool rows at ``faults.QUARANTINE_AGE``).  JSON
+    state round-trips bit-identically."""
+
+    def __init__(self, wm: HeadWatermark,
+                 strikes: Optional[Dict[str, int]] = None,
+                 quarantined: Sequence[str] = ()):
+        self.wm = wm
+        self.strikes: Dict[str, int] = {k: int(v)
+                                        for k, v in (strikes or {}).items()}
+        self.quarantined = set(quarantined)
+
+    def strike(self, name: str) -> bool:
+        """Record one failed wave; returns True when this strike NEWLY
+        quarantines the client."""
+        self.strikes[name] = self.strikes.get(name, 0) + 1
+        if name not in self.quarantined \
+                and self.strikes[name] >= self.wm.tolerance:
+            self.quarantined.add(name)
+            return True
+        return False
+
+    def is_quarantined(self, name: str) -> bool:
+        return name in self.quarantined
+
+    def to_json(self) -> dict:
+        return {"strikes": dict(self.strikes),
+                "quarantined": sorted(self.quarantined)}
+
+    @classmethod
+    def from_json(cls, wm: HeadWatermark, obj) -> "ReputationBook":
+        obj = obj or {}
+        return cls(wm, obj.get("strikes"), obj.get("quarantined", ()))
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation: pairwise masks, reconstruction, the mean round
+# ---------------------------------------------------------------------------
+
+def pair_mask(sa: MaskedSecureAggregation, wave: int, rnd: int,
+              i: int, j: int, template):
+    """The pairwise mask between GLOBAL client ids i < j for one exchange
+    round — a pure function of ``(seed, wave, round, i, j)``, so any party
+    (or the server, for dropout recovery) can re-derive it."""
+    if not i < j:
+        raise ValueError(f"pair_mask wants i < j, got ({i}, {j})")
+    ss = np.random.SeedSequence([sa.seed & 0xFFFFFFFF, _MASK_STREAM,
+                                 wave, rnd, i, j])
+    return _rng_tree(ss, template, scale=sa.mask_scale)
+
+
+def net_masks(sa: MaskedSecureAggregation, wave: int, n_rounds: int,
+              ids: Sequence[int], template, round_offset: int = 0):
+    """Per-round net masks for the wave's client set: a tree of
+    ``(n_rounds, C, ...)`` float32 arrays where row c is client ``ids[c]``'s
+    net mask ``sum_{j>i} m_ij - sum_{j<i} m_ji`` — the rows of every round
+    sum to EXACTLY zero over the client axis (pairwise cancellation), which
+    is the whole secure-aggregation invariant.  O(C^2) host work; the
+    position order follows ``ids``, the mask derivation their global
+    values.  ``round_offset`` shifts the within-wave round key (the
+    sequential oracle derives one round at a time)."""
+    C = len(ids)
+    zero = jax.tree_util.tree_map(
+        lambda leaf: np.zeros((n_rounds, C) + np.shape(leaf), np.float32),
+        template)
+    if sa.mask_scale == 0:
+        return zero
+    for r in range(n_rounds):
+        for a in range(C):
+            for b in range(a + 1, C):
+                i, j = ids[a], ids[b]
+                lo, hi = (a, b) if i < j else (b, a)
+                m = pair_mask(sa, wave, round_offset + r,
+                              min(i, j), max(i, j), template)
+                jax.tree_util.tree_map(
+                    lambda z, ml: (z[r, lo].__iadd__(ml),
+                                   z[r, hi].__isub__(ml)), zero, m)
+    return zero
+
+
+def mask_correction(masks, active):
+    """Dropout recovery: the sum of the net masks of clients that were in
+    the wave's mask derivation but did NOT publish (removed after the RNG
+    fold-in — stragglers, switch-inactive).  Adding this to the masked sum
+    of the survivors cancels every mask exactly.  ``masks``:
+    ``(n_rounds, C, ...)`` tree; ``active``: (C,) bool; returns an
+    ``(n_rounds, ...)`` tree."""
+    gone = ~np.asarray(active, bool)
+    return jax.tree_util.tree_map(
+        lambda m: np.ascontiguousarray(m[:, gone].sum(axis=1)
+                                       if gone.any()
+                                       else np.zeros(
+                                           (m.shape[0],) + m.shape[2:],
+                                           m.dtype)), masks)
+
+
+def secure_round(heads, pool_heads, pool_age, active, net_mask, correction,
+                 noise_key, priv=None, feat_valid=None, *,
+                 sa: MaskedSecureAggregation, dp: Optional[DPNoise],
+                 nf: int, admission=None):
+    """One masked mean-transfer exchange for ALL C clients (pure jnp; the
+    fused engines trace it in place of the per-client selection scan, the
+    sequential oracle jit-calls it on stacked host trees — one definition,
+    no drift).
+
+    Client-side: each active client releases ``y_i = priv(h_i) + m_i``
+    (``priv`` is the optional DP clip+noise; ``m_i`` its net pairwise
+    mask).  Pool-side: the masked sum over surviving publishers plus the
+    host-reconstructed ``correction`` equals the plain sum of the
+    privatized heads to float tolerance — no raw head was ever visible.
+    Each active client then blends toward its foreign mean
+    ``(S - h'_i) / (publishers - 1)`` with ``sa.alpha`` (per feature row
+    under a padded ``feat_valid`` geometry), and the POOL stores the
+    masked payload ``y_i``, so even at rest the pool never holds a raw
+    head.  ``chosen`` is all -1 (there is no per-head selection to log).
+
+    ``priv`` overrides the in-graph privatization with caller-supplied
+    releases (the sequential oracle's host-noise path; clip events are
+    then the caller's to count).  Returns ``(heads, pool, age, chosen,
+    rejected_or_None, clip_events)``; ``rejected`` (admission guard,
+    checked on the pre-mask release) is None when ``admission`` is."""
+    C = active.shape[0]
+    f32 = jnp.float32
+    fv = (jnp.ones((C, nf), bool) if feat_valid is None
+          else jnp.asarray(feat_valid))
+    fvf = fv.astype(f32)
+    actf = active.astype(f32)
+
+    def rows(mask, leaf):
+        """(C,)- or (C, nf)-shaped mask broadcast to a (C, nf, ...) leaf."""
+        extra = leaf.ndim - mask.ndim
+        return mask.reshape(mask.shape + (1,) * extra)
+
+    if priv is not None:
+        clip_ev = jnp.zeros((C,), bool)
+        if feat_valid is not None:   # host noise on padded rows: silence it
+            priv = jax.tree_util.tree_map(
+                lambda p: jnp.where(rows(fv, p), p, 0), priv)
+    elif dp is not None:
+        keys = jax.random.split(noise_key, C)
+        priv, clipped = jax.vmap(
+            lambda h, k: dp_privatize(h, k, clip=dp.clip, sigma=dp.sigma)
+        )(heads, keys)
+        # padded rows must stay silent: noise on a row the client does not
+        # own would pollute that row's pool-side sum
+        priv = jax.tree_util.tree_map(
+            lambda p: jnp.where(rows(fv, p), p, 0), priv)
+        clip_ev = active & clipped
+    else:
+        priv, clip_ev = heads, jnp.zeros((C,), bool)
+
+    y = jax.tree_util.tree_map(lambda p, m: p + m.astype(p.dtype),
+                               priv, net_mask)
+    # the pool-side aggregate: masked survivors + reconstructed masks of
+    # the removed; equals sum_i active_i * priv_i up to float error
+    S = jax.tree_util.tree_map(
+        lambda yl, cl: jnp.sum(jnp.where(rows(active, yl), yl, 0), axis=0)
+        + cl.astype(yl.dtype), y, correction)
+    pubf = jnp.sum(actf[:, None] * fvf, axis=0)             # (nf,)
+    cnt = pubf[None, :] - actf[:, None] * fvf               # (C, nf) foreign
+    denom = jnp.maximum(cnt, 1.0)
+    foreign = jax.tree_util.tree_map(
+        lambda Sl, pl: (Sl[None] - rows(actf[:, None] * fvf, pl) * pl)
+        / rows(denom, pl).astype(pl.dtype), S, priv)
+    a = f32(sa.alpha)
+    use = active[:, None] & fv & (cnt > 0)                  # (C, nf)
+    new_heads = jax.tree_util.tree_map(
+        lambda h, fr: jnp.where(rows(use, h),
+                                (1 - a).astype(h.dtype) * h
+                                + a.astype(h.dtype) * fr, h),
+        heads, foreign)
+    pub = active
+    rejected = None
+    if admission is not None:
+        # the guard bounds the true release (pre-mask): the mask is
+        # server-cancelled bookkeeping, not payload magnitude
+        sq = sum(jnp.sum(jnp.square(leaf.astype(f32)),
+                         axis=tuple(range(1, leaf.ndim)))
+                 for leaf in _leaves(priv))
+        ok = jnp.isfinite(sq) & (sq <= f32(admission) ** 2)
+        rejected = pub & ~ok
+        pub = pub & ok
+    pool = jax.tree_util.tree_map(
+        lambda pl, yl: jnp.where(rows(pub, yl), yl, pl), pool_heads, y)
+    age = jnp.where(pub, 0, pool_age)
+    chosen = jnp.full((C, nf), -1, jnp.int32)
+    return new_heads, pool, age, chosen, rejected, clip_ev
+
+
+# the sequential oracle's entry point: the SAME function the fused engines
+# trace, jitted once over stacked host trees (policies are hashable
+# statics), so oracle and engine cannot drift
+secure_round_jit = jax.jit(
+    secure_round, static_argnames=("sa", "dp", "nf", "admission"))

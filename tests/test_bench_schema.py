@@ -1,8 +1,9 @@
-"""Schema pin for BENCH_fl_scale.json: ``fl_scale_bench.validate_payload``
-must accept a well-formed payload — including the exchange-cadence and
-comms-accounting fields — and reject each malformed mutation with a
-pointed error.  Tier-1, so the schema cannot drift silently; CI
-additionally smoke-runs the real bench through the same validator."""
+"""Schema pins for the bench artifacts: ``fl_scale_bench.validate_payload``
+(BENCH_fl_scale.json) and ``privacy_bench.validate_payload``
+(BENCH_privacy.json) must accept a well-formed payload and reject each
+malformed mutation with a pointed error.  Tier-1, so the schemas cannot
+drift silently; CI additionally smoke-runs the real benches through the
+same validators."""
 import copy
 import json
 import sys
@@ -14,6 +15,7 @@ ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "benchmarks"))
 
 from fl_scale_bench import validate_payload  # noqa: E402
+from privacy_bench import validate_payload as validate_privacy  # noqa: E402
 
 
 def _payload():
@@ -199,3 +201,145 @@ def test_rejects_malformed_profile():
     del p["profiles"]["8"]["phase_split"]["policy"]
     with pytest.raises(ValueError, match="policy"):
         validate_payload(p)
+
+
+@pytest.mark.parametrize("tag", (
+    "sequential", "batched", "batched+mesh", "participating+uniform",
+    "participating+weighted", "participating+stratified",
+    "participating+fault0.2", "participating+fault0",
+))
+def test_accepts_known_engine_tags(tag):
+    p = _payload()
+    p["results"][1]["engine"] = tag
+    validate_payload(p)
+
+
+@pytest.mark.parametrize("tag", (
+    "batchd",                       # typo'd engine
+    "mesh",                         # not a row tag
+    "batched+mesh+extra",
+    "participating",                # policy suffix missing
+    "participating+fancy",          # unknown policy
+    "participating+fault",          # rate missing
+    "participating+faultx",         # non-numeric rate
+    "participating+fault1.5",       # rate out of [0, 1]
+    "",
+))
+def test_rejects_unknown_engine_tags(tag):
+    """An unknown engine row tag is a schema violation: downstream
+    dashboards key on the closed tag set, so a drifting label must fail
+    validation instead of silently forking the series."""
+    p = _payload()
+    p["results"][1]["engine"] = tag
+    with pytest.raises(ValueError, match="engine"):
+        validate_payload(p)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_privacy.json (benchmarks/privacy_bench.py)
+# ---------------------------------------------------------------------------
+
+def _privacy_payload():
+    """A minimal well-formed payload (the shape privacy_bench writes)."""
+    off = {"dp": False, "sigma": 0.0, "clip": None, "epsilon": 0.0,
+           "releases": 0, "clip_events": 0, "attack_auc": 0.73,
+           "mean_val": 0.99}
+    on = {"dp": True, "sigma": 1.0, "clip": 5.0, "epsilon": 50.3,
+          "releases": 160, "clip_events": 160, "attack_auc": 0.51,
+          "mean_val": 0.99}
+    return {
+        "benchmark": "privacy",
+        "unix_time": 1700000000,
+        "backend": "cpu",
+        "device_count": 1,
+        "platform": "linux",
+        "config": {"clients": 4, "epochs": 40, "R": 8, "nf": 3,
+                   "n_train": 8, "n_eval": 40, "seed": 0, "lr": 0.05,
+                   "engine": "batched", "clip": 5.0, "delta": 1e-5,
+                   "sigmas": [0.3, 1.0, 2.0]},
+        "results": [off, on],
+    }
+
+
+def test_privacy_accepts_well_formed_payload():
+    validate_privacy(_privacy_payload())
+
+
+def test_privacy_round_trips_through_json():
+    validate_privacy(json.loads(json.dumps(_privacy_payload())))
+
+
+@pytest.mark.parametrize("key", ("dp", "sigma", "clip", "epsilon",
+                                 "releases", "clip_events", "attack_auc",
+                                 "mean_val"))
+def test_privacy_rejects_row_with_missing_key(key):
+    p = _privacy_payload()
+    del p["results"][1][key]
+    with pytest.raises(ValueError, match=key):
+        validate_privacy(p)
+
+
+@pytest.mark.parametrize("key", ("clients", "epochs", "lr", "clip",
+                                 "delta", "engine", "sigmas"))
+def test_privacy_rejects_config_with_missing_key(key):
+    p = _privacy_payload()
+    del p["config"][key]
+    with pytest.raises(ValueError, match=key):
+        validate_privacy(p)
+
+
+def test_privacy_rejects_bad_rows():
+    p = _privacy_payload()
+    p["results"][1]["attack_auc"] = 1.2       # AUC outside [0, 1]
+    with pytest.raises(ValueError, match="attack_auc"):
+        validate_privacy(p)
+    p = _privacy_payload()
+    p["results"][1]["releases"] = 160.5       # non-int counter
+    with pytest.raises(ValueError, match="releases"):
+        validate_privacy(p)
+    p = _privacy_payload()
+    p["results"][1]["epsilon"] = 0.0          # DP-on must spend epsilon
+    with pytest.raises(ValueError, match="epsilon"):
+        validate_privacy(p)
+    p = _privacy_payload()
+    p["results"][0]["epsilon"] = 1.0          # DP-off must NOT
+    with pytest.raises(ValueError, match="epsilon"):
+        validate_privacy(p)
+    p = _privacy_payload()
+    p["results"][1]["clip"] = None            # DP-on needs a clip bound
+    with pytest.raises(ValueError, match="sigma/clip"):
+        validate_privacy(p)
+    p = _privacy_payload()
+    p["config"]["sigmas"] = [1.0, -0.5]
+    with pytest.raises(ValueError, match="sigmas"):
+        validate_privacy(p)
+
+
+def test_privacy_rejects_empty_results_and_wrong_benchmark():
+    p = _privacy_payload()
+    p["results"] = []
+    with pytest.raises(ValueError, match="empty"):
+        validate_privacy(p)
+    p = _privacy_payload()
+    p["benchmark"] = "fl_scale"
+    with pytest.raises(ValueError, match="benchmark"):
+        validate_privacy(p)
+
+
+def test_current_privacy_bench_file_validates_if_present():
+    """The committed BENCH_privacy.json must always satisfy the schema —
+    and actually show the headline curve: the no-DP attack lands
+    meaningfully above chance, every DP-on row collapses toward 0.5."""
+    path = ROOT / "BENCH_privacy.json"
+    if not path.exists():
+        pytest.skip("no committed bench file")
+    payload = json.loads(path.read_text())
+    validate_privacy(payload)
+    rows = payload["results"]
+    assert any(not r["dp"] for r in rows) and any(r["dp"] for r in rows)
+    for r in rows:
+        if not r["dp"]:
+            assert r["attack_auc"] >= 0.6
+        else:
+            assert abs(r["attack_auc"] - 0.5) <= 0.15
+            assert r["epsilon"] > 0

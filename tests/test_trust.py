@@ -1,0 +1,637 @@
+"""Red-team battery for the trust layer (core/trust.py).
+
+Pins the three trust plugins the way tests/test_faults.py pins the fault
+subsystem: the admission guard's blind spot (a sign-flipped head is finite
+and norm-preserving, so it PASSES admission), the watermark/reputation
+layer that catches it anyway, the DP accountant's analytic epsilon, and
+the secure-aggregation masking invariants — each on the sequential oracle,
+the fused batched engine, the mixed-nf cohort path, and (subprocess) a
+forced 4-virtual-device mesh.  ``trust=None`` and a disabled ``TrustPlan``
+must stay engine-local bit-identical to the pre-trust graph.
+
+The hypothesis property tests are gated on the library being installed
+(the CI container does not ship it); a seeded sweep covers the same
+masking invariants unconditionally.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults as FT
+from repro.core import trust as TR
+from repro.core.experiment import tensor_population
+from repro.core.federation import Federation
+from repro.core.hfl import HFLConfig
+from repro.core.participation import (ParticipatingFederation,
+                                      UniformParticipation)
+from repro.core.policies import policy_from_spec
+
+ROOT = Path(__file__).resolve().parent.parent
+
+try:                                    # satellite: property tests are
+    import hypothesis                   # gated — the container may not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _cfg(**kw):
+    kw.setdefault("epochs", 3)
+    kw.setdefault("R", 10)
+    kw.setdefault("mode", "always")     # guarantee exchange rounds happen
+    kw.setdefault("seed", 0)
+    return HFLConfig(**kw)
+
+
+def _clients(cfg, n=4, nf=(3,), seed=0):
+    return tensor_population(n, cfg, seed=seed, nf_choices=nf,
+                             n_train=20, n_eval=10).build(range(n))
+
+
+def _fit(trust, engine, nf=(3,), cfg=None):
+    cfg = cfg or _cfg()
+    fed = Federation(_clients(cfg, 4, nf), cfg, engine=engine, trust=trust)
+    return fed, fed.fit()
+
+
+def _hist_identical(h1, h2):
+    return all(h1[n]["val"] == h2[n]["val"]
+               and h1[n]["selections"] == h2[n]["selections"] for n in h1)
+
+
+def _vals(h):
+    return np.array([h[n]["val"] for n in sorted(h)])
+
+
+# ---------------------------------------------------------------------------
+# Plan validation + spec round-trips
+# ---------------------------------------------------------------------------
+
+def test_plan_rejects_secure_agg_plus_watermark():
+    with pytest.raises(ValueError, match="cannot be combined"):
+        TR.TrustPlan(secure_agg=TR.MaskedSecureAggregation(),
+                     watermark=TR.HeadWatermark())
+
+
+def test_plan_rejects_wrong_slot_types():
+    with pytest.raises(TypeError, match="secure_agg"):
+        TR.TrustPlan(secure_agg=TR.DPNoise())
+    with pytest.raises(TypeError, match="dp"):
+        TR.TrustPlan(dp=TR.HeadWatermark())
+    with pytest.raises(TypeError, match="watermark"):
+        TR.TrustPlan(watermark=TR.MaskedSecureAggregation())
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: TR.DPNoise(clip=0.0),
+    lambda: TR.DPNoise(sigma=0.0),
+    lambda: TR.DPNoise(delta=1.0),
+    lambda: TR.MaskedSecureAggregation(alpha=0.0),
+    lambda: TR.MaskedSecureAggregation(alpha=1.5),
+    lambda: TR.MaskedSecureAggregation(mask_scale=-1.0),
+])
+def test_plugin_field_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+def test_plan_enabled_property():
+    assert not TR.TrustPlan().enabled
+    assert TR.TrustPlan(dp=TR.DPNoise()).enabled
+    assert TR.TrustPlan(watermark=TR.HeadWatermark()).enabled
+    assert TR.TrustPlan(secure_agg=TR.MaskedSecureAggregation()).enabled
+
+
+@pytest.mark.parametrize("plan", [
+    TR.TrustPlan(),
+    TR.TrustPlan(watermark=TR.HeadWatermark(strength=0.4, tolerance=3)),
+    TR.TrustPlan(dp=TR.DPNoise(clip=2.0, sigma=1.5, delta=1e-6, seed=9)),
+    TR.TrustPlan(secure_agg=TR.MaskedSecureAggregation(alpha=0.3, seed=4),
+                 dp=TR.DPNoise()),
+    TR.TrustPlan(dp=TR.DPNoise(),
+                 watermark=TR.HeadWatermark(threshold=0.25)),
+])
+def test_spec_round_trip_through_json(plan):
+    wire = json.loads(json.dumps(plan.spec()))
+    assert policy_from_spec(wire) == plan
+
+
+def test_federation_rejects_non_plan():
+    cfg = _cfg()
+    with pytest.raises(TypeError, match="TrustPlan"):
+        Federation(_clients(cfg), cfg, trust=TR.DPNoise())
+
+
+# ---------------------------------------------------------------------------
+# The admission guard's blind spot: sign-flip passes, watermark catches it
+# ---------------------------------------------------------------------------
+
+def test_signflip_passes_admission_guard():
+    """The red-team premise: a sign-flipped head tree is finite and has
+    EXACTLY the norm of the honest head, so the fault layer's admission
+    guard (tests/test_faults.py's norm/finiteness gate) admits it.  Only
+    the watermark can tell — a flipped head projects at -strength onto
+    the owner's signature direction."""
+    cfg = _cfg()
+    cl = _clients(cfg, 1)[0]
+    heads = jax.tree_util.tree_map(np.asarray, cl.params["heads"])
+    inj = FT.FaultInjector(FT.FaultPlan(byzantine=1.0,
+                                        corruption="signflip", seed=0))
+    flipped = inj.corrupt_heads(heads, wave=0, index=0)
+    bound = FT.FaultPlan().norm_bound
+    assert FT.heads_admissible(heads, bound)
+    assert FT.heads_admissible(flipped, bound)          # the blind spot
+    nan = FT.FaultInjector(FT.FaultPlan(byzantine=1.0, corruption="nan",
+                                        seed=0)).corrupt_heads(heads, 0, 0)
+    assert not FT.heads_admissible(nan, bound)          # what it DOES catch
+
+    wm = TR.HeadWatermark()
+    sig = TR.signature(wm, cl.name, heads)
+    marked, healed = TR.wm_embed(jax.tree_util.tree_map(jnp.asarray,
+                                                        heads), sig, wm)
+    assert healed and TR.wm_verify_host(marked, sig, wm)
+    re_flipped = jax.tree_util.tree_map(lambda x: -np.asarray(x), marked)
+    assert not TR.wm_verify_host(re_flipped, sig, wm)   # watermark catches
+    _, ok2, proj2 = TR.wm_apply(
+        jax.tree_util.tree_map(jnp.asarray, re_flipped), sig,
+        strength=wm.strength, threshold=wm.threshold)
+    assert not bool(np.any(ok2))
+    np.testing.assert_allclose(np.asarray(proj2), -wm.strength, atol=1e-4)
+
+
+def test_signature_is_unit_norm_and_deterministic():
+    cfg = _cfg()
+    cl = _clients(cfg, 1)[0]
+    wm = TR.HeadWatermark(seed=5)
+    s1 = TR.signature(wm, cl.name, cl.params["heads"])
+    s2 = TR.signature(wm, cl.name, cl.params["heads"])
+    sq = sum(float(np.sum(np.square(l)))
+             for l in jax.tree_util.tree_leaves(s1))
+    assert abs(sq - 1.0) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_array_equal(a, b)
+    s3 = TR.signature(wm, "someone-else", cl.params["heads"])
+    dot = sum(float(np.sum(np.asarray(a) * np.asarray(b)))
+              for a, b in zip(jax.tree_util.tree_leaves(s1),
+                              jax.tree_util.tree_leaves(s3)))
+    assert abs(dot) < 0.5               # distinct clients, distinct axes
+
+
+def test_pad_rows_preserves_unit_norm():
+    cfg = _cfg()
+    cl = _clients(cfg, 1, nf=(2,))[0]
+    wm = TR.HeadWatermark()
+    sig = TR.signature(wm, cl.name, cl.params["heads"])
+    padded = TR.pad_rows(sig, 4)
+    for leaf in jax.tree_util.tree_leaves(padded):
+        assert leaf.shape[0] == 4
+    sq = sum(float(np.sum(np.square(l)))
+             for l in jax.tree_util.tree_leaves(padded))
+    assert abs(sq - 1.0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# trust=None / disabled plan: byte-identical pre-trust graph (engine-local)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_disabled_plan_bit_identical_to_none(engine):
+    _, h0 = _fit(None, engine)
+    _, h1 = _fit(TR.TrustPlan(), engine)
+    assert _hist_identical(h0, h1)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_disabled_plan_bit_identical_on_cohorts(engine):
+    """Mixed-nf population: the batched engine routes through the cohort
+    subsystem; the disabled plan must not perturb its padded graph."""
+    _, h0 = _fit(None, engine, nf=(2, 3))
+    _, h1 = _fit(TR.TrustPlan(), engine, nf=(2, 3))
+    assert _hist_identical(h0, h1)
+
+
+# ---------------------------------------------------------------------------
+# Watermark: engine parity + honest clients stay clean
+# ---------------------------------------------------------------------------
+
+def test_watermark_engine_parity():
+    """The oracle and the fused engine must agree on the auditable state:
+    per-client failure counters are EXACT; vals agree to float tolerance
+    (watermark arithmetic joins the fused graph and re-associates)."""
+    wm = TR.TrustPlan(watermark=TR.HeadWatermark())
+    fs, hs = _fit(wm, "sequential")
+    fb, hb = _fit(wm, "batched")
+    assert fs._wm_failures == fb._wm_failures
+    np.testing.assert_allclose(_vals(hs), _vals(hb), rtol=0, atol=1e-4)
+
+
+def test_watermark_engine_parity_on_cohorts():
+    wm = TR.TrustPlan(watermark=TR.HeadWatermark())
+    fs, hs = _fit(wm, "sequential", nf=(2, 3))
+    fb, hb = _fit(wm, "batched", nf=(2, 3))
+    assert fs._wm_failures == fb._wm_failures
+    np.testing.assert_allclose(_vals(hs), _vals(hb), rtol=0, atol=1e-4)
+
+
+def test_honest_clients_never_fail_at_default_strength():
+    """The default strength is calibrated so training drift between
+    publications never eats the verification budget — an honest federation
+    must report zero watermark failures (false quarantines are the one
+    thing the reputation layer cannot be allowed to do)."""
+    fed, _ = _fit(TR.TrustPlan(watermark=TR.HeadWatermark()), "batched")
+    assert fed.dispatch_stats["watermark_failures"] == 0
+
+
+# ---------------------------------------------------------------------------
+# DP: analytic accountant + engine-exact release counters
+# ---------------------------------------------------------------------------
+
+def test_epsilon_matches_analytic_bound():
+    dp = TR.DPNoise(clip=1.0, sigma=0.7, delta=1e-5)
+    rho1 = 1.0 / (2.0 * 0.7 ** 2)
+    for k in (1, 5, 40):
+        expect = k * rho1 + 2.0 * math.sqrt(k * rho1 * math.log(1e5))
+        assert dp.epsilon(k) == pytest.approx(expect, rel=1e-12)
+    assert dp.epsilon(0) == 0.0
+    assert dp.epsilon(10) > dp.epsilon(5) > dp.epsilon(1)
+    quieter = TR.DPNoise(clip=1.0, sigma=2.0, delta=1e-5)
+    assert quieter.epsilon(5) < dp.epsilon(5)
+
+
+def test_accountant_round_trip_and_max_epsilon():
+    dp = TR.DPNoise(sigma=0.9)
+    acct = TR.DPAccountant(dp)
+    acct.record("a", 3)
+    acct.record("b", 1)
+    acct.record("a")
+    assert acct.counts == {"a": 4, "b": 1}
+    assert acct.epsilon("a") == dp.epsilon(4)
+    assert acct.max_epsilon == dp.epsilon(4)
+    back = TR.DPAccountant.from_json(dp, json.loads(json.dumps(
+        acct.to_json())))
+    assert back.counts == acct.counts
+    assert back.max_epsilon == acct.max_epsilon
+
+
+def test_dp_counters_exact_across_engines():
+    """Noise streams are engine-specific by design (like stochastic
+    selection policies), but the ACCOUNTING must be engine-exact: same
+    per-client release counts, same epsilon, same clip events."""
+    dp = TR.TrustPlan(dp=TR.DPNoise(clip=10.0, sigma=0.8))
+    fs, _ = _fit(dp, "sequential")
+    fb, _ = _fit(dp, "batched")
+    assert fs._dp_counts == fb._dp_counts
+    assert sum(fs._dp_counts.values()) > 0
+    assert fs.dispatch_stats["epsilon_spent"] == \
+        fb.dispatch_stats["epsilon_spent"] > 0
+    assert fs.dispatch_stats["clip_events"] == \
+        fb.dispatch_stats["clip_events"]
+    # dispatch_stats epsilon IS the analytic per-client worst case
+    worst = max(fs._dp_counts.values())
+    assert fs.dispatch_stats["epsilon_spent"] == \
+        pytest.approx(dp.dp.epsilon(worst))
+
+
+def test_clip_events_fire_only_under_tight_clip():
+    """Gaussian-mechanism noise scales with the clip bound, so the loose
+    arm must also shrink sigma — else its own noise re-inflates later
+    releases past any bound."""
+    tight, _ = _fit(TR.TrustPlan(dp=TR.DPNoise(clip=0.1, sigma=0.5)),
+                    "batched")
+    loose, _ = _fit(TR.TrustPlan(dp=TR.DPNoise(clip=1e6, sigma=1e-6)),
+                    "batched")
+    assert tight.dispatch_stats["clip_events"] > 0
+    assert loose.dispatch_stats["clip_events"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation: pairwise cancellation + dropout recovery
+# ---------------------------------------------------------------------------
+
+def _template(nf=3):
+    return {"w": np.zeros((nf, 4, 2), np.float32),
+            "b": np.zeros((nf, 5), np.float32)}
+
+
+def _check_masking_invariants(sa, wave, n_rounds, ids, active, rng):
+    """The whole secure-aggregation contract on one geometry: per-round
+    net masks cancel over the client axis, and the masked sum of the
+    SURVIVORS plus the host-reconstructed correction for the dropped
+    equals the plain sum of the survivors' raw payloads."""
+    tmpl = _template()
+    masks = TR.net_masks(sa, wave, n_rounds, ids, tmpl)
+    for leaf in jax.tree_util.tree_leaves(masks):
+        resid = np.abs(leaf.sum(axis=1)).max() if leaf.size else 0.0
+        assert resid <= 1e-6 * max(sa.mask_scale, 1.0)
+
+    heads = jax.tree_util.tree_map(
+        lambda l: rng.normal(size=(len(ids),) + np.shape(l))
+        .astype(np.float32), tmpl)
+    corr = TR.mask_correction(masks, active)
+    for r in range(n_rounds):
+        surv = np.asarray(active, bool)
+        masked_sum = jax.tree_util.tree_map(
+            lambda h, m, c: (h + m[r])[surv].sum(axis=0) + c[r],
+            heads, masks, corr)
+        plain_sum = jax.tree_util.tree_map(
+            lambda h: h[surv].sum(axis=0), heads)
+        for a, b in zip(jax.tree_util.tree_leaves(masked_sum),
+                        jax.tree_util.tree_leaves(plain_sum)):
+            np.testing.assert_allclose(a, b, rtol=0,
+                                       atol=2e-5 * max(sa.mask_scale, 1.0))
+
+
+def test_masked_sums_equal_plain_sums_with_dropout():
+    sa = TR.MaskedSecureAggregation(mask_scale=1.0)
+    rng = np.random.default_rng(0)
+    _check_masking_invariants(sa, wave=2, n_rounds=3, ids=[0, 3, 4, 7],
+                              active=[True, False, True, True], rng=rng)
+    # everyone drops but one: the correction carries the entire masking
+    _check_masking_invariants(sa, wave=5, n_rounds=1, ids=[1, 2, 5],
+                              active=[False, False, True], rng=rng)
+
+
+def test_masking_invariants_seeded_sweep():
+    """Unconditional stand-in for the hypothesis property test: a seeded
+    sweep over wave / client-set / dropout geometries."""
+    rng = np.random.default_rng(7)
+    for trial in range(12):
+        C = int(rng.integers(2, 7))
+        ids = sorted(rng.choice(64, size=C, replace=False).tolist())
+        active = rng.random(C) > 0.4
+        if not active.any():
+            active[int(rng.integers(C))] = True
+        sa = TR.MaskedSecureAggregation(
+            mask_scale=float(rng.choice([1e-3, 1.0, 10.0])),
+            seed=int(rng.integers(1 << 16)))
+        _check_masking_invariants(sa, wave=int(rng.integers(32)),
+                                  n_rounds=int(rng.integers(1, 4)),
+                                  ids=ids, active=active.tolist(), rng=rng)
+
+
+def test_pair_mask_requires_ordered_ids():
+    sa = TR.MaskedSecureAggregation()
+    with pytest.raises(ValueError, match="i < j"):
+        TR.pair_mask(sa, 0, 0, 3, 3, _template())
+
+
+def test_secure_agg_engine_parity():
+    """Masked mean-transfer: oracle and fused engine agree to float
+    tolerance (one shared jitted secure_round, two callers)."""
+    sa = TR.TrustPlan(secure_agg=TR.MaskedSecureAggregation())
+    _, hs = _fit(sa, "sequential")
+    _, hb = _fit(sa, "batched")
+    np.testing.assert_allclose(_vals(hs), _vals(hb), rtol=0, atol=1e-6)
+
+
+def test_secure_agg_engine_parity_on_cohorts():
+    sa = TR.TrustPlan(secure_agg=TR.MaskedSecureAggregation())
+    _, hs = _fit(sa, "sequential", nf=(2, 3))
+    _, hb = _fit(sa, "batched", nf=(2, 3))
+    np.testing.assert_allclose(_vals(hs), _vals(hb), rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (gated on the library being installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 63),                       # wave
+           st.integers(1, 3),                        # rounds
+           st.lists(st.integers(0, 63), min_size=2, max_size=6,
+                    unique=True),                    # global client ids
+           st.data())
+    def test_property_masked_sums_match_plain(wave, n_rounds, ids, data):
+        ids = sorted(ids)
+        active = data.draw(st.lists(st.booleans(), min_size=len(ids),
+                                    max_size=len(ids)))
+        if not any(active):
+            active[0] = True
+        sa = TR.MaskedSecureAggregation(
+            mask_scale=data.draw(st.sampled_from([1e-3, 1.0, 10.0])),
+            seed=data.draw(st.integers(0, 1 << 16)))
+        _check_masking_invariants(sa, wave, n_rounds, ids, active,
+                                  np.random.default_rng(wave))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 200), st.floats(0.2, 5.0),
+           st.sampled_from([1e-5, 1e-6, 1e-8]))
+    def test_property_epsilon_bound_sane(releases, sigma, delta):
+        dp = TR.DPNoise(clip=1.0, sigma=sigma, delta=delta)
+        eps = dp.epsilon(releases)
+        rho = releases / (2.0 * sigma ** 2)
+        assert eps == pytest.approx(
+            rho + 2.0 * math.sqrt(rho * math.log(1.0 / delta)))
+        assert eps > dp.epsilon(releases - 1) or releases == 1
+
+
+# ---------------------------------------------------------------------------
+# Red team: sign-flip publishers quarantined by reputation, honest spared
+# ---------------------------------------------------------------------------
+
+def _red_team(nf_choices=(3,), waves=8, n=8, seed=7):
+    cfg = _cfg(seed=0)
+    pop = tensor_population(n, cfg, seed=0, nf_choices=nf_choices,
+                            n_train=20, n_eval=10)
+    pf = ParticipatingFederation(
+        pop, cfg,
+        participation=UniformParticipation(fraction=0.5, min_clients=2),
+        engine="batched",
+        faults=FT.FaultPlan(byzantine=0.3, corruption="signflip",
+                            seed=seed),
+        trust=TR.TrustPlan(watermark=TR.HeadWatermark()))
+    pf.fit(waves=waves)
+    return pf
+
+
+def _assert_quarantine(pf):
+    byz = {pf.population.name_of(i)
+           for w in pf.fault_log for i in w.byzantine}
+    quarantined = set(pf.reputation.quarantined)
+    assert quarantined, "no sign-flip publisher was quarantined"
+    assert quarantined <= byz, (
+        f"honest client quarantined: {quarantined - byz}")
+    # honest clients never accumulate strikes, let alone quarantine
+    for name, k in pf.reputation.strikes.items():
+        assert name in byz, f"honest client {name} struck {k}x"
+    stats = pf.dispatch_stats
+    assert stats["quarantined"] == sorted(quarantined)
+    assert stats["quarantined_drops"] > 0   # they were re-sampled + dropped
+    assert stats["watermark_failures"] > 0
+
+
+def test_red_team_signflip_quarantined_batched():
+    """The headline red-team scenario: byzantine clients publish
+    sign-flipped heads that sail through the admission guard
+    (test_signflip_passes_admission_guard) but fail watermark
+    verification every wave they are seen; the reputation book strikes
+    them once per failed wave and quarantines at ``tolerance`` strikes,
+    after which sampling never re-admits them."""
+    _assert_quarantine(_red_team())
+
+
+def test_red_team_signflip_quarantined_on_cohorts():
+    """Same adversary on a mixed-nf population: the cohort engine's padded
+    signature stacks must catch it just the same."""
+    _assert_quarantine(_red_team(nf_choices=(2, 3)))
+
+
+def test_red_team_selections_identical_without_adversary():
+    """Control arm: with the watermark on but NO adversary, a faultless
+    red-team run must match the plain watermark run exactly — the trust
+    layer only ever bites where there is an attack."""
+    cfg = _cfg(seed=0)
+    mk = lambda: tensor_population(8, cfg, seed=0, nf_choices=(3,),
+                                   n_train=20, n_eval=10)
+    wm = TR.TrustPlan(watermark=TR.HeadWatermark())
+    kw = dict(participation=UniformParticipation(fraction=0.5,
+                                                 min_clients=2),
+              engine="batched", trust=wm)
+    a = ParticipatingFederation(mk(), cfg, **kw)
+    b = ParticipatingFederation(
+        mk(), cfg, faults=FT.FaultPlan(byzantine=0.0,
+                                       corruption="signflip"), **kw)
+    ha, hb = a.fit(waves=4), b.fit(waves=4)
+    assert not a.reputation.quarantined and not b.reputation.quarantined
+    assert a.dispatch_stats["watermark_failures"] == \
+        b.dispatch_stats["watermark_failures"] == 0
+    for w1, w2 in zip(a.wave_log, b.wave_log):
+        assert w1["active"] == w2["active"]
+
+
+# ---------------------------------------------------------------------------
+# Forced 4-virtual-device mesh: the full battery, one subprocess
+# ---------------------------------------------------------------------------
+
+_MESH_SUBPROCESS = r"""
+import json
+import jax
+assert jax.device_count() == 4, jax.devices()
+import numpy as np
+from repro.core import faults as FT
+from repro.core import trust as TR
+from repro.core.experiment import tensor_population
+from repro.core.federation import Federation, RoundSchedule
+from repro.core.hfl import HFLConfig
+from repro.core.mesh_federation import make_mesh
+from repro.core.participation import (ParticipatingFederation,
+                                      UniformParticipation)
+
+cfg = HFLConfig(epochs=2, R=10, mode="always", seed=3)
+res = {}
+
+def full(trust, nf=(3,)):
+    fed = Federation(tensor_population(8, cfg, seed=1, nf_choices=nf,
+                                       n_train=20, n_eval=10)
+                     .build(range(8)),
+                     cfg, schedule=RoundSchedule(2, 10), engine="batched",
+                     mesh=make_mesh(), trust=trust)
+    return fed, fed.fit()
+
+# 1) disabled-plan / None bit-identity on the sharded engine
+_, h0 = full(None)
+_, h1 = full(TR.TrustPlan())
+res["mesh_parity"] = all(
+    h0[n]["val"] == h1[n]["val"]
+    and h0[n]["selections"] == h1[n]["selections"] for n in h0)
+
+# 2) watermark: failure counters exactly match the single-device engine
+wm = TR.TrustPlan(watermark=TR.HeadWatermark())
+fm, _ = full(wm)
+f1 = Federation(tensor_population(8, cfg, seed=1, nf_choices=(3,),
+                                  n_train=20, n_eval=10).build(range(8)),
+                cfg, schedule=RoundSchedule(2, 10), engine="batched",
+                trust=wm)
+f1.fit()
+res["wm_counters_match"] = fm._wm_failures == f1._wm_failures
+
+# 3) dp: epsilon accrues on the mesh, counters engine-exact
+dp = TR.TrustPlan(dp=TR.DPNoise(clip=10.0, sigma=0.8))
+fd, _ = full(dp)
+res["dp_eps_positive"] = fd.dispatch_stats["epsilon_spent"] > 0
+res["dp_counts_uniform"] = len(set(fd._dp_counts.values())) == 1
+
+# 4) secure agg on the mesh vs the sequential oracle: float tolerance
+sa = TR.TrustPlan(secure_agg=TR.MaskedSecureAggregation())
+fsm, hsm = full(sa)
+fss = Federation(tensor_population(8, cfg, seed=1, nf_choices=(3,),
+                                   n_train=20, n_eval=10).build(range(8)),
+                 cfg, schedule=RoundSchedule(2, 10), engine="sequential",
+                 trust=sa)
+hss = fss.fit()
+v1 = np.array([hsm[n]["val"] for n in sorted(hsm)])
+v2 = np.array([hss[n]["val"] for n in sorted(hss)])
+res["secure_maxdv"] = float(np.abs(v1 - v2).max())
+res["secure_close"] = bool(np.allclose(v1, v2, rtol=0, atol=1e-5))
+
+# 5) mixed-nf cohort path under the mesh runs with the watermark on
+full(wm, nf=(2, 3))
+res["cohort_mesh_ok"] = True
+
+# 6) red team on the mesh: sign-flip publishers quarantined at 4-multiple
+#    wave geometry, honest clients strike-free
+pop = tensor_population(16, cfg, seed=0, nf_choices=(3,),
+                        n_train=20, n_eval=10)
+pf = ParticipatingFederation(
+    pop, cfg,
+    participation=UniformParticipation(fraction=0.5, min_clients=8),
+    engine="batched", mesh=make_mesh(),
+    faults=FT.FaultPlan(byzantine=0.3, corruption="signflip", seed=7),
+    trust=TR.TrustPlan(watermark=TR.HeadWatermark()))
+pf.fit(waves=8)
+byz = {pf.population.name_of(i) for w in pf.fault_log for i in w.byzantine}
+res["mesh_quarantined"] = sorted(pf.reputation.quarantined)
+res["mesh_quarantine_nonempty"] = bool(pf.reputation.quarantined)
+res["mesh_quarantine_subset_byz"] = set(pf.reputation.quarantined) <= byz
+res["mesh_honest_strike_free"] = all(
+    n in byz for n in pf.reputation.strikes)
+res["mesh_geometry_multiple"] = all(
+    len(w["active"]) % 4 == 0 for w in pf.wave_log)
+print("RESULT " + json.dumps(res))
+"""
+
+
+def _run_forced_devices(script: str, n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_trust_on_forced_4_device_mesh():
+    """Acceptance: the whole trust battery on a forced 4-virtual-device
+    mesh — disabled-plan bit-identity, watermark counter parity with the
+    single-device engine, DP epsilon accrual, secure-agg oracle agreement,
+    the cohort path, and the sign-flip red team quarantined at 4-multiple
+    wave geometry."""
+    res = _run_forced_devices(_MESH_SUBPROCESS, 4)
+    assert res["mesh_parity"] is True
+    assert res["wm_counters_match"] is True
+    assert res["dp_eps_positive"] is True
+    assert res["dp_counts_uniform"] is True
+    assert res["secure_close"] is True, res["secure_maxdv"]
+    assert res["cohort_mesh_ok"] is True
+    assert res["mesh_quarantine_nonempty"] is True, res
+    assert res["mesh_quarantine_subset_byz"] is True, res
+    assert res["mesh_honest_strike_free"] is True, res
+    assert res["mesh_geometry_multiple"] is True
