@@ -120,6 +120,7 @@ import numpy as np
 from repro.core.federation import Federation, RoundSchedule
 from repro.core.hfl import FederatedClient, HFLConfig
 from repro.core.mesh_federation import make_mesh, mesh_devices
+from repro.core.telemetry import metric_spec
 
 
 def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
@@ -159,7 +160,7 @@ def _make_clients(C: int, cfg: HFLConfig, nf: int, n: int, w: int,
 
 def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
               population: bool, mesh=None, hetero: bool = False,
-              exchange_every: int = 1):
+              exchange_every: int = 1, telemetry=None):
     clients = _make_clients(C, cfg, nf, n, cfg.w, population, hetero)
     # population (and hetero) data has data-dependent per-client lengths,
     # so the expected round counts come from the actual tensors, not n
@@ -175,7 +176,8 @@ def _run_once(engine: str, C: int, cfg: HFLConfig, nf: int, n: int,
         raise SystemExit(
             f"train splits too short for a single sub-round "
             f"(< R={cfg.R} events); raise --batches or the data sizes")
-    fed = Federation(clients, cfg, engine=engine, mesh=mesh, schedule=sched)
+    fed = Federation(clients, cfg, engine=engine, mesh=mesh, schedule=sched,
+                     telemetry=telemetry)
     t0 = time.perf_counter()
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", UserWarning)   # ragged-length drop
@@ -344,6 +346,36 @@ def profile_phases(C: int, cfg: HFLConfig, nf: int, n: int,
     }
 
 
+def bench_telemetry_overhead(C: int, cfg: HFLConfig, nf: int, n: int,
+                             population: bool, repeats: int = 5) -> dict:
+    """--telemetry: the metrics-carry cost row.  Runs the fused batched
+    epoch with the in-graph telemetry carry ON vs OFF and reports the
+    throughput regression — the number the <3% acceptance gate in CI
+    checks.  The carry adds four small per-round outputs to the epoch
+    scan; the epoch still compiles to ONE dispatch either way.
+
+    Measurement discipline: one compile warmup apiece, then the on/off
+    timings are INTERLEAVED (off, on, off, on, ...) so slow machine-load
+    drift hits both arms equally, and each arm reports its best (noise
+    floor) throughput over ``repeats`` runs."""
+    from repro.core.telemetry import TelemetryPlan
+
+    plans = {"off": None, "on": TelemetryPlan()}
+    for telemetry in plans.values():                            # warmups
+        _run_once("batched", C, cfg, nf, n, population, telemetry=telemetry)
+    thr = {"off": [], "on": []}
+    for _ in range(repeats):
+        for arm, telemetry in plans.items():
+            elapsed, _, train_rounds, _ = _run_once(
+                "batched", C, cfg, nf, n, population, telemetry=telemetry)
+            thr[arm].append(train_rounds / elapsed)
+    off, on = max(thr["off"]), max(thr["on"])
+    return {"clients": C,
+            "on_client_rounds_per_s": on,
+            "off_client_rounds_per_s": off,
+            "overhead_pct": 100.0 * (off - on) / off}
+
+
 def _engine_tag_valid(tag: str) -> bool:
     """The closed set of engine row tags this bench emits: the three full
     engines plus ``participating+<policy>`` / ``participating+fault<rate>``.
@@ -363,10 +395,26 @@ def _engine_tag_valid(tag: str) -> bool:
     return False
 
 
+#: The bench-row columns, in emission order.  Each name is a catalog
+#: entry in ``repro.core.telemetry.METRICS`` — ``validate_payload`` takes
+#: the accepted types from there, ONE schema for engines and bench alike.
+BENCH_ROW_FIELDS = (
+    "clients", "engine", "devices", "hetero", "cohorts", "round_ms",
+    "client_rounds_per_s", "dispatches_per_epoch", "dispatch_path",
+    "exchange_every", "exchange_rounds", "pool_bytes_gathered",
+    "population", "participation_fraction", "resident_clients",
+    "resident_state_bytes", "fault_rate", "byzantine_frac",
+    "heads_rejected", "waves_degraded", "mean_val",
+    "speedup_vs_sequential",
+)
+
+
 def validate_payload(payload: dict) -> None:
     """Structural schema check for BENCH_fl_scale.json — CI smoke-runs a
     tiny sweep and validates the emitted file through this, so the schema
-    can't drift silently under downstream tooling."""
+    can't drift silently under downstream tooling.  Row columns are
+    validated against the telemetry metrics registry (see
+    ``BENCH_ROW_FIELDS``)."""
     def need(obj, key, types, where):
         if key not in obj:
             raise ValueError(f"{where}: missing key {key!r}")
@@ -402,30 +450,15 @@ def validate_payload(payload: dict) -> None:
         raise ValueError("results: empty")
     for i, r in enumerate(payload["results"]):
         where = f"results[{i}]"
-        need(r, "clients", int, where)
-        need(r, "engine", str, where)
+        # the row schema IS the metrics registry: every bench column
+        # resolves through repro.core.telemetry.METRICS (name + accepted
+        # JSON types), so the bench columns and the engines' own
+        # dispatch_stats names cannot drift apart
+        for key in BENCH_ROW_FIELDS:
+            need(r, key, metric_spec(key).types, where)
         if not _engine_tag_valid(r["engine"]):
             raise ValueError(f"{where}[engine]: unknown engine tag "
                              f"{r['engine']!r}")
-        need(r, "devices", int, where)
-        need(r, "hetero", bool, where)
-        need(r, "cohorts", int, where)
-        need(r, "round_ms", (int, float), where)
-        need(r, "client_rounds_per_s", (int, float), where)
-        need(r, "dispatches_per_epoch", (int, float), where)
-        need(r, "dispatch_path", str, where)
-        need(r, "exchange_every", int, where)
-        need(r, "exchange_rounds", int, where)
-        need(r, "pool_bytes_gathered", int, where)
-        need(r, "population", int, where)
-        need(r, "participation_fraction", (int, float), where)
-        need(r, "resident_clients", int, where)
-        need(r, "resident_state_bytes", int, where)
-        need(r, "fault_rate", (int, float), where)
-        need(r, "byzantine_frac", (int, float), where)
-        need(r, "heads_rejected", int, where)
-        need(r, "waves_degraded", int, where)
-        need(r, "mean_val", (int, float, type(None)), where)
         if not 0 <= r["fault_rate"] <= 1:
             raise ValueError(f"{where}[fault_rate]: must be in [0, 1], "
                              f"got {r['fault_rate']}")
@@ -444,7 +477,18 @@ def validate_payload(payload: dict) -> None:
             raise ValueError(f"{where}: resident_clients "
                              f"{r['resident_clients']} exceeds population "
                              f"{r['population']}")
-        need(r, "speedup_vs_sequential", (int, float, type(None)), where)
+    to = payload.get("telemetry_overhead")
+    if to is not None:
+        where = "telemetry_overhead"
+        if not isinstance(to, dict):
+            raise ValueError(f"{where}: expected dict")
+        need(to, "clients", int, where)
+        for k in ("on_client_rounds_per_s", "off_client_rounds_per_s",
+                  "overhead_pct"):
+            need(to, k, (int, float), where)
+        if to["on_client_rounds_per_s"] <= 0 \
+                or to["off_client_rounds_per_s"] <= 0:
+            raise ValueError(f"{where}: throughputs must be positive")
     for key, p in payload.get("profiles", {}).items():
         where = f"profiles[{key!r}]"
         if not isinstance(p, dict):
@@ -538,6 +582,12 @@ def main():
                     help="per-wave probability a sampled client publishes "
                          "corrupted (NaN) heads in --fault-rate rows "
                          "(quarantined by the pool admission guard)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="measure the in-graph telemetry carry's overhead: "
+                         "fused-epoch throughput with the metrics carry ON "
+                         "vs OFF at the largest client count (min-of-3 "
+                         "each); writes payload['telemetry_overhead'] — "
+                         "CI gates overhead_pct < 3")
     ap.add_argument("--max-seq-clients", type=int, default=None,
                     help="skip the sequential oracle above this client "
                          "count (its per-client Python loop dominates the "
@@ -674,6 +724,15 @@ def main():
                   file=sys.stderr)
             records.append(_record(r["resident_clients"], label, False, r,
                                    float("nan")))
+    tele_overhead = None
+    if args.telemetry:
+        tele_overhead = bench_telemetry_overhead(
+            max(counts), cfg, args.nf, n, args.population)
+        print(f"[telemetry] C={tele_overhead['clients']}: "
+              f"carry on {tele_overhead['on_client_rounds_per_s']:.1f} "
+              f"vs off {tele_overhead['off_client_rounds_per_s']:.1f} "
+              f"client-rounds/s -> overhead "
+              f"{tele_overhead['overhead_pct']:.2f}%", file=sys.stderr)
     if args.out:
         payload = {
             "benchmark": "fl_scale",
@@ -701,6 +760,8 @@ def main():
         }
         if profiles:
             payload["profiles"] = profiles
+        if tele_overhead is not None:
+            payload["telemetry_overhead"] = tele_overhead
         validate_payload(payload)
         Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {args.out}", file=sys.stderr)

@@ -52,12 +52,23 @@ union pool (`repro.core.cohorts`) — still one fused dispatch per epoch,
 still the oracle's selections.  The summary line reports the cohort
 layout.
 
+``--telemetry`` turns on the flight recorder
+(`repro.core.telemetry.TelemetryPlan`): in-graph per-round series (still
+one fused dispatch per epoch) plus host-side gather/dispatch/exchange/
+scatter spans in a bounded ring buffer.  ``--trace-out run.json``
+additionally exports the recording as Chrome-trace/Perfetto JSON
+(open it at https://ui.perfetto.dev) with the counter registry snapshot
+under a top-level ``metrics`` key:
+
+  --population 64 --fraction 0.25 --telemetry --trace-out run.json
+
 ``--save-dir d`` checkpoints the full federation at the end (and ``--resume``
 restarts from such a checkpoint and trains ``--epochs`` MORE epochs —
 bit-identical to never having stopped).
 """
 import argparse
 import dataclasses
+import json
 import sys
 import time
 from pathlib import Path
@@ -98,6 +109,44 @@ _PARTICIPATIONS = {"uniform": "UniformParticipation",
                    "stratified": "StratifiedParticipation"}
 
 
+def telemetry_plan(args):
+    """--telemetry / --trace-out: the flight-recorder plan (or None)."""
+    if not (args.telemetry or args.trace_out):
+        return None
+    from repro.core.telemetry import TelemetryPlan
+    return TelemetryPlan()
+
+
+def export_trace(fed, args):
+    """Summarize the flight recording; export Perfetto JSON if asked."""
+    rec = getattr(fed, "_recorder", None)
+    if rec is None:
+        return
+    # one metrics payload: the recorder's counters plus every numeric
+    # dispatch_stats entry the engines reported (canonical names)
+    snap = dict(rec.snapshot())
+    for k, v in (fed.dispatch_stats or {}).items():
+        if isinstance(v, (int, float)) and k not in snap:
+            snap[k] = v
+    spans = sum(1 for e in rec.events if e["type"] == "span")
+    rounds = sum(1 for e in rec.events if e["type"] == "round")
+    print(f"=> telemetry: {spans} spans + {rounds} round records in the "
+          f"ring ({len(rec.events)}/{rec.plan.ring_size}), counters: "
+          + ", ".join(f"{k}={snap[k]}" for k in sorted(snap)
+                      if isinstance(snap[k], int)))
+    if args.trace_out:
+        sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                               / "tools"))
+        from trace_export import (assert_spans_nest, chrome_trace,
+                                  validate_trace)
+        trace = chrome_trace(rec.events, metrics=snap)
+        validate_trace(trace)
+        assert_spans_nest(trace["traceEvents"])
+        Path(args.trace_out).write_text(json.dumps(trace))
+        print(f"=> trace: {len(trace['traceEvents'])} events -> "
+              f"{args.trace_out} (open at https://ui.perfetto.dev)")
+
+
 def run_sampled(args, mesh):
     """--population N: sampled partial participation over a lazy population
     (repro.core.participation) — the resident working set is the WAVE, not
@@ -133,7 +182,7 @@ def run_sampled(args, mesh):
             participation=policy_cls(fraction=args.fraction, min_clients=2),
             schedule=RoundSchedule(args.epochs, cfg.R,
                                    exchange_every=args.exchange_every),
-            mesh=mesh, faults=faults)
+            mesh=mesh, faults=faults, telemetry=telemetry_plan(args))
         print(f"== {args.population}-hospital population, "
               f"{args.participation} participation "
               f"(fraction={args.fraction}), {args.epochs} waves =="
@@ -155,6 +204,7 @@ def run_sampled(args, mesh):
               f"dropped across {st['waves_degraded']} degraded waves, "
               f"{st['stragglers']} stragglers, {st['heads_rejected']} "
               f"poisoned heads quarantined at the pool gate")
+    export_trace(pf, args)
     if args.save_dir:
         pf.save(args.save_dir)
         print(f"=> sampled federation checkpointed to {args.save_dir} "
@@ -215,6 +265,12 @@ def main():
     ap.add_argument("--exchange-every", type=int, default=1,
                     help="bounded-staleness cadence: run the pool exchange "
                          "only on every k-th sub-round (docs/SCALING.md)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="flight-recorder telemetry (repro.core.telemetry): "
+                         "in-graph per-round series + host-side spans")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the flight recording as Chrome-trace/"
+                         "Perfetto JSON here (implies --telemetry)")
     ap.add_argument("--save-dir", default=None,
                     help="checkpoint the federation here after training")
     ap.add_argument("--resume", action="store_true",
@@ -261,7 +317,8 @@ def main():
                               exchange_every=args.exchange_every)
         fed = Federation(clients, cfg, policies=build_policies(args, cfg),
                          schedule=sched, engine=args.engine or "batched",
-                         callbacks=[metrics], mesh=mesh)
+                         callbacks=[metrics], mesh=mesh,
+                         telemetry=telemetry_plan(args))
         print(f"== {args.clients}-hospital population, engine={fed.engine}, "
               f"mode={args.mode}, selection={args.selection}"
               + (f", mesh={mesh.devices.size}dev" if mesh is not None
@@ -290,6 +347,7 @@ def main():
           f"across {args.clients} hospitals, {len(metrics.epochs)} epochs "
           f"captured, in {wall:.1f}s "
           f"({max(new_rounds, 1) / wall:.1f} client-rounds/s){cohort_note}")
+    export_trace(fed, args)
     if args.save_dir:
         fed.save(args.save_dir)
         print(f"=> federation checkpointed to {args.save_dir} "

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mesh_federation as MF
+from repro.core import telemetry as TEL
 from repro.core import trust as TR
 from repro.core.federation import (_exchange_round_bytes, _policy_round_body,
                                    _stack_trees, _tree_bytes, _tree_row,
@@ -246,7 +247,7 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                        do_federate: bool, do_eval: bool, *,
                        exchange_every: int = 1, gather=None,
                        local_rows=None, shard=None, admission=None,
-                       trust=None):
+                       trust=None, telemetry=None):
     """The fused whole-epoch computation for a cohorted population, shared by
     the single-device and mesh backends: one ``lax.scan`` over the epoch's
     global sub-rounds.  Each step trains every cohort at its native
@@ -283,7 +284,15 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
     wm_failed)`` pair after the admission mask.  Secure aggregation
     replaces the padded-union selection with ``trust.secure_round`` over
     the padded stacks (``feat_valid`` silences padded rows in every sum).
-    ``trust=None`` traces the byte-identical pre-trust graph."""
+    ``trust=None`` traces the byte-identical pre-trust graph.
+
+    ``telemetry`` (a TelemetryPlan with the in-graph series enabled)
+    appends one more trailing scan output — the per-round metrics 4-tuple
+    ``(foreign_picks (C,) int32, score_min (C,) f32, score_mean (C,) f32,
+    pool_age (C,) int32)`` at the padded geometry (padded features select
+    -1, so they never count as picks) — appended LAST and therefore popped
+    FIRST at every unpack site, before trust, before admission.
+    ``telemetry=None`` traces the byte-identical pre-telemetry graph."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
@@ -365,7 +374,10 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                         shard=shard, admission=admission, trust=sel_trust,
                         trust_sig=(trust_arrays if sel_trust is not None
                                    and sel_trust.watermark is not None
-                                   else None))
+                                   else None), telemetry=telemetry)
+                    if telemetry is not None:
+                        scores = out[-1]
+                        out = out[:-1]
                     if trust is not None:
                         tstats = out[-1]
                         out = out[:-1]
@@ -384,11 +396,21 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                     rej = jnp.zeros((C,), bool)
                 if trust is not None:
                     tstats = (jnp.zeros((C,), bool), jnp.zeros((C,), bool))
+            if telemetry is not None:
+                if not do_federate or secure:
+                    # non-exchanging / masked-secure rounds score nothing:
+                    # the series carry the inf/0 sentinels
+                    scores = (jnp.full((C,), jnp.inf, jnp.float32),
+                              jnp.zeros((C,), jnp.float32))
+                tele_r = (jnp.sum(chosen >= 0, axis=-1).astype(jnp.int32),
+                          scores[0], scores[1], pool_age)
             ys = (chosen,)
             if admission is not None:
                 ys = ys + (rej,)
             if trust is not None:
                 ys = ys + (tstats,)
+            if telemetry is not None:
+                ys = ys + (tele_r,)
             if len(ys) == 1:
                 ys = ys[0]
             return ((tuple(params_t), tuple(opt_t), pool_heads, pool_age,
@@ -434,6 +456,13 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
                                            xs_all))
+        if telemetry is not None:
+            tele = ys[-1]
+            ys = ys[:-1]
+            if len(ys) == 1:
+                ys = ys[0]
+        else:
+            tele = None
         if admission is not None and trust is not None:
             chosen, rejected, tstats = ys
         elif admission is not None:
@@ -469,6 +498,8 @@ def _hetero_epoch_body(lr: float, plan: CohortPlan,
             out = out + (rejected,)
         if trust is not None:
             out = out + (tstats,)
+        if telemetry is not None:
+            out = out + (tele,)
         return out
 
     return epoch
@@ -479,7 +510,7 @@ def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
                           policies: FederationPolicies, use_kernel: bool,
                           do_federate: bool, do_eval: bool,
                           exchange_every: int = 1, admission=None,
-                          trust=None):
+                          trust=None, telemetry=None):
     """Compile-cached fused heterogeneous epoch (single-device): one
     dispatch scans every global sub-round of a mixed-cohort epoch, with the
     whole carried state donated — the cohort twin of
@@ -488,7 +519,8 @@ def _make_hetero_epoch_fn(lr: float, plan: CohortPlan,
     and every cohort inside it shares that single program."""
     epoch = _hetero_epoch_body(lr, plan, policies, use_kernel, do_federate,
                                do_eval, exchange_every=exchange_every,
-                               admission=admission, trust=trust)
+                               admission=admission, trust=trust,
+                               telemetry=telemetry)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -498,7 +530,7 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
                                use_kernel: bool, do_federate: bool,
                                do_eval: bool, mesh,
                                exchange_every: int = 1, admission=None,
-                               trust=None):
+                               trust=None, telemetry=None):
     """The client-sharded twin of :func:`_make_hetero_epoch_fn`: the same
     epoch body under ``shard_map``, with every cohort's stack partitioned
     over the mesh's ``clients`` axis (each cohort size must divide the
@@ -533,7 +565,7 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
                                do_eval, exchange_every=exchange_every,
                                gather=gather, local_rows=local_rows,
                                shard=(axis, D), admission=admission,
-                               trust=trust)
+                               trust=trust, telemetry=telemetry)
     tup = lambda spec: tuple(spec for _ in range(K))
     out_specs = (pspecs_t, tup(cl), rep, rep, rep, tup(cl), pspecs_t,
                  tup(cl) if do_eval else None, rep)
@@ -546,6 +578,11 @@ def _make_mesh_hetero_epoch_fn(lr: float, plan: CohortPlan, w: int,
         # trust inputs (padded signature stack / mask pair / dummy) and
         # the per-round trust stats are replicated like the pool carry
         in_specs = in_specs + (rep,)
+        out_specs = out_specs + (rep,)
+    if telemetry is not None:
+        # the per-round metrics 4-tuple comes back replicated (derived
+        # from the replicated pool carry / collectively-reduced scores);
+        # a single ``rep`` prefixes the whole tuple, as for trust above
         out_specs = out_specs + (rep,)
     sharded = shard_map(
         epoch, mesh=mesh,
@@ -667,6 +704,11 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
     smask = fed._straggler_mask
     trust = fed._trust
     secure = trust is not None and trust.secure_agg is not None
+    # telemetry layer: `tele` = the enabled plan iff the in-graph series is
+    # on (static jit arg; None traces the uninstrumented graph), `rec` =
+    # the host-side flight recorder
+    tele = fed._tele_rounds()
+    rec = fed._recorder
     # host templates/derivations the trust layer needs, at the PADDED
     # geometry (masks and signatures ride the (C, max_nf, ...) union)
     head_tmpl = TR.pad_rows(jax.tree_util.tree_map(
@@ -725,10 +767,10 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
             return _make_mesh_hetero_epoch_fn(cfg.lr, plan, cfg.w, pol,
                                               use_kernel, do_federate,
                                               do_eval, mesh, exchange_every,
-                                              admission, trust)
+                                              admission, trust, tele)
         return _make_hetero_epoch_fn(cfg.lr, plan, pol, use_kernel,
                                      do_federate, do_eval, exchange_every,
-                                     admission, trust)
+                                     admission, trust, tele)
 
     def trust_args(act_rows, e_off: int = 0):
         """The epoch function's trailing ``trust_arrays`` argument for one
@@ -836,15 +878,18 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
         if fused:
             epoch_fn = make_epoch_fn(do_federate, True, k_ex)
             act_rows = part_np[exch] if do_federate else part_np[:0]
-            out = epoch_fn(*state,
-                           tuple(r[0] for r in rounds_t),
-                           tuple(r[1] for r in rounds_t),
-                           tuple(r[2] for r in rounds_t),
-                           part, tick, live,
-                           tuple(v[0] for v in val_t),
-                           tuple(v[1] for v in val_t),
-                           tuple(v[2] for v in val_t),
-                           *trust_args(act_rows))
+            with TEL.span(rec, "dispatch", epoch=epoch, path="fused"):
+                out = epoch_fn(*state,
+                               tuple(r[0] for r in rounds_t),
+                               tuple(r[1] for r in rounds_t),
+                               tuple(r[2] for r in rounds_t),
+                               part, tick, live,
+                               tuple(v[0] for v in val_t),
+                               tuple(v[1] for v in val_t),
+                               tuple(v[2] for v in val_t),
+                               *trust_args(act_rows))
+            if tele is not None:   # telemetry rides LAST: pop it first
+                tele_out, out = out[-1], out[:-1]
             if trust is not None:
                 tstats, out = out[-1], out[:-1]
             if admission is not None:
@@ -858,6 +903,7 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
             n_dispatch += 1
         else:
             chunks = []
+            tele_chunks = []
             e_done = 0          # exchange rounds executed so far this epoch
                                 # (the trust layer's within-epoch mask index)
             for rnd in range(n_sub_max):
@@ -867,16 +913,21 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                 epoch_fn = make_epoch_fn(fed_r, rnd == n_sub_max - 1)
                 sl = slice(rnd, rnd + 1)
                 act_rows = part_np[sl] if fed_r else part_np[:0]
-                out = epoch_fn(
-                    *state,
-                    tuple(r[0][sl] for r in rounds_t),
-                    tuple(r[1][sl] for r in rounds_t),
-                    tuple(r[2][sl] for r in rounds_t),
-                    part[sl], tick[sl], live[sl],
-                    tuple(v[0] for v in val_t),
-                    tuple(v[1] for v in val_t),
-                    tuple(v[2] for v in val_t),
-                    *trust_args(act_rows, e_done))
+                with TEL.span(rec, "dispatch", epoch=epoch, round=rnd,
+                              path="chunked"):
+                    out = epoch_fn(
+                        *state,
+                        tuple(r[0][sl] for r in rounds_t),
+                        tuple(r[1][sl] for r in rounds_t),
+                        tuple(r[2][sl] for r in rounds_t),
+                        part[sl], tick[sl], live[sl],
+                        tuple(v[0] for v in val_t),
+                        tuple(v[1] for v in val_t),
+                        tuple(v[2] for v in val_t),
+                        *trust_args(act_rows, e_done))
+                if tele is not None:
+                    tele_chunks.append(out[-1])
+                    out = out[:-1]
                 if trust is not None:
                     tstats, out = out[-1], out[:-1]
                 if admission is not None:
@@ -899,16 +950,20 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                     cb.on_round(fed, epoch, rnd)
             if n_sub_max == 0:   # no trainable sub-round: eval-only dispatch
                 epoch_fn = make_epoch_fn(do_federate, True)
-                out = epoch_fn(
-                    *state,
-                    tuple(r[0] for r in rounds_t),
-                    tuple(r[1] for r in rounds_t),
-                    tuple(r[2] for r in rounds_t),
-                    part, tick, live,
-                    tuple(v[0] for v in val_t),
-                    tuple(v[1] for v in val_t),
-                    tuple(v[2] for v in val_t),
-                    *trust_args(part_np[:0]))
+                with TEL.span(rec, "dispatch", epoch=epoch,
+                              path="eval-only"):
+                    out = epoch_fn(
+                        *state,
+                        tuple(r[0] for r in rounds_t),
+                        tuple(r[1] for r in rounds_t),
+                        tuple(r[2] for r in rounds_t),
+                        part, tick, live,
+                        tuple(v[0] for v in val_t),
+                        tuple(v[1] for v in val_t),
+                        tuple(v[2] for v in val_t),
+                        *trust_args(part_np[:0]))
+                if tele is not None:
+                    out = out[:-1]
                 if trust is not None:
                     out = out[:-1]
                 if admission is not None:
@@ -918,18 +973,32 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
                 chunks.append(ch)
                 n_dispatch += 1
             chosen = jnp.concatenate(chunks) if chunks else None
+            tele_out = tuple(
+                np.concatenate([np.asarray(t[k]) for t in tele_chunks])
+                for k in range(4)) if tele is not None and tele_chunks \
+                else None
         (params_t, opt_t, pool_heads, pool_age, key, best_val_t,
          best_params_t) = state
-        if do_federate and chosen is not None:
-            ch_np = np.asarray(chosen)      # (rounds, C, max_nf)
-            for ch in ch_np:
-                for i in range(C):
-                    if ch[i][0] >= 0:
-                        nf_i = plan.nfs[i]
-                        fed.selections[names[i]].append(
-                            lut[i, ch[i][:nf_i]].tolist())
+        with TEL.span(rec, "exchange", epoch=epoch):
+            if do_federate and chosen is not None:
+                ch_np = np.asarray(chosen)      # (rounds, C, max_nf)
+                for ch in ch_np:
+                    for i in range(C):
+                        if ch[i][0] >= 0:
+                            nf_i = plan.nfs[i]
+                            fed.selections[names[i]].append(
+                                lut[i, ch[i][:nf_i]].tolist())
+            if tele is not None and tele_out is not None:
+                rec.record_epoch_rounds(epoch, tele_out, active)
         if fused:
             n_rounds += part_np[exch].sum(axis=0)
+        if rec is not None:
+            done = int(part_np[exch].sum())
+            if done:
+                rec.count("client_rounds", done)
+        # refresh the live counters each epoch (idempotent with sync())
+        for i, nm in enumerate(names):
+            fed.n_rounds[nm] = base_rounds[nm] + int(n_rounds[i])
         if do_federate:
             exchange_rounds += n_exch_epoch
             pool_bytes += n_exch_epoch * exch_bytes
@@ -954,6 +1023,16 @@ def _fit_cohorted(fed, n_epochs: int, cbs) -> None:
             if dp_pubs[i]:
                 fed._dp_counts[nm] = (fed._dp_counts.get(nm, 0)
                                       + int(dp_pubs[i]))
+    if rec is not None:
+        # fold this fit's in-graph counters into the flight recorder (the
+        # participation orchestrator may overwrite dispatch_stats later)
+        if heads_rejected:
+            rec.count("heads_rejected", int(heads_rejected))
+        if trust is not None:
+            if clip_total:
+                rec.count("clip_events", int(clip_total))
+            if wm_fail.sum():
+                rec.count("watermark_failures", int(wm_fail.sum()))
     fed.dispatch_stats = {
         "engine": "batched",
         "path": "fused" if fused else "chunked",

@@ -36,6 +36,7 @@ import dataclasses
 import functools
 import json
 import os
+import time
 import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
@@ -47,6 +48,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import faults as FT
 from repro.core import mesh_federation as MF
+from repro.core import telemetry as TEL
 from repro.core import trust as TR
 from repro.core.hfl import (FederatedClient, HeadPool, HFLConfig,
                             _eval_mse, _pool_kernel_ops, _train_step,
@@ -176,7 +178,21 @@ def _wants_per_round(cb: Callback) -> bool:
 
 class VerboseLogger(Callback):
     """The engines' legacy per-epoch console line (a `*` marks clients whose
-    switch was active this epoch)."""
+    switch was active this epoch), plus a wall-clock / throughput line:
+    per-epoch wall time, client-rounds/s over the epoch (exchange
+    opportunities actually run, the benchmarks' throughput unit), and —
+    when the federation carries an enabled TelemetryPlan with the in-graph
+    round series on — the latest pool staleness-age mean/max from the
+    flight recorder."""
+
+    def __init__(self):
+        self._t0 = None
+        self._rounds0 = None
+
+    def on_fit_start(self, fed):
+        self._t0 = time.perf_counter()
+        self._rounds0 = (sum(fed.n_rounds.values())
+                         if fed is not None else 0)
 
     def on_epoch_end(self, fed, epoch, val, active):
         engine = getattr(fed, "engine", None)
@@ -184,6 +200,24 @@ class VerboseLogger(Callback):
         msg = " ".join(f"{n}={val[n]:.4f}{'*' if active.get(n) else ''}"
                        for n in val)
         print(f"[{tag}] epoch {epoch:3d} val: {msg}", flush=True)
+        now = time.perf_counter()
+        dt = now - self._t0 if self._t0 is not None else 0.0
+        self._t0 = now
+        if fed is None:
+            print(f"[{tag}] epoch {epoch:3d} wall: {dt:.3f}s", flush=True)
+            return
+        total = sum(fed.n_rounds.values())
+        done = total - (self._rounds0 or 0)
+        self._rounds0 = total
+        crs = done / dt if dt > 0 else 0.0
+        line = (f"[{tag}] epoch {epoch:3d} wall: {dt:.3f}s "
+                f"client-rounds/s: {crs:.1f}")
+        rec = getattr(fed, "_recorder", None)
+        ev = rec.last_round_event() if rec is not None else None
+        if ev is not None and ev.get("age_mean") is not None:
+            line += (f" staleness: {ev['age_mean']:.1f}"
+                     f"/{ev['age_max']}")
+        print(line, flush=True)
 
 
 class MetricsCapture(Callback):
@@ -283,6 +317,7 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
     sa = trust.secure_agg if trust is not None else None
     gids = {c.name: fed._trust_ids[i] for i, c in enumerate(fed.clients)} \
         if trust is not None else {}
+    rec = fed._recorder
     heads_rejected = 0
     n_exchange = 0            # executed sub-rounds that ran an exchange
     n_dispatch = 0            # jitted calls: train steps + Eq.-7 scorings +
@@ -392,6 +427,7 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
         iters = {c.name: c.train_epoch(R=fed.schedule.R)
                  for c in fed.clients}
         live = set(iters)
+        rounds_start = sum(fed.n_rounds.values())
         fed._mid_epoch = True
         rnd = 0
         e_idx = 0               # exchange index within the epoch (the
@@ -466,9 +502,15 @@ def _fit_sequential(fed: "Federation", n_epochs: int, cbs) -> None:
         n_dispatch += C
         fed.epoch += 1
         fed._mid_epoch = False
+        if rec is not None:
+            done = sum(fed.n_rounds.values()) - rounds_start
+            if done:
+                rec.count("client_rounds", done)
         val = {c.name: c.val_history[-1] for c in fed.clients}
         for cb in cbs:
             cb.on_epoch_end(fed, epoch, val, active)
+    if rec is not None and heads_rejected:
+        rec.count("heads_rejected", int(heads_rejected))
     fed.dispatch_stats = {"engine": "sequential", "path": "per-round",
                           "devices": 1,
                           "epochs": n_epochs, "dispatches": n_dispatch,
@@ -520,7 +562,8 @@ def merge_sharded_argmin(vals, gidx, ns: int):
 def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
                        *, nf: int, policies: FederationPolicies,
                        use_kernel: bool, feat_valid=None, shard=None,
-                       admission=None, trust=None, trust_sig=None):
+                       admission=None, trust=None, trust_sig=None,
+                       telemetry=None):
     """One federated opportunity for ALL clients as a traceable scan over
     clients — the body both :func:`fused_policy_round` (standalone jit) and
     the fused-epoch scan (:func:`_make_epoch_fn`) trace.  The policy
@@ -585,7 +628,17 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
     byte-identical).  The admission guard then checks the PRIVATIZED
     candidate (the actual release).  When ``trust`` is set the body
     returns one extra trailing output: a ``((C,) clip, (C,) wm_failed)``
-    bool pair.  ``None`` traces exactly the pre-trust graph."""
+    bool pair.  ``None`` traces exactly the pre-trust graph.
+
+    ``telemetry`` (a :class:`~repro.core.telemetry.TelemetryPlan` with
+    ``rounds`` on, or None) opts into the in-graph metrics carry: the body
+    additionally returns, as its LAST output, a ``((C,) score_min, (C,)
+    score_mean)`` float32 pair — the Eq.-7 score distribution each client
+    saw over its valid candidates this opportunity (``inf`` / 0 when the
+    selection policy scores nothing).  On the sharded ``local_argmin``
+    path the aggregates reduce with ``pmin`` / ``psum`` so they come back
+    replicated.  ``None`` traces exactly the pre-telemetry graph (the
+    bit-identity pin, mirroring ``faults=None`` / ``trust=None``)."""
     if trust is not None and trust.secure_agg is not None:
         raise ValueError(
             "masked secure aggregation replaces the selection round "
@@ -761,21 +814,57 @@ def _policy_round_body(heads, pool_heads, pool_age, xd_R, y_R, active, key,
             ys = (chosen, (clip_i, wmf_i))
         else:
             ys = chosen
+        if telemetry is not None:
+            # the metrics carry: client i's Eq.-7 score aggregates over its
+            # masked candidate pool.  Excluded entries score inf, so the
+            # min is the winning score and the mean runs over the finite
+            # (valid) candidates; policies that never score (and secure
+            # rounds, which bypass this body) report the inf/0 sentinels.
+            if sel.needs_errors and errs is not None:
+                fin = jnp.isfinite(errs)
+                smin_i = jnp.min(errs)
+                smean_i = jnp.sum(jnp.where(fin, errs, 0.0)) \
+                    / jnp.maximum(jnp.sum(fin), 1)
+            elif sel.needs_errors:
+                # sharded local_argmin path: the error matrix stayed
+                # device-local — reduce the aggregates collectively so
+                # they come back replicated
+                axis, _D = shard
+                fin = jnp.isfinite(errs_loc)
+                smin_i = jax.lax.pmin(jnp.min(errs_loc), axis)
+                smean_i = jax.lax.psum(
+                    jnp.sum(jnp.where(fin, errs_loc, 0.0)), axis) \
+                    / jnp.maximum(jax.lax.psum(jnp.sum(fin), axis), 1)
+            else:
+                smin_i = jnp.asarray(jnp.inf)
+                smean_i = jnp.asarray(0.0)
+            tele_i = (smin_i.astype(jnp.float32),
+                      smean_i.astype(jnp.float32))
+            ys = (ys if isinstance(ys, tuple) else (ys,)) + (tele_i,)
         return (heads, pool, age), ys
 
     keys = jax.random.split(key, C)
     (heads, pool_heads, pool_age), ys = jax.lax.scan(
         body, (heads, pool_heads, pool_age), (jnp.arange(C), keys))
+    if telemetry is not None:
+        tele = ys[-1]
+        ys = ys[:-1]
+        if len(ys) == 1:
+            ys = ys[0]
     if admission is not None and trust is not None:
         chosen, rejected, tstats = ys
-        return heads, pool_heads, pool_age, chosen, rejected, tstats
-    if admission is not None:
+        out = (heads, pool_heads, pool_age, chosen, rejected, tstats)
+    elif admission is not None:
         chosen, rejected = ys
-        return heads, pool_heads, pool_age, chosen, rejected
-    if trust is not None:
+        out = (heads, pool_heads, pool_age, chosen, rejected)
+    elif trust is not None:
         chosen, tstats = ys
-        return heads, pool_heads, pool_age, chosen, tstats
-    return heads, pool_heads, pool_age, ys
+        out = (heads, pool_heads, pool_age, chosen, tstats)
+    else:
+        out = (heads, pool_heads, pool_age, ys)
+    if telemetry is not None:
+        out = out + (tele,)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("nf", "policies", "use_kernel"))
@@ -862,7 +951,7 @@ def _make_batched_fns(lr: float):
 def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                 use_kernel: bool, do_federate: bool, do_eval: bool, *,
                 exchange_every: int = 1, gather=None, local_rows=None,
-                shard=None, admission=None, trust=None):
+                shard=None, admission=None, trust=None, telemetry=None):
     """The fused whole-epoch computation shared by BOTH batched backends:
     a scan over the epoch's sub-rounds (vmapped Adam step on that round's
     R-slice, then the fused policy round), with the per-epoch validation
@@ -906,7 +995,17 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
     selection scan with ``trust.secure_round`` (masked mean transfer — the
     pool stores masked payloads, ``chosen`` is all -1).  ``trust=None``
     traces the byte-identical pre-trust graph (the bit-identity pin,
-    mirroring ``faults=None``)."""
+    mirroring ``faults=None``).
+
+    ``telemetry`` (a :class:`~repro.core.telemetry.TelemetryPlan` with
+    ``rounds`` on, or None) threads the in-graph metrics carry through the
+    scan: the epoch function returns one extra LAST output — the stacked
+    per-exchange-round series ``((rounds, C) foreign-pick counts,
+    (rounds, C) score_min, (rounds, C) score_mean, (rounds, C) pool_age
+    snapshots)`` — still inside the same single dispatch.  Unpack order at
+    every call site: telemetry pops FIRST (it is appended last), then
+    trust, then admission.  ``telemetry=None`` traces the byte-identical
+    pre-instrumentation graph."""
     opt = adam(lr)
     step = jax.vmap(functools.partial(_train_step, opt))
     evaluate = jax.vmap(_eval_mse)
@@ -956,7 +1055,10 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                         shard=shard, admission=admission, trust=sel_trust,
                         trust_sig=(trust_arrays if sel_trust is not None
                                    and sel_trust.watermark is not None
-                                   else None))
+                                   else None), telemetry=telemetry)
+                    if telemetry is not None:
+                        scores = out[-1]
+                        out = out[:-1]
                     if trust is not None:
                         tstats = out[-1]
                         out = out[:-1]
@@ -971,11 +1073,21 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                     rej = jnp.zeros((C,), bool)
                 if trust is not None:
                     tstats = (jnp.zeros((C,), bool), jnp.zeros((C,), bool))
+            if telemetry is not None:
+                if not do_federate or secure:
+                    # a non-exchanging (or masked secure) round scores
+                    # nothing: the series carry the inf/0 sentinels
+                    scores = (jnp.full((C,), jnp.inf, jnp.float32),
+                              jnp.zeros((C,), jnp.float32))
+                tele_r = (jnp.sum(chosen >= 0, axis=-1).astype(jnp.int32),
+                          scores[0], scores[1], pool_age)
             ys = (chosen,)
             if admission is not None:
                 ys = ys + (rej,)
             if trust is not None:
                 ys = ys + (tstats,)
+            if telemetry is not None:
+                ys = ys + (tele_r,)
             if len(ys) == 1:
                 ys = ys[0]
             return (params, opt_state, pool_heads, pool_age, key), ys
@@ -1021,6 +1133,13 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
                     train_only, carry,
                     jax.tree_util.tree_map(lambda t: t[n_grp * k_ex:],
                                            (xs_r, xd_r, y_r)))
+        if telemetry is not None:
+            tele = ys[-1]
+            ys = ys[:-1]
+            if len(ys) == 1:
+                ys = ys[0]
+        else:
+            tele = None
         if admission is not None and trust is not None:
             chosen, rejected, tstats = ys
         elif admission is not None:
@@ -1049,6 +1168,8 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
             out = out + (rejected,)
         if trust is not None:
             out = out + (tstats,)
+        if telemetry is not None:
+            out = out + (tele,)
         return out
 
     return epoch
@@ -1057,7 +1178,8 @@ def _epoch_body(lr: float, nf: int, policies: FederationPolicies,
 @functools.lru_cache(maxsize=None)
 def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
                    use_kernel: bool, do_federate: bool, do_eval: bool,
-                   exchange_every: int = 1, admission=None, trust=None):
+                   exchange_every: int = 1, admission=None, trust=None,
+                   telemetry=None):
     """Compile-cached whole-epoch function: ONE dispatch scans every
     sub-round of an epoch — the vmapped Adam step on that round's R-slice,
     then the fused policy round (selection, blend, publish, aging, RNG
@@ -1084,7 +1206,7 @@ def _make_epoch_fn(lr: float, nf: int, policies: FederationPolicies,
     round)."""
     epoch = _epoch_body(lr, nf, policies, use_kernel, do_federate, do_eval,
                         exchange_every=exchange_every, admission=admission,
-                        trust=trust)
+                        trust=trust, telemetry=telemetry)
     return jax.jit(epoch, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
@@ -1155,6 +1277,12 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
     smask = fed._straggler_mask
     trust = fed._trust
     secure = trust is not None and trust.secure_agg is not None
+    # telemetry layer (core/telemetry.py): `tele` is the enabled plan iff
+    # its in-graph per-round series is on (a static jit argument, so
+    # tele=None traces the byte-identical pre-instrumentation graph); `rec`
+    # is the host-side flight recorder (spans + counters + round events)
+    tele = fed._tele_rounds()
+    rec = fed._recorder
     # host templates/derivations the trust layer needs (captured before the
     # stacked state is donated away)
     head_tmpl = jax.tree_util.tree_map(
@@ -1210,9 +1338,10 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
             return MF._make_mesh_epoch_fn(cfg.lr, nf, cfg.w, pol,
                                           use_kernel, do_federate, do_eval,
                                           mesh, C, exchange_every,
-                                          admission, trust)
+                                          admission, trust, tele)
         return _make_epoch_fn(cfg.lr, nf, pol, use_kernel, do_federate,
-                              do_eval, exchange_every, admission, trust)
+                              do_eval, exchange_every, admission, trust,
+                              tele)
 
     def trust_args(active, n_exch: int, e_off: int = 0):
         """The epoch function's trailing ``trust_arrays`` argument for one
@@ -1295,8 +1424,11 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
         fed._mid_epoch = True
         if fused:
             epoch_fn = make_epoch_fn(do_federate, True, k_ex)
-            out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val,
-                           *trust_args(active, n_exch_epoch))
+            with TEL.span(rec, "dispatch", epoch=epoch, path="fused"):
+                out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val,
+                               *trust_args(active, n_exch_epoch))
+            if tele is not None:   # telemetry rides LAST: pop it first
+                tele_out, out = out[-1], out[:-1]
             if trust is not None:
                 tstats, out = out[-1], out[:-1]
             if admission is not None:
@@ -1310,6 +1442,7 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
             n_dispatch += 1
         else:
             chunks = []
+            tele_chunks = []
             e_done = 0          # exchange rounds executed so far this epoch
                                 # (the trust layer's within-epoch mask index)
             for rnd in range(n_sub):
@@ -1317,10 +1450,15 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                 # exactly a do_federate=False dispatch (train + eval only)
                 fed_r = do_federate and bool(exch_mask[rnd])
                 epoch_fn = make_epoch_fn(fed_r, rnd == n_sub - 1)
-                out = epoch_fn(
-                    *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
-                    y_r[rnd:rnd + 1], active_dev, *val,
-                    *trust_args(active, 1 if fed_r else 0, e_done))
+                with TEL.span(rec, "dispatch", epoch=epoch, round=rnd,
+                              path="chunked"):
+                    out = epoch_fn(
+                        *state, xs_r[rnd:rnd + 1], xd_r[rnd:rnd + 1],
+                        y_r[rnd:rnd + 1], active_dev, *val,
+                        *trust_args(active, 1 if fed_r else 0, e_done))
+                if tele is not None:
+                    tele_chunks.append(out[-1])
+                    out = out[:-1]
                 if trust is not None:
                     tstats, out = out[-1], out[:-1]
                 if admission is not None:
@@ -1347,8 +1485,12 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                     cb.on_round(fed, epoch, rnd)
             if n_sub == 0:      # no trainable sub-round: eval-only dispatch
                 epoch_fn = make_epoch_fn(do_federate, True)
-                out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev, *val,
-                               *trust_args(active, 0))
+                with TEL.span(rec, "dispatch", epoch=epoch,
+                              path="eval-only"):
+                    out = epoch_fn(*state, xs_r, xd_r, y_r, active_dev,
+                                   *val, *trust_args(active, 0))
+                if tele is not None:
+                    out = out[:-1]
                 if trust is not None:
                     out = out[:-1]
                 if admission is not None:
@@ -1358,16 +1500,31 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
                 chunks.append(ch)
                 n_dispatch += 1
             chosen = jnp.concatenate(chunks) if chunks else None
+            tele_out = tuple(
+                np.concatenate([np.asarray(t[k]) for t in tele_chunks])
+                for k in range(4)) if tele is not None and tele_chunks \
+                else None
         (params, opt_state, pool_heads, pool_age, key, best_val,
          best_params) = state
-        if do_federate:
-            # ONE device->host materialization of the epoch's selections
-            for ch in np.asarray(chosen):
-                for i in range(C):
-                    if active[i] and ch[i][0] >= 0:
-                        fed.selections[names[i]].append(lut[i, ch[i]].tolist())
+        with TEL.span(rec, "exchange", epoch=epoch):
+            if do_federate:
+                # ONE device->host materialization of the epoch's selections
+                for ch in np.asarray(chosen):
+                    for i in range(C):
+                        if active[i] and ch[i][0] >= 0:
+                            fed.selections[names[i]].append(
+                                lut[i, ch[i]].tolist())
+            if tele is not None and tele_out is not None:
+                rec.record_epoch_rounds(epoch, tele_out, active)
         if fused and active.any():   # chunked path counted per round above
             n_rounds += active * n_exch_epoch
+        if rec is not None and active.any():
+            rec.count("client_rounds", int(active.sum()) * n_exch_epoch)
+        # refresh the live counters each epoch (idempotent with sync(), a
+        # handful of host ints) so epoch-boundary readers — VerboseLogger's
+        # throughput line — see current round counts without a device sync
+        for i, nm in enumerate(names):
+            fed.n_rounds[nm] = base_rounds[nm] + int(n_rounds[i])
         if do_federate:
             exchange_rounds += n_exch_epoch
             pool_bytes += n_exch_epoch * exch_bytes
@@ -1390,6 +1547,17 @@ def _fit_batched(fed: "Federation", n_epochs: int, cbs) -> None:
             if dp_pubs[i]:
                 fed._dp_counts[nm] = (fed._dp_counts.get(nm, 0)
                                       + int(dp_pubs[i]))
+    if rec is not None:
+        # fold this fit's in-graph counters into the flight recorder so an
+        # exported trace carries them even when dispatch_stats is later
+        # overwritten (the participation orchestrator re-aggregates waves)
+        if heads_rejected:
+            rec.count("heads_rejected", int(heads_rejected))
+        if trust is not None:
+            if clip_total:
+                rec.count("clip_events", int(clip_total))
+            if wm_fail.sum():
+                rec.count("watermark_failures", int(wm_fail.sum()))
     fed.dispatch_stats = {"engine": "batched",
                           "path": "fused" if fused else "chunked",
                           "devices": MF.mesh_devices(mesh),
@@ -1452,7 +1620,7 @@ class Federation:
                  schedule: Optional[RoundSchedule] = None,
                  callbacks: Sequence[Callback] = (),
                  engine: str = "sequential",
-                 mesh=None, faults=None, trust=None):
+                 mesh=None, faults=None, trust=None, telemetry=None):
         if engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {engine!r}")
         self.clients = list(clients)
@@ -1490,6 +1658,20 @@ class Federation:
                             f"got {type(trust).__name__}")
         self.trust = trust
         self._trust = trust if trust is not None and trust.enabled else None
+        # telemetry layer (core/telemetry.py): an *enabled* TelemetryPlan
+        # arms the in-graph per-round metrics carry and the host-side
+        # flight recorder; a disabled plan or None keeps every engine
+        # bit-identical to an uninstrumented build (same contract as
+        # faults=None / trust=None)
+        if telemetry is not None \
+                and not isinstance(telemetry, TEL.TelemetryPlan):
+            raise TypeError(f"telemetry: expected a TelemetryPlan, "
+                            f"got {type(telemetry).__name__}")
+        self.telemetry = telemetry
+        self._telemetry = telemetry if telemetry is not None \
+            and telemetry.enabled else None
+        self._recorder = (TEL.FlightRecorder(self._telemetry)
+                          if self._telemetry is not None else None)
         # wave/identity context the participation orchestrator overrides so
         # trust derivations (masks, oracle DP noise) key on GLOBAL client
         # ids and the wave counter, not per-wave positions
@@ -1575,6 +1757,15 @@ class Federation:
             return float(self.faults.norm_bound)
         return None
 
+    def _tele_rounds(self):
+        """The TelemetryPlan the epoch factories receive as their static
+        telemetry argument — the enabled plan iff its in-graph per-round
+        series is on, else None (the factories then trace exactly the
+        uninstrumented computation)."""
+        if self._telemetry is not None and self._telemetry.rounds:
+            return self._telemetry
+        return None
+
     def _fault_stats(self, heads_rejected: int) -> dict:
         """The fault counters every engine folds into ``dispatch_stats``.
         Dropout / wave degradation happen a layer up (the participation
@@ -1639,10 +1830,12 @@ class Federation:
                     f"multiples of R); truncate to a multiple of R or pick "
                     f"a divisor R to silence this", UserWarning,
                     stacklevel=2)
-            if self.engine == "batched":
-                _fit_batched(self, n, cbs)
-            else:
-                _fit_sequential(self, n, cbs)
+            with TEL.span(self._recorder, "fit", epochs=n,
+                          engine=self.engine):
+                if self.engine == "batched":
+                    _fit_batched(self, n, cbs)
+                else:
+                    _fit_sequential(self, n, cbs)
         results = self.results()
         for cb in cbs:
             cb.on_fit_end(self, results)
@@ -1755,6 +1948,12 @@ class Federation:
                             "clip_events": self._clip_events,
                             "wave_base": self._trust_wave_base,
                             "ids": list(self._trust_ids)},
+            "telemetry": (self.telemetry.spec()
+                          if self.telemetry is not None else None),
+            # the flight recorder's ring buffer + counters + clock offset:
+            # a restored run's spans continue the trace monotonically
+            "telemetry_state": (self._recorder.to_json()
+                                if self._recorder is not None else None),
         }
         # atomic manifest write = the commit; only then prune state files
         # superseded by it (the previous pair stays intact until here)
@@ -1807,6 +2006,7 @@ class Federation:
         cfg = HFLConfig(**manifest["cfg"])
         fspec = manifest.get("faults")
         tspec = manifest.get("trust")
+        espec = manifest.get("telemetry")
         fed = cls(clients, cfg,
                   policies=FederationPolicies.from_spec(manifest["policies"]),
                   schedule=RoundSchedule(**manifest["schedule"]),
@@ -1814,7 +2014,8 @@ class Federation:
                   engine=engine or manifest["engine"],
                   mesh=mesh,
                   faults=policy_from_spec(fspec) if fspec else None,
-                  trust=policy_from_spec(tspec) if tspec else None)
+                  trust=policy_from_spec(tspec) if tspec else None,
+                  telemetry=policy_from_spec(espec) if espec else None)
         state = ckpt.load(d / manifest.get("state_file", "state.msgpack"))
         if state.get("epoch") != manifest["epoch"]:
             raise ValueError(
@@ -1856,6 +2057,9 @@ class Federation:
             fed._trust_wave_base = int(ts.get("wave_base", 0))
             fed._trust_ids = tuple(int(i) for i in ts.get(
                 "ids", range(len(clients))))
+        rs = manifest.get("telemetry_state")
+        if rs is not None and fed._telemetry is not None:
+            fed._recorder = TEL.FlightRecorder.from_json(fed._telemetry, rs)
         return fed
 
 

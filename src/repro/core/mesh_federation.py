@@ -192,7 +192,7 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
                         policies: FederationPolicies, use_kernel: bool,
                         do_federate: bool, do_eval: bool, mesh: Mesh,
                         n_clients: int, exchange_every: int = 1,
-                        admission=None, trust=None):
+                        admission=None, trust=None, telemetry=None):
     """Compile-cached client-sharded whole-epoch function — the mesh twin of
     ``federation._make_epoch_fn``: the SAME shared epoch computation
     (``federation._epoch_body``), same signature, same donation contract,
@@ -238,7 +238,8 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
                         exchange_every=exchange_every, gather=gather,
                         local_rows=local_rows,
                         shard=(axis, mesh_devices(mesh)),
-                        admission=admission, trust=trust)
+                        admission=admission, trust=trust,
+                        telemetry=telemetry)
     out_specs = (pspecs, cl, rep, rep, rep, cl, pspecs,
                  cl if do_eval else None, rep)
     if admission is not None:
@@ -252,6 +253,13 @@ def _make_mesh_epoch_fn(lr: float, nf: int, w: int,
         # pair / dummy) and its per-round stats are replicated: the whole
         # publication tail runs inside the replicated policy round
         in_specs = in_specs + (rep,)
+        out_specs = out_specs + (rep,)
+    if telemetry is not None:
+        # the in-graph per-round metrics series (selection histogram,
+        # Eq.-7 score aggregates, staleness ages) is derived from the
+        # replicated pool carry / psum-reduced sharded scores, so it comes
+        # back replicated; a single ``rep`` covers the whole tuple (specs
+        # are pytree prefixes, as for the trust stats pair above)
         out_specs = out_specs + (rep,)
     sharded = shard_map(
         epoch, mesh=mesh,

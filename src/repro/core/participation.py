@@ -61,6 +61,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import faults as FT
 from repro.core import mesh_federation as MF
+from repro.core import telemetry as TEL
 from repro.core import trust as TR
 from repro.core.federation import (Federation, RoundSchedule, _tree_bytes)
 from repro.core.hfl import FederatedClient, HFLConfig
@@ -385,7 +386,8 @@ class ParticipatingFederation:
                  mesh=None,
                  sample_multiple: Optional[int] = None,
                  faults: Optional[FT.FaultPlan] = None,
-                 trust: Optional[TR.TrustPlan] = None):
+                 trust: Optional[TR.TrustPlan] = None,
+                 telemetry: Optional[TEL.TelemetryPlan] = None):
         self.population = population
         self.cfg = cfg or HFLConfig()
         self.policies = policies if policies is not None \
@@ -421,6 +423,20 @@ class ParticipatingFederation:
                            and trust.watermark is not None else None)
         self.clip_events = 0
         self.wm_failures: Dict[str, int] = {}
+        # telemetry: ONE flight recorder spans all waves — each wave's inner
+        # Federation is handed this recorder (its spans and in-graph round
+        # series land in the shared ring buffer), so the exported trace
+        # shows the whole sampled run: sample → gather → exchange(fit(
+        # dispatch…)) → scatter per wave
+        if telemetry is not None \
+                and not isinstance(telemetry, TEL.TelemetryPlan):
+            raise TypeError(f"telemetry: expected a TelemetryPlan, "
+                            f"got {type(telemetry).__name__}")
+        self.telemetry = telemetry
+        self._telemetry = telemetry if telemetry is not None \
+            and telemetry.enabled else None
+        self._recorder = (TEL.FlightRecorder(self._telemetry)
+                          if self._telemetry is not None else None)
         # the granularity sampled counts are rounded to — defaults to the
         # mesh device count; pass it explicitly to reproduce a D-device
         # run's exact participation schedule on another engine/mesh (the
@@ -475,75 +491,102 @@ class ParticipatingFederation:
         cohorts_max = 1
         path = None
         quarantined_drops = 0
+        rec = self._recorder
         while self.wave < target:
-            idx = self.participation.sample(self.population, self._part_rng,
-                                            multiple_of=mult)
-            active = [int(i) for i in idx]
-            if self.reputation is not None:
-                # reputation quarantine: strip quarantined clients from the
-                # wave BEFORE fault injection / building (geometry
-                # re-rounded like dropout; the sampler's RNG sequence is
-                # untouched, so the participation schedule stays replayable)
-                quar = [i for i in active if self.reputation.is_quarantined(
-                    self.population.name_of(i))]
-                if quar:
-                    active, _ = FT.reround_wave(active, quar, mult)
-                    quarantined_drops += len(quar)
-            wf = None
-            if self._injector is not None:
-                # dropout-tolerant wave: drop drawn clients and re-round
-                # the geometry BEFORE anything is built or gathered — the
-                # fused engines never see a ragged stack.  The draw is a
-                # pure function of (plan.seed, wave, index), so a restored
-                # run replays the identical degraded schedule.
-                wf = self._injector.wave_faults(self.wave, active, mult)
-                dropped = set(wf.dropped)
-                active = [i for i in active if i not in dropped]
-                self.fault_log.append(wf)
-                clients_dropped += len(wf.dropped)
-                stragglers_n += len(wf.stragglers)
-                waves_degraded += int(wf.degraded)
-            clients = self.population.build(active)
-            names = [self.population.name_of(i) for i in active]
-            got = [c.name for c in clients]
-            if got != names:
-                raise ValueError(
-                    f"population.build returned names {got} for indices "
-                    f"{active}, expected {names} (name_of and build "
-                    f"must agree — the store is keyed by name)")
-            # gather: stored state onto the freshly built clients.  A
-            # checksum-corrupt entry is discarded and the client rebuilt
-            # from its deterministic fresh init (the self-healing path).
-            for c in clients:
-                if c.name in self.store:
-                    try:
-                        st = self.store.get(c.name)
-                    except StoreCorruption:
-                        self.store.discard(c.name)
-                        store_rebuilds += 1
-                        continue
-                    c.params = st["params"]
-                    c.opt_state = st["opt_state"]
-                    c.best_params = st["best_params"]
-                    c.best_val = st["best_val"]
-                    c.val_history = list(st["val_history"])
-            if wf is not None and wf.byzantine:
-                # byzantine clients' heads are corrupted host-side before
-                # the wave trains; the inner Federation's admission guard
-                # quarantines the poisoned publication at pool-seed time
-                # and rejects any poisoned republication in-graph
-                byz = set(wf.byzantine)
-                for c, i in zip(clients, active):
-                    if i in byz:
-                        c.params = dict(c.params)
-                        c.params["heads"] = self._injector.corrupt_heads(
-                            c.params["heads"], self.wave, i)
+            with TEL.span(rec, "sample", wave=self.wave):
+                idx = self.participation.sample(self.population,
+                                                self._part_rng,
+                                                multiple_of=mult)
+                active = [int(i) for i in idx]
+                if self.reputation is not None:
+                    # reputation quarantine: strip quarantined clients from
+                    # the wave BEFORE fault injection / building (geometry
+                    # re-rounded like dropout; the sampler's RNG sequence
+                    # is untouched, so the participation schedule stays
+                    # replayable)
+                    quar = [i for i in active
+                            if self.reputation.is_quarantined(
+                                self.population.name_of(i))]
+                    if quar:
+                        active, _ = FT.reround_wave(active, quar, mult)
+                        quarantined_drops += len(quar)
+                        if rec is not None:
+                            rec.count("quarantined_drops", len(quar))
+                wf = None
+                if self._injector is not None:
+                    # dropout-tolerant wave: drop drawn clients and
+                    # re-round the geometry BEFORE anything is built or
+                    # gathered — the fused engines never see a ragged
+                    # stack.  The draw is a pure function of (plan.seed,
+                    # wave, index), so a restored run replays the
+                    # identical degraded schedule.
+                    wf = self._injector.wave_faults(self.wave, active, mult)
+                    dropped = set(wf.dropped)
+                    active = [i for i in active if i not in dropped]
+                    self.fault_log.append(wf)
+                    clients_dropped += len(wf.dropped)
+                    stragglers_n += len(wf.stragglers)
+                    waves_degraded += int(wf.degraded)
+                    if rec is not None:
+                        if wf.dropped:
+                            rec.count("clients_dropped", len(wf.dropped))
+                        if wf.stragglers:
+                            rec.count("stragglers", len(wf.stragglers))
+                        if wf.degraded:
+                            rec.count("waves_degraded", 1)
+            with TEL.span(rec, "gather", wave=self.wave,
+                          clients=len(active)):
+                clients = self.population.build(active)
+                names = [self.population.name_of(i) for i in active]
+                got = [c.name for c in clients]
+                if got != names:
+                    raise ValueError(
+                        f"population.build returned names {got} for "
+                        f"indices {active}, expected {names} (name_of and "
+                        f"build must agree — the store is keyed by name)")
+                # gather: stored state onto the freshly built clients.  A
+                # checksum-corrupt entry is discarded and the client
+                # rebuilt from its deterministic fresh init (the
+                # self-healing path).
+                for c in clients:
+                    if c.name in self.store:
+                        try:
+                            st = self.store.get(c.name)
+                        except StoreCorruption:
+                            self.store.discard(c.name)
+                            store_rebuilds += 1
+                            if rec is not None:
+                                rec.count("store_rebuilds", 1)
+                            continue
+                        c.params = st["params"]
+                        c.opt_state = st["opt_state"]
+                        c.best_params = st["best_params"]
+                        c.best_val = st["best_val"]
+                        c.val_history = list(st["val_history"])
+                if wf is not None and wf.byzantine:
+                    # byzantine clients' heads are corrupted host-side
+                    # before the wave trains; the inner Federation's
+                    # admission guard quarantines the poisoned publication
+                    # at pool-seed time and rejects any poisoned
+                    # republication in-graph
+                    byz = set(wf.byzantine)
+                    for c, i in zip(clients, active):
+                        if i in byz:
+                            c.params = dict(c.params)
+                            c.params["heads"] = \
+                                self._injector.corrupt_heads(
+                                    c.params["heads"], self.wave, i)
             fed = Federation(
                 clients, self.cfg, policies=self.policies,
                 schedule=RoundSchedule(1, self.schedule.R,
                                        self.schedule.exchange_every),
                 engine=self.engine, mesh=self.mesh, faults=self.faults,
-                trust=self.trust)
+                trust=self.trust, telemetry=self.telemetry)
+            if self._recorder is not None:
+                # ONE ring buffer for the whole sampled run: the inner
+                # Federation's spans, round series, and counters land in
+                # this orchestrator's recorder instead of a per-wave one
+                fed._recorder = self._recorder
             # trust derivations (pairwise masks, oracle DP noise) key on the
             # GLOBAL wave number and GLOBAL client ids: unique per wave,
             # identical across engines/meshes for the same sampled subset
@@ -571,25 +614,28 @@ class ParticipatingFederation:
                     if k in self.pool_entries:
                         fed.pool.entries[k] = self.pool_entries[k]
                         fed.pool.ages[k] = self.pool_ages[k]
-            hist = fed.fit()
+            with TEL.span(rec, "exchange", wave=self.wave):
+                hist = fed.fit()
             self._key = fed._key
             # scatter: updated state back to the store, pool back to the
             # resident pool
-            for c in fed.clients:
-                self.store.put(c.name, params=c.params,
-                               opt_state=c.opt_state,
-                               best_params=c.best_params,
-                               best_val=c.best_val,
-                               val_history=c.val_history)
-                self.n_rounds[c.name] = (self.n_rounds.get(c.name, 0)
-                                         + fed.n_rounds[c.name])
-                self.selections.setdefault(c.name, []).extend(
-                    fed.selections[c.name])
-                self.last_test[c.name] = hist[c.name]["test"]
-                for f in range(c.nf):
-                    k = (c.name, f)
-                    self.pool_entries[k] = host_tree(fed.pool.entries[k])
-                    self.pool_ages[k] = int(fed.pool.ages[k])
+            with TEL.span(rec, "scatter", wave=self.wave):
+                for c in fed.clients:
+                    self.store.put(c.name, params=c.params,
+                                   opt_state=c.opt_state,
+                                   best_params=c.best_params,
+                                   best_val=c.best_val,
+                                   val_history=c.val_history)
+                    self.n_rounds[c.name] = (self.n_rounds.get(c.name, 0)
+                                             + fed.n_rounds[c.name])
+                    self.selections.setdefault(c.name, []).extend(
+                        fed.selections[c.name])
+                    self.last_test[c.name] = hist[c.name]["test"]
+                    for f in range(c.nf):
+                        k = (c.name, f)
+                        self.pool_entries[k] = host_tree(
+                            fed.pool.entries[k])
+                        self.pool_ages[k] = int(fed.pool.ages[k])
             newly_q: List[str] = []
             if self._trust is not None:
                 # fold the wave's trust counters into the cross-wave books
@@ -766,6 +812,13 @@ class ParticipatingFederation:
                 "clip_events": self.clip_events,
                 "wm_failures": self.wm_failures,
             },
+            # the flight recorder rides the manifest so a restored run
+            # CONTINUES its trace: same ring, monotonically later
+            # timestamps, counters picking up where they stopped
+            "telemetry": (self.telemetry.spec()
+                          if self.telemetry is not None else None),
+            "telemetry_state": (self._recorder.to_json()
+                                if self._recorder is not None else None),
         }
         tmp = d / "manifest.json.tmp"
         tmp.write_text(json.dumps(manifest))
@@ -804,6 +857,7 @@ class ParticipatingFederation:
         cfg = HFLConfig(**manifest["cfg"])
         fspec = manifest.get("faults")
         tspec = manifest.get("trust")
+        espec = manifest.get("telemetry")
         fed = cls(population, cfg,
                   policies=FederationPolicies.from_spec(
                       manifest["policies"]),
@@ -814,7 +868,8 @@ class ParticipatingFederation:
                   sample_multiple=sample_multiple
                   or manifest.get("sample_multiple"),
                   faults=policy_from_spec(fspec) if fspec else None,
-                  trust=policy_from_spec(tspec) if tspec else None)
+                  trust=policy_from_spec(tspec) if tspec else None,
+                  telemetry=policy_from_spec(espec) if espec else None)
         state = ckpt.load(d / manifest["state_file"])
         if state.get("wave") != manifest["wave"]:
             raise ValueError(
@@ -856,4 +911,8 @@ class ParticipatingFederation:
         fed.clip_events = int(ts.get("clip_events", 0))
         fed.wm_failures = {n: int(v)
                            for n, v in (ts.get("wm_failures") or {}).items()}
+        rs = manifest.get("telemetry_state")
+        if rs is not None and fed._telemetry is not None:
+            fed._recorder = TEL.FlightRecorder.from_json(
+                fed._telemetry, rs)
         return fed

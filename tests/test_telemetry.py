@@ -1,0 +1,483 @@
+"""Flight-recorder telemetry (repro.core.telemetry + tools/trace_export).
+
+Pins the ISSUE-10 acceptance surface: ``telemetry=None``, a fully
+disabled plan, and no argument at all trace the byte-identical graph on
+the batched, cohort, and (subprocess, forced-4-device) mesh engines —
+identical validation histories AND identical selections; an enabled plan
+surfaces the per-round in-graph series from a still-single-dispatch
+epoch, and those series exactly match the sequential oracle's selection
+log at exchange cadences k in {1, 2}; the flight recorder's ring buffer
+is bounded; the JSONL -> Chrome-trace/Perfetto export is pinned by
+golden files; and a checkpointed recorder restores bit-identically and
+keeps its monotonic clock counting upward."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry as TEL
+from repro.core.experiment import tensor_population
+from repro.core.federation import Federation, RoundSchedule
+from repro.core.hfl import HFLConfig
+from repro.core.policies import policy_from_spec
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from trace_export import (assert_spans_nest, chrome_trace,  # noqa: E402
+                          load_jsonl, validate_trace)
+
+
+def _cfg(**kw):
+    kw.setdefault("epochs", 3)
+    kw.setdefault("R", 10)
+    kw.setdefault("mode", "always")
+    kw.setdefault("seed", 0)
+    return HFLConfig(**kw)
+
+
+def _pop(cfg, n=6, nf_choices=(3,), seed=0):
+    return tensor_population(n, cfg, seed=seed, nf_choices=nf_choices,
+                             n_train=20, n_eval=10)
+
+
+def _fit(cfg, n=6, nf_choices=(3,), engine="batched", exchange_every=1,
+         **fed_kw):
+    clients = _pop(cfg, n, nf_choices).build(range(n))
+    fed = Federation(clients, cfg, engine=engine,
+                     schedule=RoundSchedule(cfg.epochs, cfg.R,
+                                            exchange_every=exchange_every),
+                     **fed_kw)
+    hist = fed.fit()
+    return fed, hist
+
+
+# ---------------------------------------------------------------------------
+# TelemetryPlan units
+# ---------------------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="ring_size"):
+        TEL.TelemetryPlan(ring_size=0)
+    with pytest.raises(ValueError, match="ring_size"):
+        TEL.TelemetryPlan(ring_size=-5)
+    assert TEL.TelemetryPlan().enabled
+    assert TEL.TelemetryPlan(rounds=False).enabled       # spans still on
+    assert not TEL.TelemetryPlan(rounds=False, spans=False).enabled
+
+
+def test_plan_spec_round_trip():
+    plan = TEL.TelemetryPlan(rounds=True, spans=False, ring_size=128,
+                             profile=True)
+    spec = plan.spec()
+    assert policy_from_spec(spec) == plan
+    assert policy_from_spec(json.loads(json.dumps(spec))) == plan
+
+
+def test_federation_rejects_non_plan():
+    cfg = _cfg(epochs=1)
+    clients = _pop(cfg, 2).build(range(2))
+    with pytest.raises(TypeError, match="TelemetryPlan"):
+        Federation(clients, cfg, telemetry={"rounds": True})
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+def test_metric_aliases_resolve_with_warning():
+    assert TEL.canonical_name("bytes_gathered") == "pool_bytes_gathered"
+    assert TEL.canonical_name("rejected_heads") == "heads_rejected"
+    assert TEL.canonical_name("heads_rejected") == "heads_rejected"
+    with pytest.warns(DeprecationWarning, match="bytes_gathered"):
+        out = TEL.resolve_aliases({"bytes_gathered": 7, "devices": 1})
+    assert out == {"pool_bytes_gathered": 7, "devices": 1}
+    # canonical keys win on collision with their own deprecated alias
+    with pytest.warns(DeprecationWarning):
+        out = TEL.resolve_aliases({"heads_rejected": 3,
+                                   "rejected_heads": 9})
+    assert out["heads_rejected"] == 3
+
+
+def test_metrics_schema_is_json_clean_and_self_describing():
+    sch = TEL.schema()
+    assert json.loads(json.dumps(sch)) == sch
+    for name, m in sch.items():
+        assert m["kind"] in TEL.KINDS, name
+        assert m["description"], name
+    # every deprecated alias points at a catalog entry and is listed back
+    for old, new in TEL.DEPRECATED_ALIASES.items():
+        assert new in sch
+        assert old in sch[new]["aliases"]
+
+
+def test_validate_stats_rejects_unknown_and_aliased_keys():
+    TEL.validate_stats({"heads_rejected": 2, "devices": 1})
+    with pytest.raises(ValueError, match="made_up_metric"):
+        TEL.validate_stats({"made_up_metric": 1})
+    with pytest.raises(ValueError, match="deprecated alias"):
+        TEL.validate_stats({"rejected_heads": 2})
+    with pytest.raises(ValueError, match="heads_rejected"):
+        TEL.validate_stats({"heads_rejected": 2.5})
+
+
+@pytest.mark.parametrize("engine", ("sequential", "batched"))
+def test_engine_dispatch_stats_use_canonical_names(engine):
+    """Every engine emits catalog names with registered types — the
+    satellite-1 unification pin."""
+    fed, _ = _fit(_cfg(epochs=2), engine=engine)
+    TEL.validate_stats(fed.dispatch_stats)
+
+
+def test_cohort_dispatch_stats_use_canonical_names():
+    fed, _ = _fit(_cfg(epochs=2), nf_choices=(3, 4))
+    assert fed.dispatch_stats["cohorts"] == 2
+    TEL.validate_stats(fed.dispatch_stats)
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity: telemetry off == telemetry absent, every engine
+# ---------------------------------------------------------------------------
+
+def _histories_equal(h0, h1):
+    return all(h0[n]["val"] == h1[n]["val"]
+               and h0[n]["selections"] == h1[n]["selections"]
+               for n in h0)
+
+
+@pytest.mark.parametrize("nf_choices", ((3,), (3, 4)),
+                         ids=("batched", "cohort"))
+def test_disabled_plan_bit_parity(nf_choices):
+    """No argument, telemetry=None, and a disabled plan produce identical
+    histories AND selections on the single-device batched and cohort
+    engines; so does the fully enabled plan (the carry is observation,
+    never interference)."""
+    cfg = _cfg()
+    runs = [
+        _fit(cfg, nf_choices=nf_choices)[1],
+        _fit(cfg, nf_choices=nf_choices, telemetry=None)[1],
+        _fit(cfg, nf_choices=nf_choices,
+             telemetry=TEL.TelemetryPlan(rounds=False, spans=False))[1],
+        _fit(cfg, nf_choices=nf_choices, telemetry=TEL.TelemetryPlan())[1],
+    ]
+    for other in runs[1:]:
+        assert _histories_equal(runs[0], other)
+
+
+def test_single_dispatch_with_carry():
+    """The metrics carry rides the fused epoch scan: one epoch is still
+    ONE dispatch with telemetry fully enabled."""
+    fed, _ = _fit(_cfg(), telemetry=TEL.TelemetryPlan())
+    assert fed.dispatch_stats["dispatches_per_epoch"] == 1.0
+    assert fed.dispatch_stats["path"] == "fused"
+
+
+# ---------------------------------------------------------------------------
+# Per-round series vs the sequential oracle's selection log
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", (1, 2))
+def test_round_series_match_sequential_oracle(k):
+    """mode="always": every active client federates on every exchange
+    round, so the in-graph series must show exactly nf foreign picks per
+    client per round event, the decoded round count must equal the
+    oracle's per-client selection-log length, and the batched selections
+    must equal the oracle's — at cadence k in {1, 2}."""
+    cfg = _cfg(epochs=2)
+    nf = 3
+    fed_b, hist_b = _fit(cfg, exchange_every=k,
+                         telemetry=TEL.TelemetryPlan())
+    fed_s, hist_s = _fit(cfg, engine="sequential", exchange_every=k)
+    for n in hist_b:
+        assert hist_b[n]["selections"] == hist_s[n]["selections"]
+    rounds = [e for e in fed_b._recorder.events if e["type"] == "round"]
+    names = sorted(hist_s)
+    n_sel = {n: len(hist_s[n]["selections"]) for n in names}
+    assert len(rounds) == n_sel[names[0]]      # equal lengths, mode=always
+    for ev in rounds:
+        assert ev["foreign_picks"] == nf * len(names)
+        assert ev["foreign_per_client"] == [nf] * len(names)
+        assert ev["self_keeps"] == 0
+        assert ev["score_min"] is not None
+        assert ev["score_mean"] is not None
+        assert ev["score_min"] <= ev["score_mean"]
+    total = sum(nf * c for c in n_sel.values())
+    assert fed_b._recorder.counters["foreign_picks"] == total
+
+
+def test_round_series_sentinels_when_not_federating():
+    """mode="no": no selection ever scores, so the series records zero
+    foreign picks and null score aggregates — the sentinel path."""
+    fed, _ = _fit(_cfg(mode="no", epochs=2),
+                  telemetry=TEL.TelemetryPlan())
+    rounds = [e for e in fed._recorder.events if e["type"] == "round"]
+    assert rounds
+    for ev in rounds:
+        assert ev["foreign_picks"] == 0
+        assert ev["score_min"] is None and ev["score_mean"] is None
+
+
+# ---------------------------------------------------------------------------
+# FlightRecorder mechanics
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_bounded_keeps_newest():
+    rec = TEL.FlightRecorder(TEL.TelemetryPlan(ring_size=8))
+    for i in range(100):
+        rec.mark(f"m{i}")
+    assert len(rec.events) == 8
+    assert [e["name"] for e in rec.events] == [f"m{i}"
+                                               for i in range(92, 100)]
+
+
+def test_span_nesting_depth_and_counters():
+    rec = TEL.FlightRecorder(TEL.TelemetryPlan())
+    with rec.span("fit", epochs=1):
+        with rec.span("dispatch", epoch=0):
+            rec.count("client_rounds", 4)
+        rec.count("client_rounds", 2)
+    spans = {e["name"]: e for e in rec.events if e["type"] == "span"}
+    assert spans["dispatch"]["depth"] == 1 and spans["fit"]["depth"] == 0
+    assert spans["fit"]["dur"] >= spans["dispatch"]["dur"]
+    assert rec.snapshot() == {"client_rounds": 6}
+
+
+def test_disabled_spans_record_nothing():
+    rec = TEL.FlightRecorder(TEL.TelemetryPlan(spans=False))
+    with rec.span("fit"):
+        rec.mark("m")
+    assert not rec.events
+    with TEL.span(None, "anything"):      # module-level no-op form
+        pass
+
+
+def test_recorder_json_round_trip_continues_clock():
+    rec = TEL.FlightRecorder(TEL.TelemetryPlan(ring_size=16))
+    with rec.span("fit"):
+        rec.count("client_rounds", 3)
+    data = json.loads(json.dumps(rec.to_json()))
+    rec2 = TEL.FlightRecorder.from_json(TEL.TelemetryPlan(ring_size=16),
+                                        data)
+    assert list(rec2.events) == list(rec.events)
+    assert rec2.snapshot() == rec.snapshot()
+    last = max(e["ts"] + e.get("dur", 0) for e in rec.events)
+    with rec2.span("later"):
+        pass
+    assert rec2.events[-1]["ts"] >= last  # monotonic past the restored end
+
+
+# ---------------------------------------------------------------------------
+# Export: JSONL + Chrome-trace/Perfetto golden files
+# ---------------------------------------------------------------------------
+
+def test_export_golden_files():
+    """The golden JSONL event log converts to exactly the golden trace —
+    the export format is pinned, not just structurally valid."""
+    events = load_jsonl(ROOT / "tests/golden/telemetry_events.jsonl")
+    trace = chrome_trace(events, metrics={"foreign_picks": 2,
+                                          "client_rounds": 4})
+    golden = json.loads(
+        (ROOT / "tests/golden/telemetry_trace.json").read_text())
+    assert trace == golden
+    validate_trace(trace)
+    assert_spans_nest(trace["traceEvents"])
+
+
+def test_live_run_exports_valid_trace(tmp_path):
+    fed, _ = _fit(_cfg(epochs=2), telemetry=TEL.TelemetryPlan())
+    rec = fed._recorder
+    jsonl = tmp_path / "run.jsonl"
+    rec.dump_jsonl(jsonl)
+    events = load_jsonl(jsonl)
+    assert events == list(rec.events)
+    trace = chrome_trace(events, metrics=rec.snapshot())
+    validate_trace(trace)
+    assert_spans_nest(trace["traceEvents"])
+    names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "X"}
+    assert {"fit", "dispatch", "exchange"} <= names
+    assert any(e["ph"] == "C" for e in trace["traceEvents"])
+
+
+def test_trace_export_cli(tmp_path):
+    src = ROOT / "tests/golden/telemetry_events.jsonl"
+    out = tmp_path / "trace.json"
+    r = subprocess.run([sys.executable, str(ROOT / "tools/trace_export.py"),
+                        "--in", str(src), "--out", str(out), "--validate"],
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr
+    validate_trace(json.loads(out.read_text()))
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_trace({})
+    with pytest.raises(ValueError, match="missing 'ph'"):
+        validate_trace({"traceEvents": [{"name": "x", "ts": 0, "pid": 1,
+                                         "tid": 1}]})
+    with pytest.raises(ValueError, match="negative ts"):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "i", "ts": -1,
+                                         "pid": 1, "tid": 1}]})
+    with pytest.raises(ValueError, match="dur"):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "X", "ts": 0,
+                                         "pid": 1, "tid": 1}]})
+
+
+def test_assert_spans_nest_rejects_partial_overlap():
+    ok = [{"name": "a", "ph": "X", "ts": 0, "dur": 100, "pid": 1, "tid": 1},
+          {"name": "b", "ph": "X", "ts": 10, "dur": 20, "pid": 1, "tid": 1},
+          {"name": "c", "ph": "X", "ts": 50, "dur": 50, "pid": 1, "tid": 1}]
+    assert_spans_nest(ok)
+    bad = ok + [{"name": "d", "ph": "X", "ts": 90, "dur": 30,
+                 "pid": 1, "tid": 1}]
+    with pytest.raises(ValueError, match="partially overlaps"):
+        assert_spans_nest(bad)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: the recorder rides the manifest and continues the trace
+# ---------------------------------------------------------------------------
+
+def test_federation_checkpoint_continues_trace():
+    cfg = _cfg(epochs=4)
+    plan = TEL.TelemetryPlan(ring_size=256)
+    clients = _pop(cfg).build(range(6))
+    fed = Federation(clients, cfg, schedule=RoundSchedule(4, cfg.R),
+                     telemetry=plan)
+    fed.fit(epochs=2)
+    mid_events = list(fed._recorder.events)
+    mid_counts = fed._recorder.snapshot()
+    with tempfile.TemporaryDirectory() as d:
+        fed.save(d)
+        fed2 = Federation.restore(d, _pop(cfg).build(range(6)))
+        assert fed2.telemetry == plan
+        assert list(fed2._recorder.events) == mid_events
+        assert fed2._recorder.snapshot() == mid_counts
+        ha = fed.fit(epochs=2)
+        hb = fed2.fit(epochs=2)
+    assert _histories_equal(ha, hb)
+    # the restored recorder CONTINUED: more events, larger counters, and
+    # every post-restore timestamp lands after the restored window
+    assert len(fed2._recorder.events) > len(mid_events)
+    assert fed2._recorder.snapshot()["client_rounds"] \
+        > mid_counts["client_rounds"]
+    last_mid = max(e["ts"] + e.get("dur", 0) for e in mid_events)
+    new = [e for e in fed2._recorder.events if e not in mid_events]
+    assert new and all(e["ts"] >= last_mid for e in new)
+    assert fed2._recorder.snapshot() == fed._recorder.snapshot()
+
+
+def test_checkpoint_without_telemetry_restores_none():
+    cfg = _cfg(epochs=1)
+    fed, _ = _fit(cfg)
+    with tempfile.TemporaryDirectory() as d:
+        fed.save(d)
+        fed2 = Federation.restore(d, _pop(cfg).build(range(6)))
+    assert fed2.telemetry is None and fed2._recorder is None
+
+
+# ---------------------------------------------------------------------------
+# VerboseLogger throughput line
+# ---------------------------------------------------------------------------
+
+def test_verbose_logger_reports_wall_and_throughput(capsys):
+    cfg = _cfg(epochs=2)
+    clients = _pop(cfg).build(range(6))
+    fed = Federation(clients, cfg, engine="batched",
+                     telemetry=TEL.TelemetryPlan())
+    fed.fit(verbose=True)
+    out = capsys.readouterr().out
+    assert "wall:" in out
+    assert "client-rounds/s:" in out
+    assert "staleness:" in out     # batched + rounds on: age aggregates
+
+
+def test_verbose_logger_wall_line_without_telemetry(capsys):
+    """Satellite 2: the wall/throughput line reports even with no plan —
+    only the staleness suffix needs the in-graph series."""
+    cfg = _cfg(epochs=1)
+    clients = _pop(cfg).build(range(6))
+    fed = Federation(clients, cfg, engine="batched")
+    fed.fit(verbose=True)
+    out = capsys.readouterr().out
+    assert "wall:" in out and "client-rounds/s:" in out
+    assert "staleness:" not in out
+
+
+# ---------------------------------------------------------------------------
+# Forced-4-device mesh: parity + live series (subprocess, like test_faults)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS = r"""
+import json
+import jax
+assert jax.device_count() == 4, jax.devices()
+from repro.core.experiment import tensor_population
+from repro.core.federation import Federation, RoundSchedule
+from repro.core.hfl import HFLConfig
+from repro.core.mesh_federation import make_mesh
+from repro.core.telemetry import TelemetryPlan
+
+cfg = HFLConfig(epochs=2, R=10, mode="always", seed=3)
+mkpop = lambda: tensor_population(8, cfg, seed=1, nf_choices=(3,),
+                                  n_train=20, n_eval=10)
+res = {}
+
+def full(telemetry):
+    fed = Federation(mkpop().build(range(8)), cfg,
+                     schedule=RoundSchedule(2, 10), engine="batched",
+                     mesh=make_mesh(), telemetry=telemetry)
+    return fed, fed.fit()
+
+f0, h0 = full(None)
+f1, h1 = full(TelemetryPlan(rounds=False, spans=False))
+f2, h2 = full(TelemetryPlan())
+res["parity"] = all(
+    h0[n]["val"] == h1[n]["val"] == h2[n]["val"]
+    and h0[n]["selections"] == h1[n]["selections"] == h2[n]["selections"]
+    for n in h0)
+res["devices"] = f2.dispatch_stats["devices"]
+res["dispatches_per_epoch"] = f2.dispatch_stats["dispatches_per_epoch"]
+rounds = [e for e in f2._recorder.events if e["type"] == "round"]
+res["n_rounds"] = len(rounds)
+res["foreign_ok"] = all(e["foreign_picks"] == 3 * 8 for e in rounds)
+res["scores_ok"] = all(e["score_min"] is not None
+                       and e["score_min"] <= e["score_mean"]
+                       for e in rounds)
+res["counter"] = f2._recorder.counters.get("foreign_picks", 0)
+print("RESULT " + json.dumps(res))
+"""
+
+
+def _run_forced_devices(script: str, n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_telemetry_on_forced_4_device_mesh():
+    """ISSUE 10 acceptance: on a forced 4-device mesh, telemetry=None ==
+    disabled plan == enabled plan (val + selections); the enabled plan
+    still runs ONE dispatch per epoch and surfaces per-round series whose
+    replicated aggregates match the single-device semantics."""
+    res = _run_forced_devices(_SUBPROCESS, 4)
+    assert res["parity"]
+    assert res["devices"] == 4
+    assert res["dispatches_per_epoch"] == 1.0
+    assert res["n_rounds"] == 2 * 2      # 2 epochs x 2 exchange rounds
+    assert res["foreign_ok"] and res["scores_ok"]
+    assert res["counter"] == 4 * 3 * 8

@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Export a flight-recorder event log to Chrome-trace / Perfetto JSON.
+
+The flight recorder (``repro.core.telemetry.FlightRecorder``) serializes
+its ring buffer to JSONL — one JSON event per line.  This tool converts
+that event list to the Chrome Trace Event format (the ``traceEvents``
+JSON that chrome://tracing and https://ui.perfetto.dev both open):
+
+* ``span`` events become complete-duration events (``"ph": "X"``) with
+  their ``ts``/``dur`` microsecond timestamps and any extra attributes
+  under ``args``;
+* ``round`` events become counter events (``"ph": "C"``) tracking the
+  foreign-pick count, Eq.-7 score aggregates, and pool staleness per
+  exchange round;
+* ``mark`` events become instant events (``"ph": "i"``).
+
+The exported JSON also carries the recorder's counter registry snapshot
+under a top-level ``"metrics"`` key (trace viewers ignore unknown keys).
+
+Stdlib-only on purpose: runnable anywhere, importable by tests / CI
+assertions without a JAX install.
+
+Usage:
+    python tools/trace_export.py --in run.jsonl --out run.trace.json
+    python tools/trace_export.py --in run.jsonl --validate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterable, List, Optional
+
+PID = 1
+TID_SPANS = 1
+TID_ROUNDS = 2
+
+
+def load_jsonl(path) -> List[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def _args_of(ev: dict, skip=("type", "name", "ts", "dur", "depth")) -> dict:
+    return {k: v for k, v in ev.items() if k not in skip}
+
+
+def chrome_trace(events: Iterable[dict],
+                 metrics: Optional[Dict] = None) -> dict:
+    """Convert flight-recorder events to a Chrome-trace JSON object."""
+    out: List[dict] = []
+    for ev in events:
+        kind = ev.get("type")
+        if kind == "span":
+            out.append({"name": ev["name"], "ph": "X", "cat": "host",
+                        "ts": ev["ts"], "dur": ev.get("dur", 0),
+                        "pid": PID, "tid": TID_SPANS,
+                        "args": _args_of(ev)})
+        elif kind == "round":
+            args = {k: ev[k] for k in ("foreign_picks", "self_keeps",
+                                       "score_min", "score_mean",
+                                       "age_mean", "age_max")
+                    if ev.get(k) is not None}
+            out.append({"name": "round", "ph": "C", "cat": "rounds",
+                        "ts": ev.get("ts", 0), "pid": PID,
+                        "tid": TID_ROUNDS, "args": args})
+        elif kind == "mark":
+            out.append({"name": ev["name"], "ph": "i", "cat": "host",
+                        "ts": ev.get("ts", 0), "s": "g",
+                        "pid": PID, "tid": TID_SPANS,
+                        "args": _args_of(ev)})
+    trace = {"traceEvents": out, "displayTimeUnit": "ms"}
+    if metrics is not None:
+        trace["metrics"] = dict(metrics)
+    return trace
+
+
+def validate_trace(trace: dict) -> None:
+    """Raise ValueError unless ``trace`` is structurally valid Chrome-trace
+    JSON: a traceEvents list whose entries carry the mandatory fields with
+    sane types and non-negative timestamps."""
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        raise ValueError("trace: missing traceEvents")
+    evs = trace["traceEvents"]
+    if not isinstance(evs, list):
+        raise ValueError("trace: traceEvents must be a list")
+    for i, ev in enumerate(evs):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            raise ValueError(f"{where}: not an object")
+        for key, types in (("name", (str,)), ("ph", (str,)),
+                           ("ts", (int, float)), ("pid", (int,)),
+                           ("tid", (int,))):
+            if key not in ev:
+                raise ValueError(f"{where}: missing {key!r}")
+            if not isinstance(ev[key], types):
+                raise ValueError(f"{where}[{key!r}]: expected {types}, "
+                                 f"got {type(ev[key]).__name__}")
+        if ev["ts"] < 0:
+            raise ValueError(f"{where}: negative ts {ev['ts']}")
+        if ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)) \
+                    or ev["dur"] < 0:
+                raise ValueError(f"{where}: X event needs dur >= 0")
+
+
+def assert_spans_nest(trace_events: Iterable[dict]) -> None:
+    """Raise ValueError if any two duration spans on the same (pid, tid)
+    partially overlap — intervals must either be disjoint or properly
+    contained, the flight recorder's single-threaded nesting invariant."""
+    by_track: Dict[tuple, List[dict]] = {}
+    for ev in trace_events:
+        if ev.get("ph") == "X":
+            by_track.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+    for track, spans in by_track.items():
+        spans.sort(key=lambda e: (e["ts"], -e.get("dur", 0)))
+        stack: List[dict] = []
+        for ev in spans:
+            end = ev["ts"] + ev.get("dur", 0)
+            while stack and ev["ts"] >= stack[-1]["ts"] \
+                    + stack[-1].get("dur", 0):
+                stack.pop()
+            if stack and end > stack[-1]["ts"] + stack[-1].get("dur", 0):
+                raise ValueError(
+                    f"track {track}: span {ev['name']!r} "
+                    f"[{ev['ts']}, {end}) partially overlaps "
+                    f"{stack[-1]['name']!r}")
+            stack.append(ev)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--in", dest="inp", required=True,
+                    help="flight-recorder JSONL event log")
+    ap.add_argument("--out", default=None,
+                    help="write Chrome-trace/Perfetto JSON here")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate the converted trace (and span nesting)")
+    args = ap.parse_args(argv)
+
+    events = load_jsonl(args.inp)
+    trace = chrome_trace(events)
+    if args.validate or args.out:
+        validate_trace(trace)
+        assert_spans_nest(trace["traceEvents"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(trace, f)
+        print(f"wrote {len(trace['traceEvents'])} trace events -> "
+              f"{args.out}")
+    else:
+        print(f"{len(events)} events, {len(trace['traceEvents'])} trace "
+              f"events; valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
